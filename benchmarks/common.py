@@ -1,0 +1,16 @@
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6, out   # us per call
+
+
+def row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")

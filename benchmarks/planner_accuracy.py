@@ -1,0 +1,48 @@
+"""Sec. IV cost-model claim: switching from the naive linear model to
+the partition-aware model improved throughput 23% and estimate error to
+<1%. Reproduced with unstructured (clumped) masks — our block-balanced
+format removes the effect structurally (also shown)."""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import planner, sparsity as S
+from repro.core.costmodel import op_cost_unstructured
+from repro.models import cnn
+from benchmarks.common import row
+
+
+def main():
+    t0 = time.time()
+    ops = []
+    for s in cnn.specs_for("resnet50"):
+        if s.kind in ("conv", "fc"):
+            m = S.unstructured_mask(abs(hash(s.name)) % 2**31,
+                                    (s.k * s.k * s.cin, s.cout), 0.85,
+                                    clump=0.6)
+            ops.append(op_cost_unstructured(s.name, m, s.out_hw, s.out_hw))
+    aware = planner.balance(ops, 5000, model="aware")
+    naive = planner.balance(ops, 5000, model="naive")
+    true_naive = max(planner.evaluate(ops, naive.splits, "aware").values())
+    gain = true_naive / aware.bottleneck_cycles - 1
+    est = planner.evaluate(ops, aware.splits, "naive")
+    errs = [abs(est[n] - aware.cycles[n]) / aware.cycles[n] for n in est]
+    dt = (time.time() - t0) * 1e6
+    row("planner_aware_gain_pct", dt, f"{100*gain:.1f}_(paper_23)")
+    row("planner_naive_est_err_pct", dt,
+        f"mean={100*np.mean(errs):.1f},max={100*np.max(errs):.1f}")
+    # block-balanced format: the two models coincide (structural fix)
+    cfg = get_config("resnet50")
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+    bops = planner.cnn_op_costs(cfg, params)
+    a = planner.balance(bops, 5000, model="aware").bottleneck_cycles
+    n = max(planner.evaluate(
+        bops, planner.balance(bops, 5000, model="naive").splits,
+        "aware").values())
+    row("planner_gap_block_balanced_pct", dt, f"{100*(n/a-1):.2f}_(ours~0)")
+
+
+if __name__ == "__main__":
+    main()

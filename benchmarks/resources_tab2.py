@@ -1,0 +1,31 @@
+"""Table II analogue: per-model resource utilization. The FPGA columns
+(ALMs/M20Ks/DSPs/MHz) map to per-device HBM residency, roofline terms
+and the dominant bound from the multi-pod dry-run (reads
+dryrun_results.json when present)."""
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_results.json")
+
+
+def main():
+    if not os.path.exists(RESULTS):
+        row("tab2_skipped", 0.0, "run_repro.launch.dryrun_--all_first")
+        return
+    with open(RESULTS) as f:
+        cells = json.load(f)
+    for r in cells:
+        if r.get("status") != "ok" or r.get("mesh") != "16x16":
+            continue
+        rf = r["roofline"]
+        hbm = r.get("hbm_est_per_device") or 0
+        row(f"tab2_{r['arch']}_{r['shape']}", r.get("compile_s", 0) * 1e6,
+            f"hbm={hbm/1e9:.1f}GB,dom={rf['dominant']},"
+            f"mfu_bound={rf['mfu_bound']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (balance_fig3, planner_accuracy, resources_tab2,
+                            sparse_speedup, throughput_tab4)
+    print("name,us_per_call,derived")
+    for mod in (balance_fig3, planner_accuracy, sparse_speedup,
+                throughput_tab4, resources_tab2):
+        try:
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            print(f"{mod.__name__},0,ERROR")
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

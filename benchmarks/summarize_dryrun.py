@@ -1,0 +1,51 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md roofline table."""
+import json
+import sys
+
+
+def fmt(results, mesh_filter="16x16"):
+    rows = []
+    for r in results:
+        if r.get("status") == "skipped":
+            if mesh_filter == "16x16":
+                rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — "
+                            f"| — | skipped (sub-quadratic rule) |")
+            continue
+        if r.get("mesh") != mesh_filter:
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | "
+                        f"{r.get('error', '')[:60]} |")
+            continue
+        rf = r["roofline"]
+        hbm = r.get("hbm_est_per_device") or 0
+        rows.append(
+            "| {a} | {s} | {tc:.2e} | {tm:.2e} | {tl:.2e} | **{dom}** | "
+            "{mfu:.3f} | {hbm:.1f} GB {ok} |".format(
+                a=r["arch"], s=r["shape"], tc=rf["t_compute_s"],
+                tm=rf["t_memory_s"], tl=rf["t_collective_s"],
+                dom=rf["dominant"][:4], mfu=rf["mfu_bound"], hbm=hbm / 1e9,
+                ok="ok" if r["hbm_ok"] else "OVER"))
+    return rows
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+           "MFU-bound | HBM/dev |\n|---|---|---|---|---|---|---|---|")
+    print("### single-pod 16x16 (256 chips)\n")
+    print(hdr)
+    print("\n".join(fmt(results, "16x16")))
+    print("\n### multi-pod 2x16x16 (512 chips, pod=DP)\n")
+    print(hdr)
+    print("\n".join(fmt(results, "2x16x16")))
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    sk = sum(1 for r in results if r.get("status") == "skipped")
+    er = sum(1 for r in results if r.get("status") == "error")
+    print(f"\ncells: {ok} ok, {sk} skipped-by-rule, {er} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Table IV / Fig. 8: batch-1 inference throughput, ResNet-50 (85%
+sparse) and MobileNet V1/V2 (dense).
+
+Physical-FPGA numbers can't be measured here; we report (a) the HPIPE
+cycle model's throughput at the paper's design points and the paper's
+measured figures for reference, (b) CPU-measured small-scale throughput
+of our actual JAX implementation (correctness-bearing, not perf)."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import planner
+from repro.models import cnn
+from benchmarks.common import row, timeit
+
+PAPER = {  # im/s at B=1, from Table IV / Sec. VI
+    "resnet50": ("4550", 580e6),
+    "mobilenet_v1": ("5157", 430e6),
+    "mobilenet_v2": ("4539", 390e6),
+}
+
+
+def main():
+    from repro.core.sparsity import density
+    from repro.models.layers import SparseWeight
+    for name, (paper_ims, freq) in PAPER.items():
+        cfg = get_config(name)
+        params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+        plan = planner.plan_cnn(cfg, params, 5000)
+        # dimensional model: layer cycles = surviving MACs / multipliers
+        # (splits x W mults per layer); pipeline = bottleneck layer
+        specs = {s.name: s for s in cnn.specs_for(name)}
+        bottleneck = 0.0
+        for s in cnn.specs_for(name):
+            if s.name not in plan.splits or s.macs() == 0:
+                continue
+            w = params.get(s.name, {}).get("w")
+            dens = density(w) if isinstance(w, SparseWeight) else 1.0
+            mults = plan.splits[s.name] * max(s.out_hw, 1)
+            bottleneck = max(bottleneck, s.macs() * dens / mults)
+        ims = freq / bottleneck
+        row(f"tab4_{name}_modeled_ims", 0.0,
+            f"{ims:.0f}_(paper_{paper_ims})")
+        img = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 64, 3))
+        fwd = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))
+        us, _ = timeit(fwd, params, img, warmup=1, iters=3)
+        row(f"tab4_{name}_cpu64px_b1", us, f"{1e6/us:.1f}_ims_cpu_smoke")
+
+
+if __name__ == "__main__":
+    main()

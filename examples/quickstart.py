@@ -1,0 +1,26 @@
+"""Quickstart: train a reduced LM for 30 steps, then serve it.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch smollm-360m]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import train
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    args = ap.parse_args()
+    print(f"== training {args.arch} (reduced) ==")
+    out = train(args.arch, steps=30, batch=8, seq=64, lr=3e-3)
+    print(f"loss: {out['losses'][0][1]:.3f} -> {out['losses'][-1][1]:.3f}")
+    print(f"== serving {args.arch} (reduced) ==")
+    gen = serve(args.arch, batch=2, prompt_len=8, gen_tokens=8, max_seq=32)
+    print("generated token ids:\n", gen["tokens"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""HPIPE layer pipeline on a TPU mesh axis.
+
+The FPGA streams activations producer->consumer through per-layer
+hardware; stage depth is set by the compiler so throughputs balance. On
+a pod mesh the analogue is GPipe-style microbatch pipelining over a
+``stage`` mesh axis: each stage owns a contiguous, *cost-balanced* (not
+count-balanced — see planner.assign_stages) slice of layers; activations
+hop stage->stage with ``ppermute`` (the ICI transfer hides under the
+next microbatch's compute); fill/drain bubbles amortize over the
+microbatch count exactly like HPIPE's pipeline fills with multiple
+partitions in flight.
+
+Implementation: shard_map manual over the stage axis only; data/model
+axes stay auto so GSPMD still lays out TP/DP inside each stage.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def stack_stages(blocks: PyTree, stage_of: list[int], n_stages: int):
+    """Re-pack per-layer stacked params (leading L axis) into per-stage
+    stacks (S, Lmax, ...) with a validity mask (S, Lmax). Works under
+    jax.eval_shape (static indices only)."""
+    L = len(stage_of)
+    per_stage = [[l for l in range(L) if stage_of[l] == s]
+                 for s in range(n_stages)]
+    lmax = max(len(g) for g in per_stage)
+
+    def leaf(a):
+        out = jnp.zeros((n_stages, lmax) + a.shape[1:], a.dtype)
+        for s, g in enumerate(per_stage):
+            if g:
+                out = out.at[s, :len(g)].set(a[np.array(g)])
+        return out
+
+    stacked = jax.tree.map(leaf, blocks)
+    mask = np.zeros((n_stages, lmax), bool)
+    for s, g in enumerate(per_stage):
+        mask[s, :len(g)] = True
+    return stacked, jnp.asarray(mask)
+
+
+def make_stage_fn(block_fn: Callable) -> Callable:
+    """Wrap a per-layer ``block_fn(params_l, x) -> x`` into a stage
+    program that scans its (padded) layer stack, skipping invalid pads."""
+
+    def stage_fn(stage_params, mask, x):
+        def body(h, xs):
+            p, valid = xs
+            h2 = block_fn(p, h)
+            return jnp.where(valid, h2, h), None
+
+        h, _ = lax.scan(body, x, (stage_params, mask))
+        return h
+
+    return stage_fn
+
+
+def pipeline_apply(stage_fn: Callable, stage_params: PyTree, mask, x_mb,
+                   *, mesh, stage_axis: str, n_stages: int,
+                   remat: bool = True):
+    """Run microbatches through the stage pipeline.
+
+    stage_params: (S, Lmax, ...) pytree sharded P(stage_axis) on axis 0.
+    mask: (S, Lmax) bool.
+    x_mb: (M, mb, T, d) microbatched activations.
+    Returns (M, mb, T, d) outputs (the last stage's results).
+    """
+    m = x_mb.shape[0]
+    fn = stage_fn
+    if remat:
+        fn = jax.checkpoint(stage_fn, prevent_cse=False)
+
+    def per_device(params_l, mask_l, xs):
+        sidx = lax.axis_index(stage_axis)
+        p1 = jax.tree.map(lambda a: a[0], params_l)      # drop stage dim
+        m1 = mask_l[0]
+        act = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+        perm = [(s, (s + 1) % n_stages) for s in range(n_stages)]
+
+        def step(carry, i):
+            act, outs = carry
+            xin = jnp.where(sidx == 0, xs[jnp.clip(i, 0, m - 1)], act)
+            y = fn(p1, m1, xin)
+            j = i - (n_stages - 1)
+            upd = lax.dynamic_update_index_in_dim(
+                outs, y, jnp.clip(j, 0, m - 1), 0)
+            outs = jnp.where((sidx == n_stages - 1) & (j >= 0), upd, outs)
+            act_next = lax.ppermute(y, stage_axis, perm)
+            return (act_next, outs), None
+
+        (act, outs), _ = lax.scan(step, (act, outs),
+                                  jnp.arange(m + n_stages - 1))
+        return outs[None]                                 # add stage dim back
+
+    f = jax.shard_map(
+        per_device, mesh=mesh,
+        in_specs=(P(stage_axis), P(stage_axis), P()),
+        out_specs=P(stage_axis),
+        check_vma=False,
+        axis_names=frozenset({stage_axis}))   # other mesh axes stay auto
+    outs_all = f(stage_params, mask, x_mb)                # (S, M, mb, T, d)
+    return outs_all[-1]                                   # last stage's slice
+
+
+def microbatch(x, n_microbatches: int):
+    """(B, ...) -> (M, B/M, ...)"""
+    b = x.shape[0]
+    assert b % n_microbatches == 0, (b, n_microbatches)
+    return x.reshape((n_microbatches, b // n_microbatches) + x.shape[1:])
+
+
+def bubble_fraction(n_microbatches: int, n_stages: int) -> float:
+    """Pipeline fill/drain overhead (paper Table I 'Latency: Good')."""
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def pipeline_apply_gspmd(stage_fn, stage_params, mask, x_mb, *,
+                         n_stages: int, stage_axis: str = "pod",
+                         mesh=None, data_axis: str = "data",
+                         remat: bool = True):
+    """Pure-GSPMD pipeline (no shard_map): stages live on a leading axis
+    sharded over ``stage_axis``; every step vmaps the stage program over
+    that axis (all pods compute in parallel) and ``jnp.roll`` shifts
+    activations stage->stage (lowers to collective-permute). Functionally
+    identical to pipeline_apply; preferred at production scale where
+    mixed manual/auto shard_map stresses the SPMD partitioner.
+    """
+    m = x_mb.shape[0]
+    s = n_stages
+    fn = jax.checkpoint(stage_fn, prevent_cse=False) if remat else stage_fn
+
+    def constrain(st):
+        if mesh is None:
+            return st
+        from jax.sharding import PartitionSpec as P
+        sizes = dict(mesh.shape)
+        spec = [None] * st.ndim
+        spec[0] = stage_axis
+        if st.shape[1] % sizes.get(data_axis, 1) == 0:
+            spec[1] = data_axis
+        return jax.lax.with_sharding_constraint(st, P(*spec))
+
+    state = jnp.zeros((s,) + x_mb.shape[1:], x_mb.dtype)
+    outs = jnp.zeros_like(x_mb)
+
+    def step(carry, i):
+        state, outs = carry
+        inject = x_mb[jnp.clip(i, 0, m - 1)]
+        state = state.at[0].set(
+            jnp.where(i < m, inject, state[0]).astype(state.dtype))
+        state = constrain(state)
+        y = jax.vmap(fn)(stage_params, mask, state)       # all stages
+        y = constrain(y)
+        j = i - (s - 1)
+        upd = lax.dynamic_update_index_in_dim(outs, y[-1],
+                                              jnp.clip(j, 0, m - 1), 0)
+        outs = jnp.where(j >= 0, upd, outs)
+        state = jnp.roll(y, 1, axis=0)                    # stage s -> s+1
+        return (state, outs), None
+
+    (state, outs), _ = lax.scan(step, (state, outs),
+                                jnp.arange(m + s - 1))
+    return outs

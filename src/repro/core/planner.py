@@ -1,0 +1,176 @@
+"""The HPIPE network compiler's planning passes.
+
+1. ``balance()`` — the paper's greedy throughput balancer: while the
+   resource budget allows, give one more channel split to the slowest
+   layer (Sec. IV). Runs in seconds (paper: "a few seconds").
+2. ``assign_stages()`` — layer -> pipeline-stage assignment for the TPU
+   layer pipeline: contiguous partition minimizing the max stage cost
+   (linear-partition DP). This is the multi-device analogue of giving
+   slow layers more DSPs: slow layers get more chips-time.
+3. ``plan_cnn()`` — end-to-end plan for the paper's CNNs from real
+   pruned weights (drives the Fig. 3 reproduction).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.costmodel import OpCost, lm_block_flops, op_cost_from_sparse, op_cost_dense
+
+
+@dataclass
+class Plan:
+    splits: dict[str, int]
+    cycles: dict[str, int]               # at chosen splits
+    resources: int
+    budget: int
+    model: str
+
+    @property
+    def bottleneck_cycles(self) -> int:
+        return max(self.cycles.values())
+
+    @property
+    def throughput_rel(self) -> float:
+        """Images/cycle (relative units): 1 / slowest stage."""
+        return 1.0 / self.bottleneck_cycles
+
+    def balance_spread(self) -> float:
+        """max/min cycle ratio over the balanced (split-incremented) ops."""
+        inc = [c for n, c in self.cycles.items() if self.splits[n] > 1]
+        vals = inc if len(inc) >= 2 else list(self.cycles.values())
+        return max(vals) / max(min(vals), 1)
+
+
+def balance(ops: list[OpCost], budget: int, *, model: str = "aware",
+            max_splits: int = 4096) -> Plan:
+    """Greedy: repeatedly add a split to the op with max cycles.
+
+    Uses a heap keyed on (-cycles); stops when the next increment would
+    exceed ``budget`` or the slowest op can no longer be split."""
+    splits = {op.name: 1 for op in ops}
+    cycles = {op.name: op.cycles(1, model) for op in ops}
+    used = sum(op.resource(1) for op in ops)
+    by_name = {op.name: op for op in ops}
+
+    heap = [(-cycles[op.name], op.name) for op in ops]
+    heapq.heapify(heap)
+    frozen: set[str] = set()
+    while heap:
+        negc, name = heapq.heappop(heap)
+        if -negc != cycles[name] or name in frozen:
+            continue                                  # stale entry
+        op = by_name[name]
+        s = splits[name]
+        if s >= min(max_splits, op.n_in_units):
+            frozen.add(name)
+            if len(frozen) == len(ops):
+                break
+            continue
+        delta = op.resource(s + 1) - op.resource(s)
+        if used + delta > budget:
+            frozen.add(name)                          # can't afford: freeze
+            if len(frozen) == len(ops):
+                break
+            continue
+        used += delta
+        splits[name] = s + 1
+        cycles[name] = op.cycles(s + 1, model)
+        heapq.heappush(heap, (-cycles[name], name))
+        # other ops' stale entries re-enter lazily
+        if all(n in frozen for n in splits):
+            break
+    # re-add any non-frozen ops that fell off the heap
+    return Plan(splits=splits, cycles=cycles, resources=used, budget=budget,
+                model=model)
+
+
+def evaluate(ops: list[OpCost], splits: dict[str, int],
+             model: str = "aware") -> dict[str, int]:
+    """Cycle counts of a fixed plan under a (possibly different) model —
+    used to measure the naive model's estimation error (the 23% claim)."""
+    return {op.name: op.cycles(splits[op.name], model) for op in ops}
+
+
+def assign_stages(costs: np.ndarray, n_stages: int) -> list[int]:
+    """Contiguous linear partition of ``costs`` into ``n_stages`` groups
+    minimizing the max group sum. Returns stage id per layer."""
+    n = len(costs)
+    if n_stages >= n:
+        return list(range(n))
+    prefix = np.concatenate([[0.0], np.cumsum(costs)])
+
+    def group_cost(i, j):                 # layers [i, j)
+        return prefix[j] - prefix[i]
+
+    INF = float("inf")
+    dp = np.full((n_stages + 1, n + 1), INF)
+    cut = np.zeros((n_stages + 1, n + 1), np.int64)
+    dp[0, 0] = 0.0
+    for s in range(1, n_stages + 1):
+        for j in range(1, n + 1):
+            for i in range(s - 1, j):
+                c = max(dp[s - 1, i], group_cost(i, j))
+                if c < dp[s, j]:
+                    dp[s, j] = c
+                    cut[s, j] = i
+    # walk back
+    bounds = [n]
+    j = n
+    for s in range(n_stages, 0, -1):
+        j = int(cut[s, j])
+        bounds.append(j)
+    bounds = bounds[::-1]                 # [0, ..., n]
+    stage_of = []
+    for s in range(n_stages):
+        stage_of += [s] * (bounds[s + 1] - bounds[s])
+    return stage_of
+
+
+def plan_lm_stages(cfg, seq: int, batch: int, n_stages: int) -> dict:
+    """HPIPE stage assignment for an LM arch: balance per-layer FLOPs
+    (heterogeneous for hybrid/MoE) across pipeline stages."""
+    costs = np.array([lm_block_flops(cfg, seq, batch, l)
+                      for l in range(cfg.n_layers)])
+    stage_of = assign_stages(costs, n_stages)
+    stage_cost = np.zeros(n_stages)
+    for l, s in enumerate(stage_of):
+        stage_cost[s] += costs[l]
+    return {
+        "stage_of": stage_of,
+        "stage_cost": stage_cost,
+        "imbalance": float(stage_cost.max() / max(stage_cost.mean(), 1.0)),
+        "layer_flops": costs,
+    }
+
+
+# --- CNN planning from real pruned weights (Fig. 3 reproduction) -----------
+
+def cnn_op_costs(cfg, params) -> list[OpCost]:
+    from repro.models import cnn
+    from repro.models.layers import SparseWeight
+    ops = []
+    for s in cnn.specs_for(cfg.name):
+        if s.kind == "conv":
+            w = params[s.name]["w"]
+            if isinstance(w, SparseWeight):
+                ops.append(op_cost_from_sparse(s.name, w, s.out_hw, s.out_hw))
+            else:
+                units = max(s.k * s.k * s.cin // 8, 1)   # 8-wide dense dot units
+                ops.append(op_cost_dense(s.name, units, s.cout, s.out_hw,
+                                         s.out_hw))
+        elif s.kind == "fc":
+            w = params[s.name]["w"]
+            if isinstance(w, SparseWeight):
+                ops.append(op_cost_from_sparse(s.name, w, 1, 1))
+            else:
+                ops.append(op_cost_dense(s.name, max(s.cin // 8, 1), s.cout, 1, 1))
+        # dw/pool/add are cheap companions on the FPGA; not DSP-planned
+    return ops
+
+
+def plan_cnn(cfg, params, dsp_target: int = 5000, *, model: str = "aware") -> Plan:
+    return balance(cnn_op_costs(cfg, params), dsp_target, model=model)

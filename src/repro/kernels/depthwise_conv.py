@@ -1,0 +1,82 @@
+"""Depthwise 2D convolution Pallas TPU kernel.
+
+HPIPE implements DepthwiseConv2D as its own hardware unit (Sec. V,
+MobileNets); on TPU the op is VPU-bound (no channel reduction for the
+MXU), so the kernel keeps a (H, W, C-tile) image slab resident in VMEM
+and accumulates k*k shifted elementwise products in f32 — one pass over
+HBM per input, the TPU analogue of the paper's line-buffered shift unit.
+
+Grid: (batch, channel-tiles). SAME padding is applied by the wrapper so
+the kernel body is pure shifted multiply-accumulate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, h_out: int,
+            w_out: int):
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)       # (h_out, w_out, tc)
+    x = x_ref[0]
+    for i in range(k):
+        for j in range(k):
+            part = jax.lax.slice(
+                x, (i, j, 0),
+                (i + (h_out - 1) * stride + 1,
+                 j + (w_out - 1) * stride + 1, x.shape[-1]),
+                (stride, stride, 1))
+            acc = acc + part.astype(jnp.float32) * w_ref[i, j].astype(
+                jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "block_c", "interpret"))
+def depthwise_conv_pallas(x: jax.Array, w: jax.Array, *, stride: int = 1,
+                          block_c: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """x: (N, H, W, C) NHWC; w: (k, k, C). SAME padding. Returns
+    (N, ceil(H/stride), ceil(W/stride), C)."""
+    n, h, wd, c = x.shape
+    k = w.shape[0]
+    h_out = -(-h // stride)
+    w_out = -(-wd // stride)
+    # SAME padding (as lax.conv with padding="SAME")
+    pad_h = max((h_out - 1) * stride + k - h, 0)
+    pad_w = max((w_out - 1) * stride + k - wd, 0)
+    xp = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                     (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    hp, wp = xp.shape[1], xp.shape[2]
+    tc = min(block_c, c)
+    assert c % tc == 0
+    kernel = functools.partial(_kernel, k=k, stride=stride,
+                               h_out=h_out, w_out=w_out)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, c // tc),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, tc), lambda b, ci: (b, 0, 0, ci)),
+            pl.BlockSpec((k, k, tc), lambda b, ci: (0, 0, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, h_out, w_out, tc),
+                               lambda b, ci: (b, 0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, c), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(xp, w)
+
+
+def depthwise_conv_ref(x: jax.Array, w: jax.Array, *,
+                       stride: int = 1) -> jax.Array:
+    """lax.conv_general_dilated oracle (feature-grouped)."""
+    c = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x, w[:, :, None, :], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c)

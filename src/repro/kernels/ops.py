@@ -1,0 +1,109 @@
+"""jit'd dispatch wrappers for the kernels.
+
+Two execution paths per op:
+- ``xla``: pure-JAX formulation with the same zero-block skipping
+  semantics; shards cleanly under pjit/GSPMD and is the path used by the
+  full-scale dry-run (Pallas cannot target the CPU backend non-
+  interpreted, see DESIGN.md §2).
+- ``pallas``: the TPU kernel (validated in interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import os
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_IMPL: Literal["xla", "pallas"] = os.environ.get("REPRO_KERNEL_IMPL", "xla")
+
+# Perf-iteration knob (EXPERIMENTS.md §Perf, qwen3 iter 2): token-shard
+# the sparse-matmul input. REFUTED at TP=16 — vals are ob-sharded on the
+# same axis, so GSPMD gathers the 2.5GB weight stack per layer instead
+# (27s -> 65s collective). Kept for meshes with a spare axis.
+_SPARSE_X_TOKEN_SHARD = False
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("xla", "pallas"), impl
+    _IMPL = impl
+
+
+def sparse_matmul(x: jax.Array, sw) -> jax.Array:
+    """x: (..., d_in) @ block-balanced SparseWeight -> (..., d_out)."""
+    *lead, d_in = x.shape
+    ob, n_k, bm, bn = sw.vals.shape
+    if _IMPL == "pallas":
+        xm = x.reshape(-1, d_in)
+        m = xm.shape[0]
+        tm = 128 if m % 128 == 0 else (8 if m % 8 == 0 else 1)
+        from repro.kernels.sparse_matmul import sparse_matmul_pallas
+        out = sparse_matmul_pallas(xm, sw.vals, sw.idx, block_m_x=tm)
+        return out.reshape(*lead, ob * bn)
+
+    # XLA path: lax.scan over the K surviving blocks per output column.
+    # Each step gathers one input block per output column (working set ==
+    # output size, never the KxM blowup a naive take would produce) and
+    # accumulates in f32 — gather-not-scatter, as in the paper.
+    #
+    # Sharding: the gather indexes the FEATURE axis, so under GSPMD a
+    # feature-sharded input forces an all-gather of x per layer (the
+    # dominant collective in the baseline roofline). Constraining x to
+    # TOKEN-sharded ("model" on the flattened token axis) makes every
+    # block gather shard-local; the reshard is a ~1/TP-size all-to-all.
+    from repro.models import lm as _lm
+    mesh = _lm._BOUNDARY.get("mesh") if _SPARSE_X_TOKEN_SHARD else None
+    if mesh is not None and x.ndim >= 2:
+        from jax.sharding import PartitionSpec as P
+        sizes = dict(mesh.shape)
+        tok = 1
+        for dim in x.shape[:-1]:
+            tok *= dim
+        spec = [None] * x.ndim
+        if x.shape[0] % sizes.get("data", 1) == 0 and                 x.shape[0] >= sizes.get("data", 1):
+            spec[0] = "data"
+        if x.ndim >= 3 and x.shape[1] % sizes.get("model", 1) == 0 and                 x.shape[1] >= sizes.get("model", 1):
+            spec[1] = "model"
+        x = jax.lax.with_sharding_constraint(x, P(*spec))
+    xb = x.reshape(-1, d_in // bm, bm)
+    t = xb.shape[0]
+
+    def step(acc, inp):
+        idx_k, vals_k = inp                      # (ob,), (ob, bm, bn)
+        xg = jnp.take(xb, idx_k, axis=1)         # (t, ob, bm)
+        # bf16 inputs + f32 accumulation via preferred_element_type: an
+        # explicit astype would be hoisted out of the layer scan by XLA
+        # and materialize an f32 copy of the whole weight stack.
+        from repro.models.layers import fdot
+        acc = acc + fdot("tjb,jbn->tjn", xg, vals_k)
+        return acc, None
+
+    from repro.models.layers import accum_dtype as _ad
+    acc0 = jnp.zeros((t, ob, bn), _ad() or x.dtype)
+    acc, _ = lax.scan(step, acc0,
+                      (sw.idx.swapaxes(0, 1), sw.vals.swapaxes(0, 1)))
+    return acc.reshape(*lead, ob * bn).astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Dispatch: Pallas flash kernel (TPU target) or blockwise XLA."""
+    if _IMPL == "pallas":
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset)
+    from repro.models.layers import blockwise_attention
+    return blockwise_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+
+
+def depthwise_conv(x, w, *, stride: int = 1):
+    """NHWC depthwise conv dispatch (HPIPE's DepthwiseConv2D unit)."""
+    if _IMPL == "pallas":
+        from repro.kernels.depthwise_conv import depthwise_conv_pallas
+        c = x.shape[-1]
+        bc = 128 if c % 128 == 0 else (8 if c % 8 == 0 else c)
+        return depthwise_conv_pallas(x, w, stride=stride, block_c=bc)
+    from repro.kernels.depthwise_conv import depthwise_conv_ref
+    return depthwise_conv_ref(x, w, stride=stride)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_matmul_ref(x: jax.Array, sw) -> jax.Array:
+    """Densify-then-matmul oracle for the block-balanced sparse matmul."""
+    from repro.core.sparsity import densify
+    w = densify(sw)
+    return jnp.einsum("...i,io->...o", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  q_offset: int = 0) -> jax.Array:
+    """Naive softmax attention oracle. q: (B,Tq,H,D); k,v: (B,Tk,H,D)."""
+    b, tq, h, d = q.shape
+    tk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = q_offset + jnp.arange(tq)
+    kpos = jnp.arange(tk)
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(v.dtype)

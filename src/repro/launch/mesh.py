@@ -1,0 +1,28 @@
+"""Production mesh construction (TPU v5e pods; 512 host devices in the
+dry-run). A function, not a module constant — importing this module must
+never touch jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, n_data: int = 2, n_model: int = 2, n_pod: int = 0):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    if n_pod:
+        return jax.make_mesh((n_pod, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+CHIP_VMEM = 128 * 1024 * 1024   # ~128 MiB VMEM
+CHIP_HBM = 16 * 1024**3         # 16 GiB

@@ -1,0 +1,86 @@
+"""Serving launcher: batched prefill + decode with a KV/state cache —
+the paper's deployment mode (HPIPE is an inference accelerator; its
+batch-size-1 throughput story maps to continuous batched decode here).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
+        --batch 4 --prompt-len 32 --gen 16 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+
+
+def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
+          gen_tokens: int = 16, max_seq: int = 128,
+          use_reduced: bool = True, seed: int = 0, greedy: bool = True,
+          verbose: bool = True):
+    """Prefill a batch of prompts token-by-token-free (single forward),
+    then decode ``gen_tokens`` greedily. Returns tokens + timings."""
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduced(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_params(cfg, key)
+    prompts = jax.random.randint(key, (batch, prompt_len), 0,
+                                 cfg.vocab_size)
+    extra = {}
+    if cfg.family == "audio":
+        extra["frames"] = jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        extra["patches"] = jax.random.normal(
+            key, (batch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+
+    decode = jax.jit(
+        lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos, extra=extra))
+
+    cache = lm.init_cache(cfg, batch, max_seq)
+    # prefill by stepping the prompt through the decode path (state
+    # archs) — exactness vs forward() is covered by tests
+    t0 = time.time()
+    logits = None
+    for i in range(prompt_len):
+        logits, cache = decode(params, cache, prompts[:, i:i + 1],
+                               jnp.int32(i))
+    prefill_s = time.time() - t0
+
+    out_tokens = []
+    t0 = time.time()
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(gen_tokens):
+        out_tokens.append(np.asarray(tok)[:, 0])
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    decode_s = time.time() - t0
+    toks_per_s = batch * gen_tokens / max(decode_s, 1e-9)
+    if verbose:
+        print(f"{arch}: prefill {prompt_len} toks in {prefill_s:.2f}s, "
+              f"decode {gen_tokens} toks/seq at {toks_per_s:.1f} tok/s "
+              f"(batch={batch})")
+    return {"tokens": np.stack(out_tokens, 1), "prefill_s": prefill_s,
+            "decode_s": decode_s, "tokens_per_s": toks_per_s}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args(argv)
+    serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+          gen_tokens=args.gen, use_reduced=args.reduced)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpecs.
+
+Megatron-style TP on the ``model`` axis, DP on ``data`` (and ``pod``
+unless the pipeline owns it). Rules are (parent, name)-keyed with
+divisibility fallbacks, so one table covers every family (a GQA arch
+with kv_heads=1 falls back to head-dim sharding for its KV cache, etc.).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+# (parent, leaf-name) -> candidate shard dims (tried in order) for 'model'
+_DIMS = {
+    ("attn", "wq"): (-2, -1), ("cross", "wq"): (-2, -1),   # heads, then dh
+    ("attn", "wk"): (-2, -1), ("attn", "wv"): (-2, -1),    # kv-heads, then dh
+    ("cross", "wk"): (-2, -1), ("cross", "wv"): (-2, -1),
+    ("attn", "wo"): (-3, -2), ("cross", "wo"): (-3, -2),   # heads, then dh
+    ("ffn", "w1"): (-1,), ("ffn", "w3"): (-1,), ("ffn", "w2"): (-2,),
+    ("mamba", "in_z"): (-1,), ("mamba", "in_xbc"): (-1,),
+    ("mamba", "in_dt"): (-1,), ("mamba", "conv_w"): (-1,),
+    ("mamba", "out_proj"): (-2,),
+    ("tmix", "wr"): (-1,), ("tmix", "wk"): (-1,), ("tmix", "wv"): (-1,),
+    ("tmix", "wg"): (-1,), ("tmix", "wo"): (-2,),
+    ("cmix", "wk"): (-1,), ("cmix", "wv"): (-2,),
+    ("moe", "router"): (-1,),
+    ("moe", "w1"): (-3,), ("moe", "w2"): (-3,), ("moe", "w3"): (-3,),
+}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        t = type(p).__name__
+        if t == "FlattenedIndexKey":
+            names.append(f"#{p.key}")          # SparseWeight child
+        elif hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(f"#{p.idx}")
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        else:
+            names.append(str(p))
+    return names
+
+
+def _spec_with_dim(shape, dim: int, axis: str, msize: int):
+    dim = len(shape) + dim if dim < 0 else dim
+    if 0 <= dim < len(shape) and shape[dim] % msize == 0 and shape[dim] >= msize:
+        spec = [None] * len(shape)
+        spec[dim] = axis
+        return P(*spec)
+    return P()
+
+
+def use_pure_dp(cfg) -> bool:
+    """Small models replicate params and use every chip for batch DP:
+    TP would splinter sub-GB weights and (for head counts like 15) force
+    replicated attention internals anyway."""
+    try:
+        return cfg.n_params() < 1e9
+    except Exception:
+        return False
+
+
+def param_spec(path, leaf, mesh: Mesh, *, pure_dp: bool = False) -> P:
+    msize = _axis_size(mesh, "model")
+    names = _path_names(path)
+    shape = leaf.shape
+    if msize == 1 or not shape or pure_dp:
+        return P()
+    name = names[-1] if names else ""
+    parent = ""
+    for n in reversed(names[:-1]):
+        if not n.startswith("#"):
+            parent = n
+            break
+
+    # SparseWeight children appear as flattened-index leaves under the
+    # weight's own name: .../w1/#0 = vals (.., ob, K, bm, bn),
+    # .../w1/#1 = idx (.., ob, K). Shard the ob (output-block) dim.
+    if name == "#0":     # SparseWeight.vals (.., ob, K, bm, bn)
+        return _spec_with_dim(shape, -4, "model", msize)
+    if name == "#1":     # SparseWeight.idx  (.., ob, K)
+        return _spec_with_dim(shape, -2, "model", msize)
+
+    if name == "embed":
+        # shard d_model, NOT vocab: a vocab-sharded table turns every
+        # token lookup into a full-table all-gather (3.1GB f32 for qwen3)
+        # and the grad scatter-add into another; d-sharded lookups are
+        # local. (Perf iteration 3, EXPERIMENTS.md SPerf.)
+        return _spec_with_dim(shape, -1, "model", msize)
+    if name == "head":
+        return _spec_with_dim(shape, -1, "model", msize)
+    for dim in _DIMS.get((parent, name), ()):
+        spec = _spec_with_dim(shape, dim, "model", msize)
+        if spec != P():
+            return spec
+    return P()
+
+
+def params_shardings(params, mesh: Mesh, *, pure_dp: bool = False):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [NamedSharding(mesh, param_spec(p, l, mesh, pure_dp=pure_dp))
+         for p, l in flat])
+
+
+def batch_axes(mesh: Mesh, *, pod_is_dp: bool = True, pure_dp: bool = False):
+    axes = []
+    if "pod" in mesh.axis_names and pod_is_dp:
+        axes.append("pod")
+    axes.append("data")
+    if pure_dp:
+        axes.append("model")
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def data_spec(shape, mesh: Mesh, *, pod_is_dp: bool = True,
+              pure_dp: bool = False) -> P:
+    """Batch-leading arrays (tokens, labels, frames, patches). Falls back
+    to fewer batch axes when the batch doesn't divide."""
+    ax = batch_axes(mesh, pod_is_dp=pod_is_dp, pure_dp=pure_dp)
+    cand = [ax] if isinstance(ax, str) else [ax[:i] for i in
+                                             range(len(ax), 0, -1)]
+    for a in cand:
+        a_t = a if isinstance(a, tuple) else (a,)
+        sz = int(np.prod([_axis_size(mesh, x) for x in a_t]))
+        if shape[0] % sz == 0 and shape[0] >= sz:
+            aa = a if len(a_t) > 1 else a_t[0]
+            return P(aa, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(path, leaf, mesh: Mesh, *, pod_is_dp: bool = True,
+               pure_dp: bool = False) -> P:
+    """Decode-cache arrays. Batch dim -> data, heads/channels -> model."""
+    msize = 1 if pure_dp else _axis_size(mesh, "model")
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    axf = batch_axes(mesh, pod_is_dp=pod_is_dp, pure_dp=pure_dp)
+    cand = [axf] if isinstance(axf, str) else [axf[:i] for i in
+                                               range(len(axf), 0, -1)]
+
+    def d(i):   # largest batch-axis combo that divides shape[i]
+        for a in cand:
+            a_t = a if isinstance(a, tuple) else (a,)
+            sz = int(np.prod([_axis_size(mesh, x) for x in a_t]))
+            if shape[i] % sz == 0 and shape[i] >= sz:
+                return a if len(a_t) > 1 else a_t[0]
+        return None
+
+    if name in ("kv", "cross_kv", "attn_kv"):
+        # (L|sites, 2, B, S, KVH, Dh). Shard the SEQUENCE dim on 'model'
+        # (context-parallel decode): softmax stats + o-partials are the
+        # only cross-shard traffic (KB/layer), and it never hits the GQA
+        # head-divisibility wall (kv_heads=1..32 vs TP=16).
+        spec = [None, None, d(2), None, None, None]
+        if msize > 1:
+            if shape[3] % msize == 0 and shape[3] >= msize:
+                spec[3] = "model"
+            elif shape[4] % msize == 0 and shape[4] >= msize:
+                spec[4] = "model"
+            elif shape[5] % msize == 0 and shape[5] >= msize:
+                spec[5] = "model"
+        return P(*spec)
+    def mshard(i):
+        return ("model" if msize > 1 and shape[i] % msize == 0
+                and shape[i] >= msize else None)
+
+    if name == "wkv":              # (L, B, H, Dk, Dv)
+        return P(None, d(1), mshard(2), None, None)
+    if name == "ssm":              # (L, B, H, N, Dh)
+        return P(None, d(1), mshard(2), None, None)
+    if name == "conv":             # (L, B, W-1, C)
+        return P(None, d(1), None, mshard(3))
+    if name in ("x_prev_t", "x_prev_c"):   # (L, B, 1, d)
+        return P(None, d(1), None, mshard(3))
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cache, mesh: Mesh, **kw):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [NamedSharding(mesh, cache_spec(p, l, mesh, **kw)) for p, l in flat])

@@ -1,0 +1,211 @@
+"""jit-able train / prefill / decode step builders + input specs.
+
+These are the programs the dry-run lowers and the real launchers run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.optim import adamw
+from repro.core import pipeline as pp
+from repro.core import planner
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                *, pod_is_dp: bool = True, pure_dp=None) -> dict:
+    """ShapeDtypeStructs (with shardings) for every model input."""
+    from repro.launch import shardings as sh
+    b, t = shape.global_batch, shape.seq_len
+    bf = jnp.bfloat16
+    d = cfg.d_model
+    if pure_dp is None:
+        pure_dp = sh.use_pure_dp(cfg)
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    ds = lambda shp, dtype=jnp.int32: sds(
+        shp, dtype, sh.data_spec(shp, mesh, pod_is_dp=pod_is_dp,
+                                 pure_dp=pure_dp))
+
+    if shape.kind == "train":
+        tx = t - cfg.vision_tokens if cfg.family == "vlm" else t
+        batch = {"tokens": ds((b, tx)), "labels": ds((b, tx))}
+        if cfg.family == "audio":
+            batch["frames"] = ds((b, cfg.encoder_seq, d), bf)
+        if cfg.family == "vlm":
+            batch["patches"] = ds((b, cfg.vision_tokens, d), bf)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        tx = t - cfg.vision_tokens if cfg.family == "vlm" else t
+        out = {"tokens": ds((b, tx))}
+        if cfg.family == "audio":
+            out["frames"] = ds((b, cfg.encoder_seq, d), bf)
+        if cfg.family == "vlm":
+            out["patches"] = ds((b, cfg.vision_tokens, d), bf)
+        return out
+
+    # decode: one new token against a cache of size seq_len
+    cache_shapes = jax.eval_shape(lambda: lm.init_cache(cfg, b, t))
+    cache_sh = sh.cache_shardings(cache_shapes, mesh, pod_is_dp=pod_is_dp,
+                                  pure_dp=pure_dp)
+    cache = jax.tree.map(
+        lambda s, shard: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                              sharding=shard),
+        cache_shapes, cache_sh)
+    return {
+        "cache": cache,
+        "tokens": ds((b, 1)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P())),
+    }
+
+
+def abstract_params(cfg: ModelConfig, mesh, *, pure_dp=None):
+    from repro.launch import shardings as sh
+    shapes = lm.abstract_params(cfg)
+    if pure_dp is None:
+        pure_dp = sh.use_pure_dp(cfg)
+    shards = sh.params_shardings(shapes, mesh, pure_dp=pure_dp)
+    return jax.tree.map(
+        lambda s, shard: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                              sharding=shard),
+        shapes, shards)
+
+
+def abstract_opt_state(abs_params, mesh, *, zero1: bool = True):
+    """Optimizer-state shapes. zero1: additionally shard m/v over the
+    'data' axis (ZeRO-1) along the first dimension not already sharded —
+    m/v are only touched at the update, so the extra all-gather of fresh
+    params replaces a full-size grad all-reduce (reduce-scatter + gather,
+    same bytes) while cutting optimizer HBM by the DP degree."""
+    dsize = mesh.shape.get("data", 1)
+
+    def f32_like(s):
+        spec = list(getattr(s.sharding, "spec", ()) or ())
+        spec += [None] * (len(s.shape) - len(spec))
+        if zero1 and dsize > 1:
+            for i, p in enumerate(spec):
+                if p is None and s.shape[i] % dsize == 0                         and s.shape[i] >= dsize:
+                    spec[i] = "data"
+                    break
+        return jax.ShapeDtypeStruct(
+            s.shape, jnp.float32,
+            sharding=NamedSharding(mesh, P(*spec)))
+
+    m = jax.tree.map(f32_like, abs_params)
+    return adamw.OptState(
+        m=m, v=m,
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P())))
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[adamw.AdamWConfig]
+                    = None, *, remat: str = "full", unroll: bool = False):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return lm.loss_fn(cfg, p, batch, remat=remat, unroll=unroll)
+
+        (_, metrics), grads = jax.value_and_grad(lf, has_aux=True,
+                                                 allow_int=True)(params)
+        params, opt_state, om = adamw.update(opt_cfg, params, grads,
+                                             opt_state)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, remat: str = "none",
+                      unroll: bool = False):
+    def prefill(params, tokens, **extra):
+        logits, _ = lm.forward(cfg, params, tokens, extra=extra or None,
+                               remat=remat, logits_mode="last",
+                               unroll=unroll)
+        return logits                          # (B, V) next-token logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, *, unroll: bool = False):
+    def decode(params, cache, tokens, pos):
+        return lm.decode_step(cfg, params, cache, tokens, pos,
+                              unroll=unroll)
+
+    return decode
+
+
+# --- HPIPE pipelined training (multi-pod: 'pod' = stage axis) ---------------
+
+def make_pipeline_train_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                             opt_cfg: Optional[adamw.AdamWConfig] = None,
+                             *, n_microbatches: int = 8,
+                             stage_axis: str = "pod"):
+    """Training step whose block stack runs through the HPIPE layer
+    pipeline over ``stage_axis``; layer->stage cuts come from the
+    planner's cost-balanced partition (heterogeneous costs for
+    hybrid/MoE archs)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    n_stages = mesh.shape[stage_axis]
+    planout = planner.plan_lm_stages(cfg, shape.seq_len,
+                                     shape.global_batch, n_stages)
+    stage_of = planout["stage_of"]
+
+    def restructure(params):
+        """(L,)-stacked blocks -> (S, Lmax)-staged blocks (+flags)."""
+        blocks = dict(params["blocks"])
+        if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            blocks["_attn_flag"] = jnp.array(
+                [(l + 1) % cfg.hybrid_attn_every == 0
+                 for l in range(cfg.n_layers)], jnp.int32)
+        staged, mask = pp.stack_stages(blocks, stage_of, n_stages)
+        rest = {k: v for k, v in params.items() if k != "blocks"}
+        return {"staged": staged, **rest}, mask
+
+    def train_step(sparams, mask, opt_state, batch):
+        def lf(ps):
+            tokens = batch["tokens"]
+            h = lm._embed(cfg, ps, tokens)
+            if cfg.family == "vlm":
+                h = jnp.concatenate(
+                    [batch["patches"].astype(h.dtype), h], axis=1)
+            b, t, _ = h.shape
+            positions = jnp.arange(t)[None]    # (1, T): microbatch-safe
+            block_fn = lm.make_pipeline_block_fn(cfg, ps, positions)
+            stage_fn = pp.make_stage_fn(lambda p, x: block_fn(p, x))
+            h_mb = pp.microbatch(h, n_microbatches)
+            out = pp.pipeline_apply_gspmd(
+                stage_fn, ps["staged"], mask, h_mb, n_stages=n_stages,
+                stage_axis=stage_axis, mesh=mesh)
+            h = out.reshape(b, t, -1)
+            logits = lm._logits(cfg, ps, h)
+            labels = batch["labels"]
+            if cfg.family == "vlm":
+                logits = logits[:, -labels.shape[1]:]
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+            loss = nll.mean()
+            return loss, {"loss": loss}
+
+        (_, metrics), grads = jax.value_and_grad(lf, has_aux=True,
+                                                 allow_int=True)(sparams)
+        sparams, opt_state, om = adamw.update(opt_cfg, sparams, grads,
+                                              opt_state)
+        return sparams, opt_state, {**metrics, **om}
+
+    return train_step, restructure, planout

@@ -1,0 +1,250 @@
+"""The paper's own networks: ResNet-50 V1, MobileNet-V1, MobileNet-V2.
+
+Every (non-depthwise) convolution runs as im2col patches x weight-matrix,
+so the HPIPE block-balanced sparse matmul — the paper's convolution
+unit — is the compute primitive, exactly as on the FPGA. Depthwise
+convolutions stay dense (the paper's depthwise unit is separate and the
+MobileNets are evaluated dense).
+
+Each model also exposes a ``*_specs()`` layer list consumed by the
+throughput-balancing planner (repro/core/planner.py) — the analogue of
+the compiler walking the TensorFlow graph.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.layers import SparseWeight
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    kind: str            # conv | dw | maxpool | avgpool | fc | add | relu
+    cin: int = 0
+    cout: int = 0
+    k: int = 1
+    stride: int = 1
+    in_hw: int = 0       # input spatial size (square)
+    residual_from: str = ""   # for add nodes
+
+    @property
+    def out_hw(self) -> int:
+        return -(-self.in_hw // self.stride)
+
+    def macs(self) -> int:
+        """Dense multiply-accumulates for this op."""
+        if self.kind == "conv":
+            return self.out_hw ** 2 * self.k ** 2 * self.cin * self.cout
+        if self.kind == "dw":
+            return self.out_hw ** 2 * self.k ** 2 * self.cin
+        if self.kind == "fc":
+            return self.cin * self.cout
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# layer spec builders (the "TensorFlow graph" the compiler walks)
+# ---------------------------------------------------------------------------
+
+def resnet50_specs() -> list[ConvSpec]:
+    specs = [ConvSpec("conv1", "conv", 3, 64, 7, 2, 224),
+             ConvSpec("pool1", "maxpool", 64, 64, 3, 2, 112)]
+    blocks = [(3, 64, 256, 56), (4, 128, 512, 28),
+              (6, 256, 1024, 14), (3, 512, 2048, 7)]
+    cin = 64
+    for si, (n, mid, out, hw) in enumerate(blocks):
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            ihw = hw * stride      # input spatial before downsample
+            pre = f"s{si}b{bi}"
+            specs += [
+                ConvSpec(f"{pre}_c1", "conv", cin, mid, 1, stride, ihw),
+                ConvSpec(f"{pre}_c2", "conv", mid, mid, 3, 1, hw),
+                ConvSpec(f"{pre}_c3", "conv", mid, out, 1, 1, hw),
+            ]
+            if bi == 0:
+                specs.append(ConvSpec(f"{pre}_proj", "conv", cin, out, 1,
+                                      stride, ihw))
+            cin = out
+    specs += [ConvSpec("avgpool", "avgpool", 2048, 2048, 7, 1, 7),
+              ConvSpec("fc", "fc", 2048, 1000, 1, 1, 1)]
+    return specs
+
+
+_MBV1 = [(32, 64, 1), (64, 128, 2), (128, 128, 1), (128, 256, 2),
+         (256, 256, 1), (256, 512, 2)] + [(512, 512, 1)] * 5 + \
+        [(512, 1024, 2), (1024, 1024, 1)]
+
+
+def mobilenet_v1_specs() -> list[ConvSpec]:
+    specs = [ConvSpec("conv1", "conv", 3, 32, 3, 2, 224)]
+    hw = 112
+    for i, (cin, cout, s) in enumerate(_MBV1):
+        specs += [ConvSpec(f"b{i}_dw", "dw", cin, cin, 3, s, hw),
+                  ConvSpec(f"b{i}_pw", "conv", cin, cout, 1, 1, hw // s)]
+        hw //= s
+    specs += [ConvSpec("avgpool", "avgpool", 1024, 1024, 7, 1, 7),
+              ConvSpec("fc", "fc", 1024, 1000, 1, 1, 1)]
+    return specs
+
+
+_MBV2 = [  # (expansion, cout, n, stride)
+    (1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+    (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+
+
+def mobilenet_v2_specs() -> list[ConvSpec]:
+    specs = [ConvSpec("conv1", "conv", 3, 32, 3, 2, 224)]
+    cin, hw = 32, 112
+    for si, (t, cout, n, stride) in enumerate(_MBV2):
+        for bi in range(n):
+            s = stride if bi == 0 else 1
+            mid = cin * t
+            pre = f"s{si}b{bi}"
+            if t != 1:
+                specs.append(ConvSpec(f"{pre}_exp", "conv", cin, mid, 1, 1, hw))
+            specs += [ConvSpec(f"{pre}_dw", "dw", mid, mid, 3, s, hw),
+                      ConvSpec(f"{pre}_pj", "conv", mid, cout, 1, 1, hw // s)]
+            hw //= s
+            cin = cout
+    specs += [ConvSpec("conv_last", "conv", 320, 1280, 1, 1, 7),
+              ConvSpec("avgpool", "avgpool", 1280, 1280, 7, 1, 7),
+              ConvSpec("fc", "fc", 1280, 1000, 1, 1, 1)]
+    return specs
+
+
+def specs_for(name: str) -> list[ConvSpec]:
+    return {"resnet50": resnet50_specs,
+            "mobilenet_v1": mobilenet_v1_specs,
+            "mobilenet_v2": mobilenet_v2_specs}[name]()
+
+
+# ---------------------------------------------------------------------------
+# params + forward
+# ---------------------------------------------------------------------------
+
+def _maybe_sparse(w2d, sp):
+    if sp is None or not sp.enabled:
+        return w2d
+    d_in, d_out = w2d.shape
+    bm = sp.block_m if d_in % sp.block_m == 0 else _largest_div(d_in, sp.block_m)
+    bn = sp.block_n if d_out % sp.block_n == 0 else _largest_div(d_out, sp.block_n)
+    if bm < 4 or bn < 4 or d_in // bm < 4:
+        return w2d                       # too small to prune blockwise
+    import dataclasses
+    from repro.core import sparsity as S
+    return S.to_block_balanced(
+        w2d, dataclasses.replace(sp, block_m=bm, block_n=bn))
+
+
+def _largest_div(n, cap):
+    for b in range(min(cap, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def init_cnn(cfg, key, *, image_size: int = 224):
+    specs = specs_for(cfg.name)
+    params = {}
+    keys = jax.random.split(key, len(specs))
+    sp = cfg.sparsity
+    for s, k in zip(specs, keys):
+        if s.kind == "conv":
+            w = L.dense_init(k, (s.k * s.k * s.cin, s.cout),
+                             s.k * s.k * s.cin, jnp.bfloat16)
+            params[s.name] = {"w": _maybe_sparse(w, sp),
+                              "b": jnp.zeros((s.cout,), jnp.bfloat16)}
+        elif s.kind == "dw":
+            params[s.name] = {
+                "w": L.dense_init(k, (s.k, s.k, s.cin), s.k * s.k, jnp.bfloat16),
+                "b": jnp.zeros((s.cin,), jnp.bfloat16)}
+        elif s.kind == "fc":
+            params[s.name] = {
+                "w": L.dense_init(k, (s.cin, s.cout), s.cin, jnp.bfloat16),
+                "b": jnp.zeros((s.cout,), jnp.bfloat16)}
+    return params
+
+
+def conv2d(x, p, s: ConvSpec, *, relu=True):
+    """im2col conv: the HPIPE convolution unit (sparse-aware matmul)."""
+    n, h, w, c = x.shape
+    pad = "SAME"
+    patches = lax.conv_general_dilated_patches(
+        x, (s.k, s.k), (s.stride, s.stride), pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))     # (N,Ho,Wo,k*k*C)
+    ho, wo = patches.shape[1], patches.shape[2]
+    y = L.linear(patches.reshape(n * ho * wo, -1), p["w"])
+    y = y.reshape(n, ho, wo, s.cout) + p["b"]
+    if relu:
+        y = jax.nn.relu(y)
+    return y
+
+
+def depthwise(x, p, s: ConvSpec, *, relu=True):
+    from repro.kernels import ops as kops
+    y = kops.depthwise_conv(x, p["w"], stride=s.stride)
+    y = y + p["b"]
+    return jax.nn.relu(y) if relu else y
+
+
+def cnn_forward(cfg, params, images):
+    """images: (N, H, W, 3) -> logits (N, 1000)."""
+    name = cfg.name
+    specs = {s.name: s for s in specs_for(name)}
+    x = images.astype(jnp.bfloat16)
+    if name == "resnet50":
+        x = conv2d(x, params["conv1"], specs["conv1"])
+        x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+        blocks = [(3, 64, 256), (4, 128, 512), (6, 256, 1024), (3, 512, 2048)]
+        for si, (nb, mid, out) in enumerate(blocks):
+            for bi in range(nb):
+                pre = f"s{si}b{bi}"
+                resid = x
+                y = conv2d(x, params[f"{pre}_c1"], specs[f"{pre}_c1"])
+                y = conv2d(y, params[f"{pre}_c2"], specs[f"{pre}_c2"])
+                y = conv2d(y, params[f"{pre}_c3"], specs[f"{pre}_c3"], relu=False)
+                if bi == 0:
+                    resid = conv2d(x, params[f"{pre}_proj"],
+                                   specs[f"{pre}_proj"], relu=False)
+                x = jax.nn.relu(y + resid)
+        x = x.mean(axis=(1, 2))
+    elif name == "mobilenet_v1":
+        x = conv2d(x, params["conv1"], specs["conv1"])
+        for i in range(len(_MBV1)):
+            x = depthwise(x, params[f"b{i}_dw"], specs[f"b{i}_dw"])
+            x = conv2d(x, params[f"b{i}_pw"], specs[f"b{i}_pw"])
+        x = x.mean(axis=(1, 2))
+    elif name == "mobilenet_v2":
+        x = conv2d(x, params["conv1"], specs["conv1"])
+        cin = 32
+        for si, (t, cout, n, stride) in enumerate(_MBV2):
+            for bi in range(n):
+                pre = f"s{si}b{bi}"
+                resid = x
+                y = x
+                if t != 1:
+                    y = conv2d(y, params[f"{pre}_exp"], specs[f"{pre}_exp"])
+                y = depthwise(y, params[f"{pre}_dw"], specs[f"{pre}_dw"])
+                y = conv2d(y, params[f"{pre}_pj"], specs[f"{pre}_pj"], relu=False)
+                s = stride if bi == 0 else 1
+                if s == 1 and cin == cout:
+                    y = y + resid
+                x = y
+                cin = cout
+        x = conv2d(x, params["conv_last"], specs["conv_last"])
+        x = x.mean(axis=(1, 2))
+    else:
+        raise ValueError(name)
+    logits = x.astype(jnp.float32) @ params["fc"]["w"].astype(jnp.float32) \
+        + params["fc"]["b"].astype(jnp.float32)
+    return logits

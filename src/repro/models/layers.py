@@ -1,0 +1,813 @@
+"""Neural net layers, pure JAX (no flax).
+
+All layers are shape-polymorphic functions over parameter pytrees. Layer
+stacks are stored with a leading layer axis and scanned with
+``jax.lax.scan`` so the 64-layer archs compile quickly.
+
+Weight matmuls optionally run through the HPIPE block-balanced sparse
+path (see repro/kernels/sparse_matmul.py + repro/core/sparsity.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+PyTree = Any
+
+# Matmul accumulation dtype. f32 (default) is what a real TPU MXU does
+# natively (bf16 inputs, f32 accumulate). The XLA *CPU* backend instead
+# lowers preferred_element_type=f32 as convert-to-f32 + f32 dot and then
+# hoists the (loop-invariant) converts out of the layer scan, creating
+# f32 copies of entire weight/cache stacks that no TPU would materialize.
+# The dry-run therefore compiles with accum=None (plain bf16 dots) so its
+# memory_analysis reflects the TPU layout; tests/training keep f32.
+_ACCUM = {"dtype": jnp.float32}
+
+
+def set_accum_dtype(dtype) -> None:
+    _ACCUM["dtype"] = dtype
+
+
+def accum_dtype():
+    return _ACCUM["dtype"]
+
+
+def fdot(expr: str, a, b):
+    """einsum with accumulation-dtype handling. Runtime (tests/training):
+    upcast operands to f32 (XLA:CPU cannot execute mixed bf16->f32
+    dots). Dry-run (accum None): plain bf16 dot, matching what the TPU
+    MXU keeps resident in HBM."""
+    ad = _ACCUM["dtype"]
+    if ad is None:
+        return jnp.einsum(expr, a, b)
+    return jnp.einsum(expr, a.astype(ad), b.astype(ad))
+
+
+# ---------------------------------------------------------------------------
+# initializers / norms / rope
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype=jnp.bfloat16):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.uniform(key, shape, jnp.float32, -scale, scale)).astype(dtype)
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    if _ACCUM["dtype"] is None:
+        # dry-run mode: stats in f32 (fused reduction), tensor math in
+        # bf16 — the layer-boundary collectives then move bf16, exactly
+        # what a fused TPU norm kernel keeps in HBM. With the default
+        # f32 path XLA hoists the upcast before the all-gather and the
+        # per-layer collective volume doubles.
+        ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                      keepdims=True)
+        r = lax.rsqrt(ms + eps).astype(dt)
+        return x * r * gamma.astype(dt)
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., T, H, Dh), positions: (..., T) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., T, half)
+    ang = ang[..., None, :]                                        # (..., T, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear: dense or HPIPE block-balanced sparse
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class SparseWeight:
+    """Block-balanced sparse weight for y = x @ W, W: (d_in, d_out).
+
+    vals: (out_blocks, K, bm, bn) — the K surviving input blocks for each
+          output block column (HPIPE: the weights loaded by one channel
+          split, padded to equal length).
+    idx:  (out_blocks, K) int32 — input block ids (HPIPE: decoded
+          runlengths).
+    d_in: static input width (pytree aux data, survives vmap/scan/jit).
+    """
+
+    def __init__(self, vals: Array, idx: Array, d_in: int):
+        self.vals = vals
+        self.idx = idx
+        self.d_in = d_in
+
+    @property
+    def d_out(self) -> int:
+        return self.vals.shape[-4] * self.vals.shape[-1]
+
+    def tree_flatten(self):
+        return (self.vals, self.idx), self.d_in
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    def __repr__(self):
+        return f"SparseWeight(vals={getattr(self.vals, 'shape', None)}, d_in={self.d_in})"
+
+
+def linear(x: Array, w) -> Array:
+    """x: (..., d_in) @ w, where w is a dense Array or a SparseWeight."""
+    if isinstance(w, SparseWeight):
+        from repro.kernels import ops as kops
+        return kops.sparse_matmul(x, w)
+    return jnp.einsum("...i,io->...o", x, w).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + optional qk-norm + optional sliding window)
+# ---------------------------------------------------------------------------
+
+# Decode-attention sharding hints (set by launchers under a mesh). The
+# KV cache is sequence-sharded (context-parallel decode); without an
+# explicit constraint GSPMD prefers head-sharded scores and all-gathers
+# the whole K/V cache per layer (GBs) instead of exchanging KB-sized
+# softmax partials.
+_DECODE_ATTN = {"mesh": None, "batch_ax": "data", "seq_ax": "model"}
+
+
+def set_decode_attn_sharding(mesh, batch_ax="data", seq_ax="model"):
+    _DECODE_ATTN.update(mesh=mesh, batch_ax=batch_ax, seq_ax=seq_ax)
+
+
+def _constrain_heads(x):
+    """(B, T, H, Dh) -> P(data, None, model, None) when H divides: keeps
+    attention head-parallel instead of letting GSPMD gather all heads
+    onto every device (observed 2.1GB/layer f32 gathers)."""
+    mesh = _DECODE_ATTN["mesh"]
+    if mesh is None or x.ndim != 4:
+        return x
+    from jax.sharding import PartitionSpec as P
+    sizes = dict(mesh.shape)
+    ba, ma = _DECODE_ATTN["batch_ax"], _DECODE_ATTN["seq_ax"]
+    spec = [None] * 4
+    if x.shape[0] % sizes.get(ba, 1) == 0 and x.shape[0] >= sizes.get(ba, 1):
+        spec[0] = ba
+    if x.shape[2] % sizes.get(ma, 1) == 0 and x.shape[2] >= sizes.get(ma, 1):
+        spec[2] = ma
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _constrain_scores(s):
+    """s: (B, H, Q, S) decode scores -> P(batch, None, None, seq)."""
+    mesh = _DECODE_ATTN["mesh"]
+    if mesh is None:
+        return s
+    from jax.sharding import PartitionSpec as P
+    sizes = dict(mesh.shape)
+    ba, sa = _DECODE_ATTN["batch_ax"], _DECODE_ATTN["seq_ax"]
+    spec = [None, None, None, None]
+    if s.shape[0] % sizes.get(ba, 1) == 0 and s.shape[0] >= sizes.get(ba, 1):
+        spec[0] = ba
+    if s.shape[3] % sizes.get(sa, 1) == 0 and s.shape[3] >= sizes.get(sa, 1):
+        spec[3] = sa
+    return jax.lax.with_sharding_constraint(s, P(*spec))
+
+def _repeat_kv(k: Array, n_rep: int) -> Array:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d)
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                        window: int = 0, q_offset: int = 0,
+                        block_q: int = 512, block_k: int = 1024,
+                        kv_len: Optional[Array] = None) -> Array:
+    """Flash-style attention in pure JAX (memory-bounded, O(T) working set).
+
+    q: (B, Tq, H, Dh); k/v: (B, Tk, H, Dh) (already GQA-expanded).
+    q_offset: absolute position of q[0] (for decode/prefill continuation).
+    kv_len: optional dynamic number of valid kv positions.
+    This is the XLA oracle; the Pallas kernel in kernels/flash_attention.py
+    implements the same schedule for TPU.
+    """
+    b, tq, h, dh = q.shape
+    tk = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    nq = -(-tq // block_q)
+    nk = -(-tk // block_k)
+    pq = nq * block_q - tq
+    pk = nk * block_k - tk
+    q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qb = q.reshape(b, nq, block_q, h, dh).transpose(1, 0, 3, 2, 4)   # (nq,B,H,bq,dh)
+    kb = k.reshape(b, nk, block_k, h, dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, block_k, h, dh).transpose(1, 0, 3, 2, 4)
+
+    kpos = jnp.arange(nk * block_k)
+    kv_valid_len = tk if kv_len is None else kv_len
+
+    def q_block(iq, qi):
+        qpos = q_offset + iq * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            ki, vi, kp = inputs
+            s = fdot("bhqd,bhkd->bhqk", qi, ki) * scale
+            s = s.astype(jnp.float32)
+            mask = kp[None, None, None, :] < kv_valid_len
+            if causal:
+                mask &= kp[None, None, None, :] <= qpos[None, None, :, None]
+            if window:
+                mask &= kp[None, None, None, :] > (qpos[None, None, :, None] - window)
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(corr), corr, 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + fdot(
+                "bhqk,bhkd->bhqd", p.astype(vi.dtype), vi).astype(
+                    jnp.float32)
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, block_q, dh), jnp.float32)
+        m0 = jnp.full((b, h, block_q), -jnp.inf)
+        l0 = jnp.zeros((b, h, block_q))
+        kps = kpos.reshape(nk, block_k)
+        # checkpoint each kv step: the (bq x bk) score/softmax tensors are
+        # recomputed in backward instead of being stored per step (flash
+        # backward semantics; without this the residuals are O(T^2)).
+        kv_step_r = jax.checkpoint(kv_step, prevent_cse=False)
+        (acc, m, l), _ = lax.scan(kv_step_r, (acc0, m0, l0), (kb, vb, kps))
+        return acc / jnp.maximum(l[..., None], 1e-20)
+
+    out = lax.map(lambda args: q_block(*args), (jnp.arange(nq), qb))  # (nq,B,H,bq,dh)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, nq * block_q, h, dh)
+    return out[:, :tq].astype(v.dtype)
+
+
+def init_attention(key, cfg, dtype=jnp.bfloat16):
+    """3D projection weights (d, heads, dh): the head/head-dim axes are
+    explicit so TP shardings of weights, activations and KV caches agree
+    (a flat (d, h*dh) layout interleaves heads across shards)."""
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), d, dtype),
+        "wk": dense_init(ks[1], (d, kv, dh), d, dtype),
+        "wv": dense_init(ks[2], (d, kv, dh), d, dtype),
+        "wo": dense_init(ks[3], (h, dh, d), h * dh, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def attention(p, cfg, x: Array, *, positions: Array, causal: bool = True,
+              window: int = 0, kv_cache=None, cache_pos=None):
+    """GQA attention. Returns (out, new_kv) where new_kv is the (k, v)
+    pair for this call (train/prefill) or the updated cache (decode)."""
+    b, t, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"]).astype(x.dtype)
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"]).astype(x.dtype)
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"]).astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache                      # (B, S, KV, Dh)
+        if t == 1:
+            # masked write: a dynamic-update-slice into a sequence-
+            # sharded cache forces GSPMD to replicate the whole cache;
+            # the one-hot select partitions cleanly (each shard rewrites
+            # only its slice).
+            hot = (jnp.arange(ck.shape[1]) == cache_pos)[None, :, None, None]
+            ck = jnp.where(hot, k.astype(ck.dtype), ck)
+            cv = jnp.where(hot, v.astype(cv.dtype), cv)
+        else:
+            ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, cache_pos, 0, 0))
+            cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, cache_pos, 0, 0))
+        kk, vv = ck, cv
+        kv_len = cache_pos + t
+        q_offset = cache_pos
+        new_cache = (ck, cv)
+    else:
+        kk, vv = k, v
+        kv_len = None
+        q_offset = 0
+        new_cache = (k, v)
+
+    if kv_cache is not None and t == 1:
+        # decode: grouped-query einsum directly over the (seq-sharded)
+        # cache — no head-expansion broadcast, no O(S*H) f32 temp.
+        g = h // kv
+        q5 = q.reshape(b, t, kv, g, dh)
+        s = fdot("bqkgd,bskd->bkgqs", q5, kk) / math.sqrt(dh)
+        s = s.astype(jnp.float32)
+        s = _constrain_scores(s.reshape(b, h, t, -1)).reshape(s.shape)
+        kpos = jnp.arange(kk.shape[1])
+        mask = kpos[None, None, None, None, :] < kv_len
+        if window:
+            mask &= kpos[None, None, None, None, :] > (kv_len - 1 - window)
+        s = jnp.where(mask, s, -jnp.inf)
+        o = fdot("bkgqs,bskd->bqkgd",
+                 jax.nn.softmax(s, axis=-1).astype(vv.dtype), vv)
+        o = o.reshape(b, t, h, dh).astype(x.dtype)
+    else:
+        kk = _repeat_kv(kk, h // kv)
+        vv = _repeat_kv(vv, h // kv)
+        q = _constrain_heads(q)
+        kk = _constrain_heads(kk)
+        vv = _constrain_heads(vv)
+        o = blockwise_attention(q, kk, vv, causal=causal, window=window,
+                                q_offset=q_offset,
+                                kv_len=None if kv_cache is None else kv_len)
+        o = _constrain_heads(o)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"]).astype(x.dtype)
+    return out, new_cache
+
+
+def cross_attention(p, cfg, x: Array, enc: Array):
+    """Decoder cross-attention over (cached) encoder output (B, Te, d)."""
+    b, t, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"]).astype(x.dtype)
+    k = jnp.einsum("btd,dhk->bthk", enc, p["wk"]).astype(enc.dtype)
+    v = jnp.einsum("btd,dhk->bthk", enc, p["wv"]).astype(enc.dtype)
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    o = blockwise_attention(q, k, v, causal=False)
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN (gated SiLU) — dense or HPIPE-sparse
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, d_model, d_ff, sparsity=None, dtype=jnp.bfloat16):
+    from repro.core import sparsity as sp
+    ks = jax.random.split(key, 3)
+    mk = lambda k, i, o: dense_init(k, (i, o), i, dtype)
+    w1, w3 = mk(ks[0], d_model, d_ff), mk(ks[1], d_model, d_ff)
+    w2 = mk(ks[2], d_ff, d_model)
+    if sparsity is not None and sparsity.enabled and sparsity.prune_ffn:
+        w1 = sp.to_block_balanced(w1, sparsity)
+        w3 = sp.to_block_balanced(w3, sparsity)
+        w2 = sp.to_block_balanced(w2, sparsity)
+    return {"w1": w1, "w2": w2, "w3": w3}
+
+
+def ffn(p, x: Array) -> Array:
+    h = jax.nn.silu(linear(x, p["w1"]).astype(jnp.float32)).astype(x.dtype)
+    h = h * linear(x, p["w3"])
+    return linear(h, p["w2"])
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, sort-free capacity dispatch, expert-parallel)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg, dtype=jnp.bfloat16):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), d, jnp.float32),
+        "w1": dense_init(ks[1], (e, d, f), d, dtype),
+        "w3": dense_init(ks[2], (e, d, f), d, dtype),
+        "w2": dense_init(ks[3], (e, f, d), f, dtype),
+    }
+
+
+# Data-parallel degree for MoE dispatch. With dp=1 the capacity buffers
+# are sized by the GLOBAL token count and the scatter crosses the whole
+# fleet (the worst cell in the baseline roofline: 195s of collectives).
+# Launchers set dp = |data axis| so dispatch is DP-local: each data
+# shard routes its own tokens into (e, cap_local, d) buffers and only
+# the expert-parallel all-to-all crosses chips.
+_MOE = {"dp": 1}
+
+
+def set_moe_dp(dp: int) -> None:
+    _MOE["dp"] = max(int(dp), 1)
+
+
+def moe(p, cfg, x: Array, *, capacity_factor: float = 1.25) -> tuple[Array, Array]:
+    """Returns (out, aux_loss). x: (B, T, d)."""
+    b, t, d = x.shape
+    dp = _MOE["dp"]
+    if dp > 1 and (b * t) % dp == 0:
+        xs = x.reshape(dp, (b * t) // dp, 1, d)
+        outs, auxs = jax.vmap(
+            lambda xx: _moe_local(p, cfg, xx, capacity_factor),
+            spmd_axis_name="data")(xs)
+        return outs.reshape(b, t, d), auxs.mean()
+    return _moe_local(p, cfg, x, capacity_factor)
+
+
+def _constrain_experts(a):
+    """(e, cap, ...) -> shard e over 'model'. Without this the backward
+    pass all-gathers the full capacity buffers (64GB f32/layer observed
+    on granite-moe)."""
+    mesh = _DECODE_ATTN["mesh"]
+    if mesh is None:
+        return a
+    from jax.sharding import PartitionSpec as P
+    msize = dict(mesh.shape).get("model", 1)
+    if msize <= 1:
+        return a
+    if a.shape[0] % msize == 0 and a.shape[0] >= msize:
+        return jax.lax.with_sharding_constraint(
+            a, P("model", *([None] * (a.ndim - 1))))
+    # expert count doesn't divide TP (e.g. 40 experts / 16 shards):
+    # shard the capacity dim instead — expert weights stay replicated
+    # and each shard computes a slice of every expert's tokens.
+    if a.ndim >= 2 and a.shape[1] % msize == 0 and a.shape[1] >= msize:
+        return jax.lax.with_sharding_constraint(
+            a, P(None, "model", *([None] * (a.ndim - 2))))
+    return a
+
+
+def _moe_local(p, cfg, x: Array, capacity_factor: float) -> tuple[Array, Array]:
+    """Sort-based dispatch: argsort + searchsorted + gathers ONLY.
+
+    A scatter into (e, cap, d) capacity buffers cannot be partitioned by
+    GSPMD when the expert axis is sharded — it replicates the buffer and
+    all-reduces contributions (observed: 32GB f32 all-reduces per MoE
+    layer). Every op below indexes an UNSHARDED (dp-local) token axis,
+    so the only cross-chip traffic left is the expert-parallel
+    all-to-all of the (e, cap, d) buffers themselves."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(b * t, d)
+    n = b * t
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = lax.top_k(probs, k)                      # (n, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(min(int(capacity_factor * n * k / e), n), 1)
+    nk = n * k
+    flat_e = eidx.reshape(-1)                             # (nk,)
+    order = jnp.argsort(flat_e, stable=True)              # slots by expert
+    sorted_e = flat_e[order]
+    sorted_tok = order // k
+    # per-expert offsets without any scatter
+    offsets = jnp.searchsorted(sorted_e, jnp.arange(e + 1))
+    slot = offsets[:-1, None] + jnp.arange(cap)[None]     # (e, cap)
+    valid = slot < offsets[1:, None]
+    tok_for_slot = jnp.where(valid, sorted_tok[jnp.clip(slot, 0, nk - 1)], n)
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    buf = x_pad[tok_for_slot]                             # (e, cap, d)
+    buf = _constrain_experts(buf)          # e -> 'model' (all-to-all here)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                               p["w1"]).astype(jnp.float32))
+    h = _constrain_experts(h.astype(x.dtype)) * _constrain_experts(
+        jnp.einsum("ecd,edf->ecf", buf, p["w3"]))
+    out_e = _constrain_experts(
+        jnp.einsum("ecf,efd->ecd", h, p["w2"]))           # (e, cap, d)
+
+    # return path: scatter-add each slot's result to its token. The
+    # target (n, d) token axis is dp-local/replicated over 'model', so
+    # the sharded-capacity contributions combine with ONE (n,d)
+    # all-reduce instead of all-gathering the capacity buffers.
+    g_sorted = gate.reshape(-1)[order]                    # (nk,)
+    g_slot = jnp.where(valid, g_sorted[jnp.clip(slot, 0, nk - 1)], 0.0)
+    contrib = out_e * g_slot[..., None].astype(out_e.dtype)
+    out = jnp.zeros((n + 1, d), jnp.float32).at[
+        tok_for_slot.reshape(-1)].add(
+            contrib.reshape(-1, d).astype(jnp.float32), mode="drop")
+    out = out[:n].astype(x.dtype)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(0)
+    counts = (offsets[1:] - offsets[:-1]).astype(jnp.float32)
+    ce = counts / jnp.maximum(counts.sum(), 1.0) * e
+    aux = (me * ce).sum()
+    return out.reshape(b, t, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, chunked scan) — h_t = exp(a dt) h_{t-1} + dt * B_t x_t
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = d_in // cfg.head_dim if d_in % cfg.head_dim == 0 else cfg.n_heads
+    dh = d_in // nh
+    ks = jax.random.split(key, 6)
+    return {
+        # separate projections (not one packed matrix): slicing a packed,
+        # TP-sharded output crosses shard boundaries and GSPMD falls back
+        # to all-gathering the weight (1.25GB f32/layer observed).
+        "in_z": dense_init(ks[0], (d, d_in), d, dtype),
+        "in_xbc": dense_init(ks[2], (d, d_in + 2 * n), d, dtype),
+        "in_dt": dense_init(ks[3], (d, nh), d, dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, d_in + 2 * n), cfg.ssm_conv, dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32) + jnp.log(
+            jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[5], (d_in, d), d_in, dtype),
+    }
+
+
+def _mamba_heads(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.head_dim if d_in % cfg.head_dim == 0 else cfg.n_heads
+    return nh, d_in // nh
+
+
+def _causal_conv(xbc: Array, w: Array, state: Optional[Array]):
+    """Depthwise causal conv1d. xbc: (B, T, C), w: (W, C). state: (B, W-1, C)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return out, new_state
+
+
+def mamba2_chunked(x_h, dt, a_log, B, C, *, chunk: int = 128, h0=None):
+    """Chunked SSD scan.
+
+    x_h: (B, T, H, Dh) inputs; dt: (B, T, H) >0; a_log: (H,) (A = -exp);
+    B, C: (B, T, N). Returns (y: (B,T,H,Dh), h_last: (B,H,N,Dh)).
+    """
+    b, t, h, dh = x_h.shape
+    n = B.shape[-1]
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    f32 = jnp.float32
+    x_h = jnp.pad(x_h, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(f32)
+    dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Bm = jnp.pad(B, ((0, 0), (0, pad), (0, 0))).astype(f32)
+    Cm = jnp.pad(C, ((0, 0), (0, pad), (0, 0))).astype(f32)
+    a = -jnp.exp(a_log)                                       # (H,)
+    la = dt * a[None, None, :]                                # log decay per step
+
+    def _hshard(a, dim):
+        mesh = _DECODE_ATTN["mesh"]
+        if mesh is None:
+            return a
+        from jax.sharding import PartitionSpec as P
+        msize = dict(mesh.shape).get("model", 1)
+        if msize <= 1 or a.shape[dim] % msize or a.shape[dim] < msize:
+            return a
+        spec = [None] * a.ndim
+        spec[dim] = "model"
+        if a.shape[0] % dict(mesh.shape).get("data", 1) == 0:
+            spec[0] = "data"
+        return jax.lax.with_sharding_constraint(a, P(*spec))
+
+    xc = _hshard(x_h.reshape(b, nc, chunk, h, dh), 3)
+    dtc = _hshard(dt.reshape(b, nc, chunk, h), 3)
+    lac = _hshard(la.reshape(b, nc, chunk, h), 3)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    cum = jnp.cumsum(lac, axis=2)                             # (B,nc,L,H)
+    # intra-chunk: y[t] += C_t . sum_{s<=t} exp(cum_t - cum_s) dt_s B_s x_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,L,L,H)
+    Lmask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask the EXPONENT, not the exp: above the diagonal seg > 0 grows
+    # with distance and exp(seg) overflows -> NaN in the backward pass.
+    seg = jnp.where(Lmask[None, None, :, :, None], seg, -1e9)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)
+    att = cb[..., None] * decay * dtc[:, :, None, :, :]       # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bctsh,bcshd->bcthd", att, xc)
+
+    # chunk states: h_c = sum_s exp(cum_L - cum_s) dt_s B_s x_s
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,nc,L,H)
+    states = jnp.einsum("bcsn,bcsh,bcshd->bchnd",
+                        Bc, dec_end * dtc, xc)                # (B,nc,H,N,Dh)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (B,nc,H)
+
+    def step(hprev, inp):
+        st, cd = inp                                          # (B,H,N,Dh),(B,H)
+        hnew = hprev * cd[:, :, None, None] + st
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, dh), f32)
+    hT, hprev_all = lax.scan(step, h0,
+                             (states.transpose(1, 0, 2, 3, 4),
+                              chunk_decay.transpose(1, 0, 2)))
+    hprev_all = hprev_all.transpose(1, 0, 2, 3, 4)            # (B,nc,H,N,Dh)
+    dec_in = jnp.exp(cum)                                     # decay from chunk start
+    y_inter = jnp.einsum("bctn,bcth,bchnd->bcthd", Cc, dec_in, hprev_all)
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, dh)[:, :t]
+    return y, hT
+
+
+def mamba2_forward(p, cfg, x: Array, *, state=None, chunk: int = 128):
+    """Full mamba2 mixer. state: None (train/prefill) or dict (decode/carry).
+
+    Returns (y, new_state)."""
+    b, t, d = x.shape
+    nh, dh = _mamba_heads(cfg)
+    d_in, n = cfg.ssm_expand * d, cfg.ssm_state
+    z = linear(x, p["in_z"])
+    xbc = linear(x, p["in_xbc"])
+    dt = linear(x, p["in_dt"])
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + n]
+    Cm = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    x_h = xs.reshape(b, t, nh, dh)
+
+    if state is not None and t == 1:
+        # recurrent single step
+        a = -jnp.exp(p["A_log"])
+        h = state["ssm"]                                      # (B,H,N,Dh)
+        dt1 = dt[:, 0]                                        # (B,H)
+        decay = jnp.exp(dt1 * a[None])
+        upd = jnp.einsum("bn,bh,bhd->bhnd", Bm[:, 0].astype(jnp.float32),
+                         dt1, x_h[:, 0].astype(jnp.float32))
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnd->bhd", Cm[:, 0].astype(jnp.float32), h)
+        y = y[:, None]                                        # (B,1,H,Dh)
+        hT = h
+    else:
+        h0 = None if state is None else state["ssm"]
+        y, hT = mamba2_chunked(x_h, dt, p["A_log"], Bm, Cm, chunk=chunk, h0=h0)
+
+    y = y + x_h.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = linear(y, p["out_proj"])
+    new_state = {"conv": new_conv, "ssm": hT}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent per-channel decay, chunked WKV
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    lora = max(d // 16, 32)
+    return {
+        "t_mix": jax.random.normal(ks[0], (5, d), jnp.float32) * 0.02,
+        "wr": dense_init(ks[1], (d, d), d, dtype),
+        "wk": dense_init(ks[2], (d, d), d, dtype),
+        "wv": dense_init(ks[3], (d, d), d, dtype),
+        "wg": dense_init(ks[4], (d, d), d, dtype),
+        "wo": dense_init(ks[5], (d, d), d, dtype),
+        "decay_w1": dense_init(ks[6], (d, lora), d, jnp.float32),
+        "decay_w2": dense_init(ks[7], (lora, d), lora, jnp.float32),
+        "decay_bias": jnp.full((d,), -6.0, jnp.float32),
+        "bonus_u": jnp.zeros((cfg.n_heads, cfg.head_dim), jnp.float32),
+        "ln_x": jnp.ones((d,), dtype),
+    }
+
+
+def rwkv6_wkv_chunked(r, k, v, logw, u, *, chunk: int = 64, S0=None):
+    """Chunked WKV. r,k,v: (B,T,H,Dh); logw: (B,T,H,Dh) (<0 decays on key
+    dim); u: (H,Dh) bonus. o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T),
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T. Returns (o, S_T (B,H,Dk,Dv))."""
+    b, t, h, dh = r.shape
+    f32 = jnp.float32
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    pads = ((0, 0), (0, pad), (0, 0), (0, 0))
+    r = jnp.pad(r, pads).astype(f32).reshape(b, nc, chunk, h, dh)
+    k = jnp.pad(k, pads).astype(f32).reshape(b, nc, chunk, h, dh)
+    v = jnp.pad(v, pads).astype(f32).reshape(b, nc, chunk, h, dh)
+    logw = jnp.pad(logw, pads).reshape(b, nc, chunk, h, dh)
+    cum = jnp.cumsum(logw, axis=2)                            # (B,nc,L,H,Dh)
+
+    # intra-chunk: o_t += sum_{s<t} (r_t * exp(cum_{t-1}-cum_s)) . k_s v_s
+    #            + (r_t*u).k_t v_t
+    ri = r * jnp.exp(cum - logw)                              # r_t * exp(cum_{t-1})
+    ki = k * jnp.exp(-cum)                                    # k_s * exp(-cum_s)
+    att = jnp.einsum("bclhd,bcmhd->bchlm", ri, ki)            # (B,nc,H,L,L)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    o_intra = jnp.einsum("bchlm,bcmhd->bclhd", att, v)
+    # bonus term: (r_t . (u*k_t)) v_t — scalar per (t, head) times v_t
+    sb = jnp.einsum("bclhd,bclhd->bclh", r, u[None, None, None] * k)
+    o_bonus = sb[..., None] * v
+
+    # chunk state update: S_end = diag(exp(cum_L)) S0 + sum_s exp(cum_L-cum_s) k_s v_s
+    dec_end = jnp.exp(cum[:, :, -1:] - cum)                   # (B,nc,L,H,Dh)
+    states = jnp.einsum("bclhd,bclhe->bchde", k * dec_end, v) # (B,nc,H,Dk,Dv)
+    chunk_decay = jnp.exp(cum[:, :, -1])                      # (B,nc,H,Dh)
+
+    def step(S, inp):
+        st, cd = inp
+        Snew = S * cd[..., None] + st
+        return Snew, S
+
+    if S0 is None:
+        S0 = jnp.zeros((b, h, dh, dh), f32)
+    ST, Sprev = lax.scan(step, S0, (states.transpose(1, 0, 2, 3, 4),
+                                    chunk_decay.transpose(1, 0, 2, 3)))
+    Sprev = Sprev.transpose(1, 0, 2, 3, 4)                    # (B,nc,H,Dk,Dv)
+    o_inter = jnp.einsum("bclhd,bchde->bclhe", ri, Sprev)
+    o = (o_intra + o_inter + o_bonus).reshape(b, nc * chunk, h, dh)[:, :t]
+    return o, ST
+
+
+def rwkv6_forward(p, cfg, x: Array, *, state=None, chunk: int = 64):
+    """RWKV6 time-mix. Returns (out, new_state)."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    if state is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+        S0 = None
+    else:
+        x_prev = state["x_prev"]
+        S0 = state["wkv"]
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)         # shifted
+    mix = jax.nn.sigmoid(p["t_mix"])                          # (5, d)
+    def mx(i):
+        return (x.astype(jnp.float32) * mix[i] +
+                xs.astype(jnp.float32) * (1 - mix[i])).astype(x.dtype)
+    r = linear(mx(0), p["wr"]).reshape(b, t, h, dh)
+    kk = linear(mx(1), p["wk"]).reshape(b, t, h, dh)
+    v = linear(mx(2), p["wv"]).reshape(b, t, h, dh)
+    g = linear(mx(3), p["wg"])
+    dec = jnp.einsum("btd,dl->btl", mx(4).astype(jnp.float32), p["decay_w1"])
+    dec = jnp.einsum("btl,ld->btd", jnp.tanh(dec), p["decay_w2"])
+    logw = -jnp.exp((dec + p["decay_bias"]).clip(-20.0, 4.0)) # < 0
+    logw = logw.reshape(b, t, h, dh)
+
+    if state is not None and t == 1:
+        S = state["wkv"]                                      # (B,H,Dk,Dv)
+        r1, k1, v1 = (a[:, 0].astype(jnp.float32) for a in (r, kk, v))
+        w1 = jnp.exp(logw[:, 0])
+        o = jnp.einsum("bhd,bhde->bhe", r1, S) + \
+            jnp.einsum("bhd,bhd,bhe->bhe", r1, p["bonus_u"][None] * k1, v1)
+        S = S * w1[..., None] + jnp.einsum("bhd,bhe->bhde", k1, v1)
+        o = o[:, None]
+        ST = S
+    else:
+        o, ST = rwkv6_wkv_chunked(r, kk, v, logw, p["bonus_u"], chunk=chunk,
+                                  S0=S0)
+    o = o.reshape(b, t, d).astype(x.dtype)
+    o = rms_norm(o, p["ln_x"], cfg.norm_eps)
+    out = linear(o * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype), p["wo"])
+    new_state = {"x_prev": x[:, -1:], "wkv": ST}
+    return out, new_state
+
+
+def init_rwkv_cmix(key, cfg, dtype=jnp.bfloat16):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "c_mix": jax.random.normal(ks[0], (2, d), jnp.float32) * 0.02,
+        "wk": dense_init(ks[1], (d, f), d, dtype),
+        "wv": dense_init(ks[2], (f, d), f, dtype),
+    }
+
+
+def rwkv_cmix(p, x: Array, x_prev=None):
+    b, t, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mix = jax.nn.sigmoid(p["c_mix"])
+    xk = (x.astype(jnp.float32) * mix[0] + xs.astype(jnp.float32) * (1 - mix[0])).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(linear(xk, p["wk"]).astype(jnp.float32))).astype(x.dtype)
+    return linear(k, p["wv"]), x[:, -1:]

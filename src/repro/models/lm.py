@@ -1,0 +1,533 @@
+"""Unified language-model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM.
+
+One parameter layout + forward per family, all built from layers.py.
+Layer stacks are stored stacked (leading L axis) and scanned; shared
+blocks (zamba2) are closed over. Everything works under
+``jax.eval_shape`` so the dry-run never allocates real weights.
+
+Public entry points:
+    init_params(cfg, key)        -> params pytree
+    init_cache(cfg, shape)       -> decode cache pytree (zeros)
+    forward(cfg, params, batch)  -> logits            (train/prefill)
+    decode_step(cfg, params, cache, tokens, pos) -> (logits, new_cache)
+    loss_fn(cfg, params, batch)  -> (loss, metrics)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg, key, kind: str):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    sp = cfg.sparsity if cfg.sparsity.enabled else None
+    if kind == "dense":
+        return {"ln1": jnp.ones((d,), jnp.bfloat16),
+                "attn": L.init_attention(ks[0], cfg),
+                "ln2": jnp.ones((d,), jnp.bfloat16),
+                "ffn": L.init_ffn(ks[1], d, cfg.d_ff, sp)}
+    if kind == "moe":
+        return {"ln1": jnp.ones((d,), jnp.bfloat16),
+                "attn": L.init_attention(ks[0], cfg),
+                "ln2": jnp.ones((d,), jnp.bfloat16),
+                "moe": L.init_moe(ks[1], cfg)}
+    if kind == "rwkv":
+        return {"ln1": jnp.ones((d,), jnp.bfloat16),
+                "tmix": L.init_rwkv6(ks[0], cfg),
+                "ln2": jnp.ones((d,), jnp.bfloat16),
+                "cmix": L.init_rwkv_cmix(ks[1], cfg)}
+    if kind == "mamba":
+        return {"ln1": jnp.ones((d,), jnp.bfloat16),
+                "mamba": L.init_mamba2(ks[0], cfg)}
+    if kind == "encdec":   # whisper decoder block
+        return {"ln1": jnp.ones((d,), jnp.bfloat16),
+                "attn": L.init_attention(ks[0], cfg),
+                "ln_c": jnp.ones((d,), jnp.bfloat16),
+                "cross": L.init_attention(ks[1], cfg),
+                "ln2": jnp.ones((d,), jnp.bfloat16),
+                "ffn": L.init_ffn(ks[2], d, cfg.d_ff, sp)}
+    raise ValueError(kind)
+
+
+def _block_kind(cfg) -> str:
+    return {"dense": "dense", "vlm": "dense", "moe": "moe",
+            "ssm": "rwkv", "hybrid": "mamba", "audio": "encdec"}[cfg.family]
+
+
+def init_params(cfg, key) -> PyTree:
+    kd = _block_kind(cfg)
+    k_embed, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "embed": L.dense_init(k_embed, (cfg.vocab_size, d), d),
+        "blocks": jax.vmap(lambda k: _init_block(cfg, k, kd))(
+            jax.random.split(k_blocks, cfg.n_layers)),
+        "final_norm": jnp.ones((d,), jnp.bfloat16),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.dense_init(k_head, (d, cfg.vocab_size), d)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        p["shared"] = _init_block(cfg, k_extra, "dense")
+    if cfg.family == "audio":
+        ke = jax.random.split(k_extra, cfg.encoder_layers + 1)
+        p["encoder"] = {
+            "blocks": jax.vmap(lambda k: _init_block(cfg, k, "dense"))(
+                ke[:-1]),
+            "norm": jnp.ones((d,), jnp.bfloat16),
+        }
+    return p
+
+
+def abstract_params(cfg):
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# --- decode caches ----------------------------------------------------------
+
+def _attn_sites(cfg) -> int:
+    if cfg.family != "hybrid" or not cfg.hybrid_attn_every:
+        return 0
+    return sum(1 for l in range(cfg.n_layers)
+               if (l + 1) % cfg.hybrid_attn_every == 0)
+
+
+def init_cache(cfg, batch: int, max_seq: int) -> PyTree:
+    """Zeroed decode cache. Shapes are the dry-run input specs."""
+    d, kvh, dh = cfg.d_model, cfg.kv_heads, cfg.head_dim
+    Lh = cfg.n_layers
+    f = cfg.family
+    bf = jnp.bfloat16
+    if f in ("dense", "vlm", "moe"):
+        return {"kv": jnp.zeros((Lh, 2, batch, max_seq, kvh, dh), bf)}
+    if f == "audio":
+        te = cfg.encoder_seq
+        return {"kv": jnp.zeros((Lh, 2, batch, max_seq, kvh, dh), bf),
+                "cross_kv": jnp.zeros((Lh, 2, batch, te, kvh, dh), bf)}
+    if f == "ssm":
+        nh = cfg.n_heads
+        return {"x_prev_t": jnp.zeros((Lh, batch, 1, d), bf),
+                "x_prev_c": jnp.zeros((Lh, batch, 1, d), bf),
+                "wkv": jnp.zeros((Lh, batch, nh, dh, dh), jnp.float32)}
+    if f == "hybrid":
+        nh, hdh = L._mamba_heads(cfg)
+        d_in = cfg.ssm_expand * d
+        n = cfg.ssm_state
+        w = cfg.attn_window or max_seq
+        sites = max(_attn_sites(cfg), 1)
+        return {
+            "conv": jnp.zeros((Lh, batch, cfg.ssm_conv - 1, d_in + 2 * n), bf),
+            "ssm": jnp.zeros((Lh, batch, nh, n, hdh), jnp.float32),
+            "attn_kv": jnp.zeros((sites, 2, batch, min(w, max_seq), kvh, dh), bf),
+        }
+    raise ValueError(f)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _logits(cfg, params, h):
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return L.fdot("btd,dv->btv", h, w).astype(jnp.float32)
+
+
+# Optional activation-boundary sharding (sequence parallelism at the
+# layer boundary, Megatron-SP style). Set by launchers running under a
+# mesh; None for plain CPU tests.
+_BOUNDARY = {"spec": None, "mesh": None}
+
+
+def set_boundary_spec(spec, mesh=None) -> None:
+    """spec: PartitionSpec for (B, T, d) layer-boundary activations, or
+    None to disable. mesh: the Mesh (for divisibility checks). The
+    attention-internals constraint is set separately
+    (layers.set_decode_attn_sharding) — enabling it for pure-DP models
+    forces batch resharding and regressed smollm 0.68 -> 0.01 MFU."""
+    _BOUNDARY["spec"] = spec
+    _BOUNDARY["mesh"] = mesh
+
+
+def _constrain(h):
+    spec = _BOUNDARY["spec"]
+    mesh = _BOUNDARY["mesh"]
+    if spec is None or mesh is None:
+        return h
+    from jax.sharding import PartitionSpec as P
+    sizes = dict(mesh.shape)
+    ok = []
+    for i, p in enumerate(tuple(spec)[:h.ndim]):
+        if p is None:
+            ok.append(None)
+            continue
+        size = 1
+        for ax in (p if isinstance(p, tuple) else (p,)):
+            size *= sizes.get(ax, 1)
+        ok.append(p if h.shape[i] % size == 0 and h.shape[i] >= size else None)
+    ok += [None] * (h.ndim - len(ok))
+    return jax.lax.with_sharding_constraint(h, P(*ok))
+
+
+def chunked_softmax_xent(cfg, params, h, labels, *, n_chunks: int = 16):
+    """Cross entropy without materializing (B, T, V) logits: scan over
+    sequence chunks. Returns (sum_nll, n_valid)."""
+    b, t, d = h.shape
+    while t % n_chunks:
+        n_chunks -= 1
+    c = t // n_chunks
+    hc = h.reshape(b, n_chunks, c, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n_chunks, c).swapaxes(0, 1)
+
+    def chunk(carry, xs):
+        s, n = carry
+        hh, ll = xs
+        logits = _logits(cfg, params, hh)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, ll[..., None].clip(0), -1)[..., 0]
+        mask = (ll >= 0).astype(jnp.float32)
+        return (s + (nll * mask).sum(), n + mask.sum()), None
+
+    chunk_r = jax.checkpoint(chunk, prevent_cse=False)  # don't store logp
+    (s, n), _ = lax.scan(chunk_r, (jnp.zeros(()), jnp.zeros(())), (hc, lc))
+    return s, n
+
+
+def _run_encoder(cfg, params, frames, unroll: bool = False):
+    """Whisper encoder over stub frame embeddings (B, Te, d)."""
+    h = frames
+    pos = jnp.arange(h.shape[1])[None, :]
+
+    def blk(h, p):
+        a, _ = L.attention(p["attn"], cfg, L.rms_norm(h, p["ln1"], cfg.norm_eps),
+                           positions=pos, causal=False)
+        h = h + a
+        h = h + L.ffn(p["ffn"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+        return h, None
+
+    h, _ = lax.scan(blk, h, params["encoder"]["blocks"],
+                    unroll=cfg.encoder_layers if unroll else 1)
+    return L.rms_norm(h, params["encoder"]["norm"], cfg.norm_eps)
+
+
+def _shared_attn_block(cfg, params, h, positions, kv_cache=None, cache_pos=None):
+    p = params["shared"]
+    a, newkv = L.attention(p["attn"], cfg,
+                           L.rms_norm(h, p["ln1"], cfg.norm_eps),
+                           positions=positions, window=cfg.attn_window,
+                           kv_cache=kv_cache, cache_pos=cache_pos)
+    h = h + a
+    h = h + L.ffn(p["ffn"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+    return h, newkv
+
+
+def make_block_fn(cfg, params, positions, enc_out=None):
+    """Per-layer block function ``(h, p) -> (h, aux)``. Shared by
+    forward() (scanned) and the HPIPE pipeline executor (staged)."""
+    kind = _block_kind(cfg)
+
+    def block(h, p):
+        aux = jnp.zeros((), jnp.float32)
+        if kind in ("dense", "moe", "encdec"):
+            a, _ = L.attention(p["attn"], cfg,
+                               L.rms_norm(h, p["ln1"], cfg.norm_eps),
+                               positions=positions, window=cfg.attn_window)
+            # constrain the TP partial-sum back to the boundary sharding
+            # BEFORE the residual add: GSPMD then reduce-scatters (half
+            # the all-reduce bytes), the Megatron-SP pattern.
+            h = h + _constrain(a)
+            if kind == "encdec":
+                h = h + _constrain(L.cross_attention(
+                    p["cross"], cfg, L.rms_norm(h, p["ln_c"], cfg.norm_eps),
+                    enc_out))
+            hn = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+            if kind == "moe":
+                mo, aux = L.moe(p["moe"], cfg, hn)
+                h = h + _constrain(mo)
+            else:
+                h = h + _constrain(L.ffn(p["ffn"], hn))
+        elif kind == "rwkv":
+            a, _ = L.rwkv6_forward(p["tmix"], cfg,
+                                   L.rms_norm(h, p["ln1"], cfg.norm_eps))
+            h = h + a
+            c, _ = L.rwkv_cmix(p["cmix"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+            h = h + c
+        elif kind == "mamba":
+            m, _ = L.mamba2_forward(p["mamba"], cfg,
+                                    L.rms_norm(h, p["ln1"], cfg.norm_eps))
+            h = h + m
+        return h, aux
+
+    return block
+
+
+def make_pipeline_block_fn(cfg, shared_params, positions):
+    """Block fn for the stage pipeline: x -> x, zamba2 shared-attn flag
+    folded into the per-layer params as ``_attn_flag``; aux dropped."""
+    block = make_block_fn(cfg, shared_params, positions)
+
+    def fn(p, h):
+        flag = p.get("_attn_flag") if isinstance(p, dict) else None
+        if flag is not None:
+            p = {k: v for k, v in p.items() if k != "_attn_flag"}
+        h2, _ = block(h, p)
+        if flag is not None:
+            h2 = lax.cond(
+                flag.astype(bool),
+                lambda h: _shared_attn_block(cfg, shared_params, h,
+                                             positions)[0],
+                lambda h: h, h2)
+        return h2
+
+    return fn
+
+
+def forward(cfg, params, tokens, *, extra: Optional[dict] = None,
+            remat: str = "full", logits_mode: str = "full",
+            unroll: bool = False):
+    """Full-sequence forward -> (logits | hidden, aux_losses).
+
+    extra: {"frames": (B,Te,d)} for audio, {"patches": (B,Vt,d)} for vlm.
+    logits_mode: "full" (B,T,V) | "last" (B,V) | "hidden" (return h).
+    unroll: unroll the layer scan (dry-run cost-extrapolation probes).
+    """
+    extra = extra or {}
+    f = cfg.family
+    h = _embed(cfg, params, tokens)
+    if f == "vlm":
+        h = jnp.concatenate([extra["patches"].astype(h.dtype), h], axis=1)
+    b, t, d = h.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    enc_out = (_run_encoder(cfg, params, extra["frames"], unroll=unroll)
+               if f == "audio" else None)
+
+    kind = _block_kind(cfg)
+    block0 = make_block_fn(cfg, params, positions, enc_out)
+
+    def block(h, p):
+        h2, aux = block0(h, p)
+        return _constrain(h2), aux
+
+    if kind == "mamba" and cfg.hybrid_attn_every:
+        flags = jnp.array([(l + 1) % cfg.hybrid_attn_every == 0
+                           for l in range(cfg.n_layers)])
+
+        def block_h(h, xs):
+            p, flag = xs
+            h, aux = block(h, p)
+            h = lax.cond(flag,
+                         lambda h: _shared_attn_block(cfg, params, h,
+                                                      positions)[0],
+                         lambda h: h, h)
+            return h, aux
+
+        fn = block_h
+        xs = (params["blocks"], flags)
+    else:
+        fn = block
+        xs = params["blocks"]
+
+    if remat == "full":
+        fn = jax.checkpoint(fn, prevent_cse=False)
+    elif remat == "dots":
+        fn = jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False)
+    h, auxs = lax.scan(fn, h, xs, unroll=cfg.n_layers if unroll else 1)
+    if logits_mode == "hidden":
+        return h, auxs.sum()
+    if logits_mode == "last":
+        return _logits(cfg, params, h[:, -1:])[:, 0], auxs.sum()
+    logits = _logits(cfg, params, h)
+    return logits, auxs.sum()
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg, params, cache, tokens, pos, *, extra=None,
+                unroll: bool = False):
+    """One-token decode. tokens: (B, 1); pos: scalar int32 position.
+
+    Returns (logits (B,1,V), new_cache)."""
+    UN = cfg.n_layers if unroll else 1
+    extra = extra or {}
+    f = cfg.family
+    h = _embed(cfg, params, tokens)
+    b = h.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    kind = _block_kind(cfg)
+
+    if kind in ("dense", "moe", "encdec"):
+        def block(h, xs):
+            p, kv = xs[0], xs[1]                    # kv: (2,B,S,KVH,Dh)
+            a, newkv = L.attention(p["attn"], cfg,
+                                   L.rms_norm(h, p["ln1"], cfg.norm_eps),
+                                   positions=positions, window=cfg.attn_window,
+                                   kv_cache=(kv[0], kv[1]), cache_pos=pos)
+            h = h + a
+            if kind == "encdec":
+                ckv = xs[2]                          # (2,B,Te,KVH,Dh)
+                h = h + _cross_decode(p["cross"], cfg,
+                                      L.rms_norm(h, p["ln_c"], cfg.norm_eps),
+                                      ckv)
+            hn = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+            if kind == "moe":
+                mo, _ = L.moe(p["moe"], cfg, hn)
+                h = h + mo
+            else:
+                h = h + L.ffn(p["ffn"], hn)
+            return h, jnp.stack(newkv)
+
+        if kind == "encdec":
+            xs = (params["blocks"], cache["kv"], cache["cross_kv"])
+        else:
+            xs = (params["blocks"], cache["kv"])
+        h, newkv = lax.scan(block, h, xs, unroll=UN)
+        new_cache = dict(cache, kv=newkv)
+
+    elif kind == "rwkv":
+        def block(h, xs):
+            p, xp_t, xp_c, wkv = xs
+            a, st = L.rwkv6_forward(p["tmix"], cfg,
+                                    L.rms_norm(h, p["ln1"], cfg.norm_eps),
+                                    state={"x_prev": xp_t, "wkv": wkv})
+            h = h + a
+            c, xp_c2 = L.rwkv_cmix(p["cmix"],
+                                   L.rms_norm(h, p["ln2"], cfg.norm_eps),
+                                   x_prev=xp_c)
+            h = h + c
+            return h, (st["x_prev"], xp_c2, st["wkv"])
+
+        h, (xt, xc, wkv) = lax.scan(
+            block, h, (params["blocks"], cache["x_prev_t"],
+                       cache["x_prev_c"], cache["wkv"]), unroll=UN)
+        new_cache = {"x_prev_t": xt, "x_prev_c": xc, "wkv": wkv}
+
+    elif kind == "mamba":
+        every = cfg.hybrid_attn_every
+        flags = jnp.array([(l + 1) % every == 0 if every else False
+                           for l in range(cfg.n_layers)])
+        sites = jnp.cumsum(flags) - 1                # site id at flagged layers
+        w = cache["attn_kv"].shape[3]                # ring size
+
+        def block(carry, xs):
+            h, attn_kv = carry
+            p, conv, ssm, flag, site = xs
+            m, st = L.mamba2_forward(p["mamba"], cfg,
+                                     L.rms_norm(h, p["ln1"], cfg.norm_eps),
+                                     state={"conv": conv, "ssm": ssm})
+            h = h + m
+
+            def with_attn(h, attn_kv):
+                kv = lax.dynamic_index_in_dim(attn_kv, site, 0, keepdims=False)
+                rpos = pos % w                        # ring-buffer write slot
+                h2, newkv = _ring_attn_block(cfg, params, h, positions,
+                                             (kv[0], kv[1]), rpos, pos, w)
+                attn_kv = lax.dynamic_update_index_in_dim(
+                    attn_kv, jnp.stack(newkv), site, 0)
+                return h2, attn_kv
+
+            h, attn_kv = lax.cond(flag, with_attn,
+                                  lambda h, a: (h, a), h, attn_kv)
+            return (h, attn_kv), (st["conv"], st["ssm"])
+
+        (h, attn_kv), (conv, ssm) = lax.scan(
+            block, (h, cache["attn_kv"]),
+            (params["blocks"], cache["conv"], cache["ssm"], flags, sites),
+            unroll=UN)
+        new_cache = {"conv": conv, "ssm": ssm, "attn_kv": attn_kv}
+
+    logits = _logits(cfg, params, h)
+    return logits, new_cache
+
+
+def _cross_decode(p, cfg, x, ckv):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    b, t, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"]).astype(x.dtype)
+    k = L._repeat_kv(ckv[0], h // kv)
+    v = L._repeat_kv(ckv[1], h // kv)
+    import math as _m
+    s = L.fdot("bqhd,bkhd->bhqk", q, k) / _m.sqrt(dh)
+    s = s.astype(jnp.float32)
+    o = L.fdot("bhqk,bkhd->bqhd",
+               jax.nn.softmax(s, -1).astype(v.dtype), v).astype(x.dtype)
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"]).astype(x.dtype)
+
+
+def _ring_attn_block(cfg, params, h, positions, kv, rpos, pos, window):
+    """Shared attention block against a ring-buffer KV cache (zamba2 at
+    long context). K/V were rope'd at absolute positions when written."""
+    p = params["shared"]
+    pa = p["attn"]
+    x = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    b, t, d = x.shape
+    nh, kvh, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, pa["wq"]).astype(x.dtype)
+    k = jnp.einsum("btd,dhk->bthk", x, pa["wk"]).astype(x.dtype)
+    v = jnp.einsum("btd,dhk->bthk", x, pa["wv"]).astype(x.dtype)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, pa["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, pa["k_norm"], cfg.norm_eps)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    hot = (jnp.arange(kv[0].shape[1]) == rpos)[None, :, None, None]
+    ck = jnp.where(hot, k.astype(kv[0].dtype), kv[0])
+    cv = jnp.where(hot, v.astype(kv[1].dtype), kv[1])
+    kk = L._repeat_kv(ck, nh // kvh)
+    vv = L._repeat_kv(cv, nh // kvh)
+    import math as _m
+    s = L.fdot("bqhd,bkhd->bhqk", q, kk) / _m.sqrt(dh)
+    s = L._constrain_scores(s.astype(jnp.float32))
+    slot = jnp.arange(window)
+    valid = slot[None, None, None, :] <= jnp.minimum(pos, window - 1)
+    s = jnp.where(valid, s, -jnp.inf)
+    o = L.fdot("bhqk,bkhd->bqhd",
+               jax.nn.softmax(s, -1).astype(vv.dtype), vv).astype(x.dtype)
+    a = jnp.einsum("bthk,hkd->btd", o, pa["wo"]).astype(x.dtype)
+    h = h + a
+    h = h + L.ffn(p["ffn"], L.rms_norm(h, p["ln2"], cfg.norm_eps))
+    return h, (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg, params, batch, *, remat: str = "full",
+            unroll: bool = False):
+    """batch: {"tokens": (B,T), "labels": (B,T), ["frames"|"patches"]}.
+
+    Cross entropy is computed in sequence chunks so the (B, T, V) f32
+    logits tensor never materializes (vocab up to 164k!)."""
+    extra = {k: batch[k] for k in ("frames", "patches") if k in batch}
+    h, aux = forward(cfg, params, batch["tokens"], extra=extra,
+                     remat=remat, logits_mode="hidden", unroll=unroll)
+    labels = batch["labels"]
+    if cfg.family == "vlm":                      # image prefix carries no loss
+        h = h[:, -labels.shape[1]:]
+    s, n = chunked_softmax_xent(cfg, params, h, labels)
+    loss = s / jnp.maximum(n, 1.0)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}

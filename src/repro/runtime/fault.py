@@ -1,0 +1,154 @@
+"""Fault tolerance + distributed-optimization runtime.
+
+Scoped for 1000+ nodes but testable on one CPU:
+- checkpoint/restart loop with failure injection (``run_with_restarts``)
+- straggler detection (per-step EMA; flags hosts whose step time exceeds
+  k x the fleet median — at scale the response is to evict + re-mesh)
+- elastic re-meshing: the same checkpoint restores onto a smaller/larger
+  data-parallel width (checkpoint/ckpt.py resharding + the data
+  pipeline's (seed, step, shard) determinism make this stateless)
+- int8 gradient compression with error feedback for the DP all-reduce.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class InjectedFailure(RuntimeError):
+    """Simulated node failure (SIGKILL-equivalent for tests)."""
+
+
+@dataclass
+class FailureInjector:
+    fail_at_steps: tuple = ()
+    _fired: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+def run_with_restarts(make_state: Callable[[], Any],
+                      step_fn: Callable[[Any, int], Any],
+                      *, n_steps: int, ckpt_dir: str, ckpt_every: int = 10,
+                      max_restarts: int = 5,
+                      injector: Optional[FailureInjector] = None,
+                      saver=None):
+    """Generic resilient loop: state = step_fn(state, step); checkpoints
+    every ``ckpt_every``; on failure, restores the latest checkpoint and
+    resumes (replaying at most ckpt_every-1 steps). Returns (state,
+    restart_count, steps_executed)."""
+    from repro.checkpoint import ckpt
+    if saver is None:
+        saver = ckpt.AsyncSaver()
+    restarts = 0
+    executed = 0
+    state = make_state()
+    start = 0
+    last = ckpt.latest_step(ckpt_dir)
+    if last is not None:
+        state, start = ckpt.restore(state, ckpt_dir, last)
+        start += 1
+    step = start
+    while step < n_steps:
+        try:
+            if injector is not None:
+                injector.maybe_fail(step)
+            state = step_fn(state, step)
+            executed += 1
+            if step % ckpt_every == 0:
+                saver.save(state, ckpt_dir, step)
+            step += 1
+        except InjectedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            saver.wait()
+            last = ckpt.latest_step(ckpt_dir)
+            if last is None:                      # failed before 1st ckpt
+                state, step = make_state(), 0
+            else:
+                state, last_step = ckpt.restore(make_state(), ckpt_dir, last)
+                step = last_step + 1
+    saver.wait()
+    return state, restarts, executed
+
+
+@dataclass
+class StragglerDetector:
+    """Flags slow steps/hosts. At fleet scale the per-host step times
+    arrive via the coordinator heartbeat; here we feed them directly."""
+    threshold: float = 2.0          # x median
+    window: int = 32
+    _times: list = field(default_factory=list)
+    flagged: list = field(default_factory=list)
+
+    def record(self, host: int, step: int, dt: float) -> bool:
+        self._times.append(dt)
+        self._times = self._times[-self.window:]
+        med = float(np.median(self._times))
+        slow = len(self._times) >= 4 and dt > self.threshold * med
+        if slow:
+            self.flagged.append((host, step, dt, med))
+        return slow
+
+
+# --- elastic re-meshing ------------------------------------------------------
+
+def remesh(tree, old_mesh, new_mesh, spec_fn):
+    """Re-place a pytree from one mesh onto another (e.g. after losing a
+    pod: (2,16,16) -> (16,16)). spec_fn(path, leaf) -> PartitionSpec for
+    the NEW mesh."""
+    from jax.sharding import NamedSharding
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spec = spec_fn(path, leaf)
+        out.append(jax.device_put(np.asarray(leaf),
+                                  NamedSharding(new_mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --- gradient compression (int8 + error feedback) ---------------------------
+
+def compress_grads(grads, error):
+    """Per-leaf symmetric int8 quantization with error feedback.
+
+    Returns (q_grads {int8 data, f32 scale}, new_error). At scale the
+    int8 tensors are what crosses the DP axis (4x fewer all-reduce
+    bytes); error feedback keeps the quantization bias out of the
+    optimizer trajectory."""
+    def one(g, e):
+        if not jnp.issubdtype(g.dtype, jnp.floating):
+            return (g, jnp.ones((), jnp.float32), jnp.zeros_like(e))
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.abs(gf).max() / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        err = gf - q.astype(jnp.float32) * scale
+        return (q, scale, err)
+
+    triples = jax.tree.map(one, grads, error)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    q = jax.tree.map(lambda t: t[0], triples, is_leaf=is3)
+    s = jax.tree.map(lambda t: t[1], triples, is_leaf=is3)
+    e = jax.tree.map(lambda t: t[2], triples, is_leaf=is3)
+    return (q, s), e
+
+
+def decompress_grads(qg):
+    q, s = qg
+    return jax.tree.map(
+        lambda qq, ss: qq.astype(jnp.float32) * ss
+        if jnp.issubdtype(qq.dtype, jnp.signedinteger) else qq, q, s)
+
+
+def init_error(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_like)

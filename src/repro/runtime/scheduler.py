@@ -1,0 +1,182 @@
+"""Continuous-batching serving scheduler.
+
+HPIPE's deployment story is batch-1 streaming inference over PCIe; the
+TPU-pod analogue is a continuous-batching decode loop: a fixed pool of
+cache slots, new requests admitted into free slots every step, finished
+sequences retired immediately (no head-of-line blocking on the longest
+sequence in a batch). The decode step is a single compiled program of
+static shape (slot_count, 1) — admission/retirement happens purely in
+the cache/token buffers, so there is no recompilation at runtime.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (Tp,) int32
+    max_new_tokens: int
+    eos_id: int = -1                    # -1: never stops early
+    # filled by the scheduler
+    tokens: list = field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    done_at: Optional[float] = None
+
+
+@dataclass
+class SlotState:
+    rid: int = -1                       # -1 = free
+    pos: int = 0                        # next cache position
+    remaining: int = 0
+    prompt: Optional[np.ndarray] = None
+    prompt_idx: int = 0                 # how much of the prompt is fed
+
+
+class ContinuousBatcher:
+    """Drives ``decode_step`` over a slot pool.
+
+    decode_fn(params, cache, tokens (S,1), pos (S,)) -> (logits, cache)
+    must be a jit-compiled per-slot-position decode (see
+    lm.decode_step_batched_pos below for the per-slot-pos variant).
+    """
+
+    def __init__(self, cfg, params, *, slots: int, max_seq: int,
+                 decode_fn: Callable, init_cache_fn: Callable,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.decode_fn = decode_fn
+        self.cache = init_cache_fn(cfg, slots, max_seq)
+        self.state = [SlotState() for _ in range(slots)]
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}
+        self.finished: list[Request] = []
+        self.greedy = greedy
+        self._next_tok = np.zeros((slots, 1), np.int32)
+        self.steps = 0
+
+    def submit(self, req: Request):
+        req.submitted_at = time.time()
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, st in enumerate(self.state):
+            if st.rid >= 0 or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self.state[i] = SlotState(rid=req.rid, pos=0,
+                                      remaining=req.max_new_tokens,
+                                      prompt=req.prompt, prompt_idx=0)
+            self.active[req.rid] = req
+            self._next_tok[i, 0] = req.prompt[0]
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s.rid >= 0 for s in self.state)
+
+    def step(self):
+        """One decode step across all slots (prefilling slots consume
+        their next prompt token; generating slots consume the sampled
+        token). Static shapes: always (slots, 1)."""
+        self._admit()
+        pos = np.array([s.pos for s in self.state], np.int32)
+        toks = jnp.asarray(self._next_tok)
+        logits, self.cache = self.decode_fn(self.params, self.cache, toks,
+                                            jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        self.steps += 1
+        now = time.time()
+        for i, st in enumerate(self.state):
+            if st.rid < 0:
+                continue
+            req = self.active[st.rid]
+            st.pos += 1
+            if st.prompt_idx + 1 < len(st.prompt):
+                # still prefilling: feed the next prompt token
+                st.prompt_idx += 1
+                self._next_tok[i, 0] = st.prompt[st.prompt_idx]
+                continue
+            # generating
+            tok = int(nxt[i])
+            if req.first_token_at is None:
+                req.first_token_at = now
+            req.tokens.append(tok)
+            st.remaining -= 1
+            self._next_tok[i, 0] = tok
+            if (st.remaining <= 0 or tok == req.eos_id
+                    or st.pos >= self.max_seq - 1):
+                req.done_at = now
+                self.finished.append(req)
+                del self.active[st.rid]
+                self.state[i] = SlotState()    # slot free next step
+
+    def run(self, *, max_steps: int = 100_000):
+        while self.busy and self.steps < max_steps:
+            self.step()
+        return self.finished
+
+    def stats(self) -> dict:
+        done = [r for r in self.finished if r.done_at]
+        if not done:
+            return {"finished": 0}
+        lat = [r.done_at - r.submitted_at for r in done]
+        ttft = [r.first_token_at - r.submitted_at for r in done
+                if r.first_token_at]
+        toks = sum(len(r.tokens) for r in done)
+        span = max(r.done_at for r in done) - min(r.submitted_at
+                                                  for r in done)
+        return {"finished": len(done), "tokens": toks,
+                "throughput_tok_s": toks / max(span, 1e-9),
+                "mean_latency_s": float(np.mean(lat)),
+                "mean_ttft_s": float(np.mean(ttft)) if ttft else None,
+                "decode_steps": self.steps}
+
+
+def make_per_slot_decode(cfg):
+    """decode_step with a PER-SLOT position vector (continuous batching
+    needs different cache positions per slot)."""
+    from repro.models import lm
+
+    def batched(params, cache, toks, pos):
+        # vmap over the slot axis: each slot has its own position. The
+        # cache layouts put the batch axis at index 2 (kv) / 1 (states),
+        # so we vmap with per-leaf in_axes.
+        def slot_axis(path, leaf):
+            from repro.launch.shardings import _path_names
+            name = _path_names(path)[-1]
+            return 2 if name in ("kv", "cross_kv", "attn_kv") else 1
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        axes = jax.tree_util.tree_unflatten(
+            treedef, [slot_axis(p, l) for p, l in flat])
+
+        def one(cache_i, tok_i, pos_i):
+            ci = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
+                              cache_i, axes)
+            lg, nc = lm.decode_step(cfg, params, ci, tok_i[None], pos_i)
+            nc = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax), nc, axes)
+            return lg[0], nc
+
+        logits, newc = jax.vmap(one, in_axes=(axes, 0, 0),
+                                out_axes=(0, axes))(cache, toks, pos)
+        return logits, newc
+
+    return jax.jit(batched)
+
+
+def make_slot_cache(cfg, slots, max_seq):
+    """Per-slot cache (slot axis where the batch axis was)."""
+    from repro.models import lm
+    return lm.init_cache(cfg, slots, max_seq)

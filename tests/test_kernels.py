@@ -1,0 +1,130 @@
+"""Per-kernel allclose vs the pure-jnp oracles, sweeping shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SparsityConfig
+from repro.core import sparsity as S
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sparse_matmul import sparse_matmul_pallas
+from repro.models.layers import blockwise_attention
+
+
+@pytest.mark.parametrize("d_in,d_out,bm,bn,sp", [
+    (64, 64, 16, 16, 0.5),
+    (128, 96, 16, 32, 0.75),
+    (256, 128, 32, 16, 0.85),
+    (64, 256, 8, 64, 0.25),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sparse_matmul_allclose(d_in, d_out, bm, bn, sp, dtype):
+    cfg = SparsityConfig(enabled=True, sparsity=sp, block_m=bm, block_n=bn)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(k1, (d_in, d_out), jnp.float32).astype(dtype)
+    sw = S.to_block_balanced(w, cfg)
+    x = jax.random.normal(k2, (24, d_in), jnp.float32).astype(dtype)
+    y_ref = ref.sparse_matmul_ref(x, sw)
+    y_xla = ops.sparse_matmul(x, sw)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y_xla, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol)
+    y_pal = sparse_matmul_pallas(x, sw.vals, sw.idx, block_m_x=8)
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_sparse_matmul_batched_input():
+    cfg = SparsityConfig(enabled=True, sparsity=0.5, block_m=16, block_n=16)
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    sw = S.to_block_balanced(w, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 64))
+    y = ops.sparse_matmul(x, sw)
+    assert y.shape == (2, 5, 32)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.sparse_matmul_ref(x, sw)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("tq,tk,causal,window", [
+    (128, 128, True, 0),
+    (128, 128, False, 0),
+    (64, 256, True, 0),     # cross-length
+    (128, 128, True, 48),   # sliding window
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_allclose(tq, tk, causal, window, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, H, D = 2, 3, 32
+    q = jax.random.normal(k1, (B, tq, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, tk, H, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, tk, H, D), jnp.float32).astype(dtype)
+    offset = tk - tq if tq != tk else 0
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=offset)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 q_offset=offset, block_q=32, block_k=64)
+    tol = 2e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    got2 = blockwise_attention(q, k, v, causal=causal, window=window,
+                               q_offset=offset, block_q=32, block_k=64)
+    np.testing.assert_allclose(np.asarray(got2, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_padded_lengths():
+    # tq/tk not multiples of block sizes (XLA path handles padding)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(k1, (1, 100, 2, 16))
+    k = jax.random.normal(k2, (1, 100, 2, 16))
+    v = jax.random.normal(k3, (1, 100, 2, 16))
+    want = ref.attention_ref(q, k, v, causal=True)
+    got = blockwise_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("k,stride,c,hw", [
+    (3, 1, 8, 16), (3, 2, 16, 17), (5, 1, 8, 12), (5, 2, 8, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_depthwise_conv_allclose(k, stride, c, hw, dtype):
+    from repro.kernels.depthwise_conv import (depthwise_conv_pallas,
+                                              depthwise_conv_ref)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, (2, hw, hw, c), jnp.float32).astype(dtype)
+    w = jax.random.normal(k2, (k, k, c), jnp.float32).astype(dtype)
+    want = depthwise_conv_ref(x, w, stride=stride)
+    got = depthwise_conv_pallas(x, w, stride=stride, block_c=min(c, 8))
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_mobilenet_forward_with_pallas_depthwise():
+    """End-to-end MobileNet-V1 with the Pallas depthwise path."""
+    from repro.configs import get_config
+    from repro.kernels import ops
+    from repro.models import cnn
+    cfg = get_config("mobilenet_v1")
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+    img = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
+    ref_logits = cnn.cnn_forward(cfg, params, img)
+    ops.set_impl("pallas")
+    try:
+        # only the depthwise dispatch differs; sparse matmuls need
+        # aligned token counts for the pallas path, keep xla for them by
+        # checking shapes inside ops (pallas sparse needs M%8==0; 32x32
+        # image gives M=1024 ✓)
+        pal_logits = cnn.cnn_forward(cfg, params, img)
+    finally:
+        ops.set_impl("xla")
+    np.testing.assert_allclose(np.asarray(pal_logits), np.asarray(ref_logits),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests (reduced configs) + consistency checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, all_configs, applicable, get_config, reduced
+from repro.models import cnn, lm
+
+LM_ARCHS = [n for n, c in sorted(all_configs().items()) if c.family != "cnn"]
+CNN_ARCHS = ["resnet50", "mobilenet_v1", "mobilenet_v2"]
+KEY = jax.random.PRNGKey(0)
+
+
+def _extra(r, b):
+    e = {}
+    if r.family == "audio":
+        e["frames"] = jax.random.normal(KEY, (b, r.encoder_seq, r.d_model),
+                                        jnp.bfloat16)
+    if r.family == "vlm":
+        e["patches"] = jax.random.normal(KEY, (b, r.vision_tokens, r.d_model),
+                                         jnp.bfloat16)
+    return e
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_arch_forward_smoke(arch):
+    r = reduced(get_config(arch))
+    params = lm.init_params(r, KEY)
+    B, T = 2, 32
+    tokens = jax.random.randint(KEY, (B, T), 0, r.vocab_size)
+    logits, aux = lm.forward(r, params, tokens, extra=_extra(r, B))
+    t_out = T + (r.vision_tokens if r.family == "vlm" else 0)
+    assert logits.shape == (B, t_out, r.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_arch_train_step_smoke(arch):
+    from repro.launch import steps as steplib
+    r = reduced(get_config(arch))
+    params = lm.init_params(r, KEY)
+    B, T = 2, 16
+    toks = jax.random.randint(KEY, (B, T + 1), 0, r.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             **_extra(r, B)}
+    from repro.optim import adamw
+    step = steplib.make_train_step(
+        r, adamw.AdamWConfig(lr=0.05, warmup_steps=1), remat="none")
+    opt = adamw.init(params)
+    p2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed (global f32 delta; single bf16 leaves can
+    # round a tiny update away)
+    delta = sum(float(jnp.abs(a.astype(jnp.float32)
+                              - b.astype(jnp.float32)).sum())
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+                if jnp.issubdtype(a.dtype, jnp.floating))
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_arch_decode_smoke(arch):
+    r = reduced(get_config(arch))
+    params = lm.init_params(r, KEY)
+    B = 2
+    cache = lm.init_cache(r, B, 64)
+    tok = jax.random.randint(KEY, (B, 1), 0, r.vocab_size)
+    logits, cache2 = lm.decode_step(r, params, cache, tok, jnp.int32(0),
+                                    extra=_extra(r, B))
+    assert logits.shape == (B, 1, r.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "rwkv6-1.6b", "zamba2-7b",
+                                  "mistral-nemo-12b"])
+def test_forward_decode_consistency(arch):
+    """Token-by-token decode must reproduce the full forward pass."""
+    r = reduced(get_config(arch))
+    params = lm.init_params(r, KEY)
+    T = 10
+    toks = jax.random.randint(KEY, (1, T), 0, r.vocab_size)
+    full, _ = lm.forward(r, params, toks)
+    cache = lm.init_cache(r, 1, T)
+    step = jax.jit(lambda p, c, tk, i: lm.decode_step(r, p, c, tk, i))
+    outs = []
+    for t in range(T):
+        lg, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    rel = float(jnp.abs(full - dec).max() / (jnp.abs(full).max() + 1e-9))
+    assert rel < 0.02, rel
+
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_cnn_smoke(arch):
+    cfg = get_config(arch)
+    params = cnn.init_cnn(cfg, KEY)
+    img = jax.random.normal(KEY, (2, 64, 64, 3))
+    logits = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))(params, img)
+    assert logits.shape == (2, 1000)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_cnn_mac_counts_match_literature():
+    """ResNet-50 ~3.9 GMACs, MobileNet-V1 ~0.57, V2 ~0.30 at 224x224."""
+    gm = {n: sum(s.macs() for s in cnn.specs_for(n)) / 1e9 for n in CNN_ARCHS}
+    assert 3.7 < gm["resnet50"] < 4.2
+    assert 0.54 < gm["mobilenet_v1"] < 0.60
+    assert 0.28 < gm["mobilenet_v2"] < 0.33
+
+
+def test_applicability_matrix():
+    cells = [(a, s) for a, c in all_configs().items() if c.family != "cnn"
+             for s in SHAPES if applicable(c, SHAPES[s])]
+    assert len(cells) == 32          # 10*4 minus 8 long_500k skips
+    skipped = [(a, s) for a, c in all_configs().items() if c.family != "cnn"
+               for s in SHAPES if not applicable(c, SHAPES[s])]
+    assert all(s == "long_500k" for _, s in skipped)
+
+
+def test_loss_mask_ignores_negative_labels():
+    r = reduced(get_config("smollm-360m"))
+    params = lm.init_params(r, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, r.vocab_size)
+    lbl = toks.at[:, :8].set(-1)
+    loss_m, _ = lm.loss_fn(r, params, {"tokens": toks, "labels": lbl},
+                           remat="none")
+    loss_f, _ = lm.loss_fn(r, params, {"tokens": toks, "labels": toks},
+                           remat="none")
+    assert np.isfinite(float(loss_m)) and float(loss_m) != float(loss_f)

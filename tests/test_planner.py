@@ -1,0 +1,112 @@
+"""The HPIPE compiler: balancing, stage assignment, cost models."""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import planner, sparsity as S
+from repro.core.costmodel import (OpCost, lm_block_flops, op_cost_dense,
+                                  op_cost_unstructured)
+from repro.models import cnn
+
+
+def _ops(seed=0, n=8):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for i in range(n):
+        cout = int(rng.integers(4, 64))
+        units = int(rng.integers(8, 128))
+        nnz = int(rng.integers(1, units))
+        ops.append(op_cost_dense(f"op{i}", units, cout,
+                                 lines=int(rng.integers(1, 56)),
+                                 width=int(rng.integers(1, 56)),
+                                 nnz_per_co=nnz))
+    return ops
+
+
+def test_balance_respects_budget():
+    ops = _ops()
+    base = sum(op.resource(1) for op in ops)   # splits=1 floor
+    for budget in (base, base + 500, 5000):
+        plan = planner.balance(ops, budget)
+        assert plan.resources <= max(budget, base)
+
+
+def test_balance_improves_bottleneck():
+    ops = _ops()
+    unbal = max(op.cycles(1) for op in ops)
+    plan = planner.balance(ops, 5000)
+    assert plan.bottleneck_cycles <= unbal
+
+
+def test_balance_monotone_in_budget():
+    ops = _ops()
+    prev = None
+    for budget in (200, 800, 3200, 12800):
+        b = planner.balance(ops, budget).bottleneck_cycles
+        if prev is not None:
+            assert b <= prev
+        prev = b
+
+
+@settings(max_examples=25, deadline=None)
+@given(costs=st.lists(st.floats(0.1, 100.0), min_size=2, max_size=10),
+       n_stages=st.integers(1, 4))
+def test_assign_stages_optimal(costs, n_stages):
+    """DP must match brute force on small instances."""
+    n_stages = min(n_stages, len(costs))
+    c = np.array(costs)
+    stage_of = planner.assign_stages(c, n_stages)
+    # contiguity + completeness
+    assert len(stage_of) == len(c)
+    assert all(b - a in (0, 1) for a, b in zip(stage_of, stage_of[1:]))
+    got = max(c[np.array(stage_of) == s].sum()
+              for s in range(max(stage_of) + 1))
+    # brute force over all contiguous partitions
+    best = np.inf
+    n = len(c)
+    for cuts in itertools.combinations(range(1, n), n_stages - 1):
+        bounds = [0, *cuts, n]
+        m = max(c[bounds[i]:bounds[i + 1]].sum()
+                for i in range(len(bounds) - 1))
+        best = min(best, m)
+    assert got <= best + 1e-9
+
+
+def test_fig3_reproduction_shape():
+    """Balancing a sparse ResNet-50 yields a >=10x bottleneck reduction
+    at the paper's 5000-DSP budget (paper: 30x)."""
+    cfg = get_config("resnet50")
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+    ops = planner.cnn_op_costs(cfg, params)
+    unbal = max(op.cycles(1) for op in ops)
+    plan = planner.plan_cnn(cfg, params, 5000)
+    assert unbal / plan.bottleneck_cycles > 10.0
+    assert plan.resources <= 5000
+
+
+def test_partition_aware_beats_naive_on_unstructured():
+    """Sec IV: planning with the naive linear model on clumped
+    unstructured sparsity loses real throughput (paper: 23%)."""
+    ops = []
+    for s in cnn.specs_for("resnet50"):
+        if s.kind in ("conv", "fc"):
+            m = S.unstructured_mask(abs(hash(s.name)) % 2**31,
+                                    (s.k * s.k * s.cin, s.cout), 0.85,
+                                    clump=0.6)
+            ops.append(op_cost_unstructured(s.name, m, s.out_hw, s.out_hw))
+    aware = planner.balance(ops, 5000, model="aware")
+    naive = planner.balance(ops, 5000, model="naive")
+    true_naive = max(planner.evaluate(ops, naive.splits, "aware").values())
+    assert true_naive / aware.bottleneck_cycles > 1.10
+
+
+def test_lm_stage_costs_heterogeneous_for_hybrid():
+    cfg = get_config("zamba2-7b")
+    f = [lm_block_flops(cfg, 4096, 4, l) for l in range(cfg.n_layers)]
+    assert max(f) / min(f) > 1.5       # shared-attn layers cost more
+    out = planner.plan_lm_stages(cfg, 4096, 4, 2)
+    assert out["imbalance"] < 1.10     # balanced despite heterogeneity

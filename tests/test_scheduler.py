@@ -1,0 +1,67 @@
+"""Continuous-batching serving scheduler."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.runtime.scheduler import (ContinuousBatcher, Request,
+                                     make_per_slot_decode, make_slot_cache)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "rwkv6-1.6b"])
+def test_continuous_batching_completes_all(arch):
+    cfg = reduced(get_config(arch))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    cb = ContinuousBatcher(cfg, params, slots=2, max_seq=48,
+                           decode_fn=make_per_slot_decode(cfg),
+                           init_cache_fn=lambda c, s, m: make_slot_cache(c, s, m))
+    rng = np.random.default_rng(0)
+    n_req = 5                               # > slots: forces queueing
+    for rid in range(n_req):
+        cb.submit(Request(rid=rid,
+                          prompt=rng.integers(0, cfg.vocab_size,
+                                              size=rng.integers(3, 8)
+                                              ).astype(np.int32),
+                          max_new_tokens=int(rng.integers(2, 6))))
+    done = cb.run(max_steps=500)
+    assert len(done) == n_req
+    for r in done:
+        assert 1 <= len(r.tokens) <= r.max_new_tokens
+        assert all(0 <= t < cfg.vocab_size for t in r.tokens)
+    st = cb.stats()
+    assert st["finished"] == n_req
+    assert st["throughput_tok_s"] > 0
+    # continuous batching: total steps well under sequential sum
+    seq_steps = sum(len(r.prompt) + r.max_new_tokens
+                    for r in done)
+    assert cb.steps < seq_steps
+
+
+def test_scheduler_matches_unbatched_decode():
+    """A single request through the scheduler equals plain greedy decode."""
+    cfg = reduced(get_config("smollm-360m"))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.array([3, 7, 11, 2], np.int32)
+    cb = ContinuousBatcher(cfg, params, slots=1, max_seq=32,
+                           decode_fn=make_per_slot_decode(cfg),
+                           init_cache_fn=lambda c, s, m: make_slot_cache(c, s, m))
+    cb.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+    done = cb.run()
+    # reference: token-by-token greedy decode
+    import jax.numpy as jnp
+    cache = lm.init_cache(cfg, 1, 32)
+    toks = list(prompt)
+    logits = None
+    for i, t in enumerate(toks):
+        logits, cache = lm.decode_step(cfg, params, cache,
+                                       jnp.asarray([[t]], jnp.int32),
+                                       jnp.int32(i))
+    out = []
+    for j in range(5):
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        logits, cache = lm.decode_step(cfg, params, cache,
+                                       jnp.asarray([[nxt]], jnp.int32),
+                                       jnp.int32(len(prompt) + j))
+    assert done[0].tokens == out

@@ -1,0 +1,75 @@
+"""Property tests for the HPIPE sparse-weight layer (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import SparsityConfig
+from repro.core import sparsity as S
+
+
+@settings(max_examples=25, deadline=None)
+@given(ib=st.integers(2, 12), ob=st.integers(1, 6),
+       bm=st.sampled_from([4, 8, 16]), bn=st.sampled_from([4, 8]),
+       sp=st.floats(0.1, 0.95))
+def test_block_balanced_roundtrip(ib, ob, bm, bn, sp):
+    cfg = SparsityConfig(enabled=True, sparsity=sp, block_m=bm, block_n=bn)
+    key = jax.random.PRNGKey(ib * 100 + ob)
+    w = jax.random.normal(key, (ib * bm, ob * bn))
+    sw = S.to_block_balanced(w, cfg)
+    K = S.n_keep_blocks(ib, sp)
+    assert sw.vals.shape == (ob, K, bm, bn)
+    assert sw.idx.shape == (ob, K)
+    dense = np.asarray(S.densify(sw))
+    # kept blocks match original exactly; all others zero
+    wb = np.asarray(w).reshape(ib, bm, ob, bn)
+    for j in range(ob):
+        kept = set(np.asarray(sw.idx)[j].tolist())
+        for i in range(ib):
+            blk = dense.reshape(ib, bm, ob, bn)[i, :, j, :]
+            if i in kept:
+                np.testing.assert_array_equal(blk, wb[i, :, j, :])
+            else:
+                assert (blk == 0).all()
+    # idx ascending & unique per column (runlength-encodable)
+    idx = np.asarray(sw.idx)
+    assert (np.diff(idx, axis=1) > 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(ob=st.integers(1, 8), K=st.integers(1, 6), ib=st.integers(6, 30))
+def test_runlength_roundtrip(ob, K, ib):
+    K = min(K, ib)
+    rng = np.random.default_rng(ob * 31 + K)
+    # strictly ascending unique ids per row
+    idx = np.stack([np.sort(rng.choice(ib, K, replace=False))
+                    for _ in range(ob)])
+    rl = S.encode_runlength(idx)
+    assert (S.decode_runlength(rl) == idx).all()
+    assert (rl[:, 1:] > 0).all()       # strictly ascending -> positive deltas
+
+
+@settings(max_examples=20, deadline=None)
+@given(splits=st.integers(1, 8))
+def test_partition_counts_sum_to_K(splits):
+    cfg = SparsityConfig(enabled=True, sparsity=0.6, block_m=8, block_n=8)
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 64))
+    sw = S.to_block_balanced(w, cfg)
+    counts, padded = S.partition_for_splits(sw, splits)
+    K = sw.idx.shape[1]
+    assert (counts.sum(axis=1) == K).all()
+    assert padded >= int(np.ceil(K / splits))      # padding >= ideal
+    assert padded <= K
+
+
+def test_density():
+    cfg = SparsityConfig(enabled=True, sparsity=0.75, block_m=16, block_n=16)
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 64))
+    sw = S.to_block_balanced(w, cfg)
+    assert abs(S.density(sw) - 0.25) < 0.01
+
+
+def test_unstructured_mask_density():
+    m = S.unstructured_mask(0, (256, 128), 0.85, clump=0.5)
+    assert 0.10 < m.mean() < 0.20      # ~15% +- clumping noise
