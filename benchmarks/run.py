@@ -1,21 +1,29 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+Prints ``name,us_per_call,derived`` CSV rows. A module failure — at
+import or inside main() — prints its ERROR row and the suite
+continues; the exit code is nonzero iff any module failed."""
+import importlib
 import sys
 import traceback
 
+MODULES = ("balance_fig3", "planner_accuracy", "sparse_speedup",
+           "conv_fused", "throughput_tab4", "resources_tab2")
+
 
 def main() -> None:
-    from benchmarks import (balance_fig3, planner_accuracy, resources_tab2,
-                            sparse_speedup, throughput_tab4)
     print("name,us_per_call,derived")
-    for mod in (balance_fig3, planner_accuracy, sparse_speedup,
-                throughput_tab4, resources_tab2):
+    failed = []
+    for name in MODULES:
         try:
-            mod.main()
+            importlib.import_module(f"benchmarks.{name}").main()
         except Exception:
             traceback.print_exc()
-            print(f"{mod.__name__},0,ERROR")
-            sys.exit(1)
+            print(f"benchmarks.{name},0,ERROR")
+            failed.append(name)
+    if failed:
+        print(f"# {len(failed)} module(s) failed: {', '.join(failed)}",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -69,6 +69,30 @@ def op_cost_from_sparse(name: str, sw: SparseWeight, lines: int,
                   n_in_units=sw.d_in // sw.vals.shape[-2], idx=idx)
 
 
+def op_cost_conv_sparse(name: str, sw: SparseWeight, k: int, cin: int,
+                        lines: int, width: int) -> OpCost:
+    """Cost of the fused implicit-GEMM sparse conv.
+
+    Each surviving block is one (ky, kx, channel-block) gather of the
+    unexpanded activation, so the partitionable unit axis is ordered
+    channel-block-major (flat id = cb*k*k + ky*k + kx): a channel split
+    owns a contiguous range of line-buffer channel blocks (finer splits
+    subdivide a block's k*k kernel positions), and its per-output-column
+    load is its surviving-block *gather count* — k^2-position-aware, not
+    the flattened-matmul row axis the im2col formulation implied.
+    """
+    from repro.kernels.sparse_conv import conv_block_coords
+    bm = sw.vals.shape[-2]
+    assert cin % bm == 0, (cin, bm)
+    cpb = cin // bm
+    idx = np.asarray(sw.idx)
+    ky, kx, cb = conv_block_coords(idx, k, cin, bm)   # the kernel's decode
+    gather_id = cb * (k * k) + ky * k + kx            # channel-major unit axis
+    nnz = np.full(idx.shape[0], idx.shape[1], np.int64)
+    return OpCost(name=name, lines=lines, width=width, nnz_per_co=nnz,
+                  n_in_units=cpb * k * k, idx=gather_id)
+
+
 def op_cost_dense(name: str, cin_units: int, cout: int, lines: int,
                   width: int, nnz_per_co: Optional[int] = None) -> OpCost:
     nnz = np.full(cout, nnz_per_co if nnz_per_co else cin_units, np.int64)

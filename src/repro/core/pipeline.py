@@ -104,12 +104,21 @@ def pipeline_apply(stage_fn: Callable, stage_params: PyTree, mask, x_mb,
                                   jnp.arange(m + n_stages - 1))
         return outs[None]                                 # add stage dim back
 
-    f = jax.shard_map(
-        per_device, mesh=mesh,
-        in_specs=(P(stage_axis), P(stage_axis), P()),
-        out_specs=P(stage_axis),
-        check_vma=False,
-        axis_names=frozenset({stage_axis}))   # other mesh axes stay auto
+    in_specs = (P(stage_axis), P(stage_axis), P())
+    out_specs = P(stage_axis)
+    if hasattr(jax, "shard_map"):             # jax >= 0.6
+        f = jax.shard_map(
+            per_device, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+            axis_names=frozenset({stage_axis}))  # other mesh axes stay auto
+    else:                                     # 0.4.x experimental API
+        # full manual: partial-auto lowers axis_index to a PartitionId
+        # op the XLA:CPU SPMD partitioner rejects. Non-stage axes are
+        # replicated per the specs (costs an all-gather of x_mb on
+        # multi-axis meshes; prefer pipeline_apply_gspmd there).
+        from jax.experimental.shard_map import shard_map as _sm
+        f = _sm(per_device, mesh=mesh, in_specs=in_specs,
+                out_specs=out_specs, check_rep=False)
     outs_all = f(stage_params, mask, x_mb)                # (S, M, mb, T, d)
     return outs_all[-1]                                   # last stage's slice
 

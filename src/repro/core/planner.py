@@ -18,7 +18,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.costmodel import OpCost, lm_block_flops, op_cost_from_sparse, op_cost_dense
+from repro.core.costmodel import (OpCost, lm_block_flops, op_cost_conv_sparse,
+                                  op_cost_dense, op_cost_from_sparse)
 
 
 @dataclass
@@ -81,9 +82,6 @@ def balance(ops: list[OpCost], budget: int, *, model: str = "aware",
         cycles[name] = op.cycles(s + 1, model)
         heapq.heappush(heap, (-cycles[name], name))
         # other ops' stale entries re-enter lazily
-        if all(n in frozen for n in splits):
-            break
-    # re-add any non-frozen ops that fell off the heap
     return Plan(splits=splits, cycles=cycles, resources=used, budget=budget,
                 model=model)
 
@@ -157,7 +155,10 @@ def cnn_op_costs(cfg, params) -> list[OpCost]:
         if s.kind == "conv":
             w = params[s.name]["w"]
             if isinstance(w, SparseWeight):
-                ops.append(op_cost_from_sparse(s.name, w, s.out_hw, s.out_hw))
+                # fused implicit-GEMM conv: cycles from true per-split
+                # (ky, kx, channel-block) gather counts
+                ops.append(op_cost_conv_sparse(s.name, w, s.k, s.cin,
+                                               s.out_hw, s.out_hw))
             else:
                 units = max(s.k * s.k * s.cin // 8, 1)   # 8-wide dense dot units
                 ops.append(op_cost_dense(s.name, units, s.cout, s.out_hw,

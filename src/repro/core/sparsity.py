@@ -111,7 +111,6 @@ def unstructured_mask(key, shape, sparsity: float, *, clump: float = 0.5):
     pruning produces: zeros clump (columns/rows differ in density). Used
     by the planner-accuracy benchmark to reproduce the paper's naive-
     model failure. clump in [0, 1): 0 = iid, higher = more clumped."""
-    import numpy as np
     rng = np.random.default_rng(int(key))
     d_in, d_out = shape
     # per-(row-band, col) density perturbation

@@ -16,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
 
 
 def _kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, h_out: int,
@@ -66,7 +67,7 @@ def depthwise_conv_pallas(x: jax.Array, w: jax.Array, *, stride: int = 1,
         out_specs=pl.BlockSpec((1, h_out, w_out, tc),
                                lambda b, ci: (b, 0, 0, ci)),
         out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, c), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xp, w)

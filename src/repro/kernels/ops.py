@@ -87,6 +87,59 @@ def sparse_matmul(x: jax.Array, sw) -> jax.Array:
     return acc.reshape(*lead, ob * bn).astype(x.dtype)
 
 
+def sparse_conv(x, sw, bias, *, k: int, stride: int = 1,
+                relu: bool = True) -> jax.Array:
+    """Fused implicit-GEMM block-sparse conv (HPIPE conv unit).
+
+    x: (N, H, W, C) NHWC; sw: block-balanced SparseWeight over the
+    HWIO-flattened (k*k*C, Cout) matrix (block rows must divide C);
+    bias: (Cout,). SAME padding, fused bias + optional ReLU epilogue.
+    Neither path materializes the (N*Ho*Wo, k*k*C) im2col tensor.
+    """
+    n, h, w, c = x.shape
+    ob, n_k, bm, bn = sw.vals.shape
+    assert sw.d_in == k * k * c, (sw.d_in, k, c)
+    assert c % bm == 0, (c, bm)
+    if _IMPL == "pallas":
+        from repro.kernels.sparse_conv import sparse_conv_pallas
+        return sparse_conv_pallas(x, sw.vals, sw.idx, bias, k=k,
+                                  stride=stride, relu=relu)
+
+    # XLA path: lax.scan over the K surviving blocks per output column.
+    # Each step gathers one shifted (ky, kx) window slice of the
+    # UNEXPANDED activation per output column (working set == output
+    # size x bm/bn, never the k^2 im2col blowup) and accumulates in f32
+    # — gather-not-scatter, same semantics as the Pallas index map, so
+    # it shards cleanly under pjit/GSPMD and runs on the CPU dry-run.
+    from repro.kernels.sparse_conv import conv_block_coords, same_pads
+    ho, ph_lo, ph_hi = same_pads(h, k, stride)
+    wo, pw_lo, pw_hi = same_pads(w, k, stride)
+    xp = jnp.pad(x, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    ky, kx, cb = conv_block_coords(sw.idx.astype(jnp.int32), k, c, bm)
+    sh, sw_ = (ho - 1) * stride + 1, (wo - 1) * stride + 1
+
+    def step(acc, inp):
+        ky_l, kx_l, cb_l, vals_l = inp           # (ob,) x3, (ob, bm, bn)
+
+        def gather(ky1, kx1, cb1):
+            sl = lax.dynamic_slice(xp, (0, ky1, kx1, cb1 * bm),
+                                   (n, sh, sw_, bm))
+            return sl[:, ::stride, ::stride]     # (N, Ho, Wo, bm)
+
+        a = jax.vmap(gather)(ky_l, kx_l, cb_l)   # (ob, N, Ho, Wo, bm)
+        from repro.models.layers import fdot
+        return acc + fdot("jnhwm,jmo->nhwjo", a, vals_l), None
+
+    from repro.models.layers import accum_dtype as _ad
+    acc0 = jnp.zeros((n, ho, wo, ob, bn), _ad() or x.dtype)
+    acc, _ = lax.scan(step, acc0,
+                      (ky.T, kx.T, cb.T, sw.vals.swapaxes(0, 1)))
+    y = acc.reshape(n, ho, wo, ob * bn) + bias.astype(acc.dtype)
+    if relu:
+        y = jax.nn.relu(y)
+    return y.astype(x.dtype)
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0):
     """Dispatch: Pallas flash kernel (TPU target) or blockwise XLA."""
     if _IMPL == "pallas":

@@ -1,0 +1,14 @@
+"""Version compatibility for the Pallas TPU API surface we use.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+around 0.5; this container pins 0.4.x. Resolve once here so every
+kernel imports the same name regardless of the installed jax.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+PrefetchScalarGridSpec = pltpu.PrefetchScalarGridSpec

@@ -1,0 +1,148 @@
+"""Fused implicit-GEMM block-sparse convolution — the HPIPE conv unit
+without the im2col materialization.
+
+The FPGA decodes each layer's runlength weight stream into gather
+addresses against a *line buffer* of the unexpanded activation: a 3x3
+conv never writes a 9x-duplicated patch tensor anywhere. The TPU
+mapping of that dataflow:
+
+- runlength stream -> scalar-prefetched ``(ky, kx, cb)`` coordinate
+  arrays (one triple per surviving weight block): the BlockSpec
+  ``index_map`` reads them to choose which *input row* of the NHWC
+  activation to DMA into VMEM — the patch gather happens in the memory
+  system, per grid step, and the im2col tensor never exists in HBM;
+- line buffer -> one padded input row (1, 1, Wp, bm) resident in VMEM;
+  the kx shift is a dynamic in-VMEM slice, the ky shift is folded into
+  the HBM row address by the index map;
+- DSP accumulator chain -> f32 VMEM scratch revisited across the K
+  innermost grid steps, with the bias + ReLU epilogue fused into the
+  flush so the elementwise follow-ups never round-trip HBM either.
+
+Weight layout: the 2D conv weight is (k*k*cin, cout) with rows in
+HWIO order — row f = (ky*k + kx)*cin + c — pruned block-balanced by
+``repro.core.sparsity.to_block_balanced``. The block-row size ``bm``
+must divide ``cin`` so every surviving block maps to exactly one
+(ky, kx, channel-block) gather.
+
+Grid: (N, Ho, out_blocks, K); K innermost so the (Wo, bn) output line
+stays resident while its K gathered input rows stream through.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams, PrefetchScalarGridSpec
+
+
+def conv_block_coords(idx, k: int, cin: int, bm: int):
+    """Decompose flat HWIO block ids -> (ky, kx, cb) gather coordinates.
+
+    idx: (ob, K) ints in [0, k*k*cin/bm). Works on numpy and jax arrays
+    (used by both the kernels and the planner's cost model).
+    """
+    cpb = cin // bm                      # channel blocks per kernel position
+    pos = idx // cpb
+    return pos // k, pos % k, idx % cpb
+
+
+def same_pads(size: int, k: int, stride: int) -> tuple[int, int, int]:
+    """(out_size, pad_lo, pad_hi) matching lax SAME padding."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return out, total // 2, total - total // 2
+
+
+def _kernel(ky_ref, kx_ref, cb_ref, x_ref, vals_ref, b_ref, o_ref, acc_ref,
+            *, n_k: int, wo: int, stride: int, relu: bool):
+    j = pl.program_id(2)
+    l = pl.program_id(3)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # kx shift: strided in-VMEM slice of the resident input row. The
+    # ky/cb part of the gather already happened in the index_map (the
+    # DMA fetched the right HBM row/channel block).
+    kx = kx_ref[j, l]
+    row = x_ref[0, 0]                                           # (wp, bm)
+    win = jax.lax.dynamic_slice(row, (kx, 0),
+                                (wo * stride, row.shape[-1]))
+    win = win.reshape(wo, stride, win.shape[-1])[:, 0, :]       # (wo, bm)
+    acc_ref[...] += jnp.dot(
+        win.astype(jnp.float32),
+        vals_ref[0, 0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(l == n_k - 1)
+    def _flush():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)       # (wo, bn)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "relu",
+                                             "interpret"))
+def sparse_conv_pallas(x: jax.Array, vals: jax.Array, idx: jax.Array,
+                       bias: jax.Array, *, k: int, stride: int = 1,
+                       relu: bool = True, interpret: bool = True) -> jax.Array:
+    """y[n, oy, ox, j*bn:+bn] = act(sum_l win(x; ky,kx,cb)[oy,ox] @ vals[j,l] + b).
+
+    x: (N, H, W, C) NHWC; vals: (ob, K, bm, bn); idx: (ob, K) int32 flat
+    HWIO block ids; bias: (ob*bn,). SAME padding. ``interpret=True``
+    runs the kernel body on CPU (this container); on a real TPU pass
+    interpret=False for the Mosaic path (pad Wo/bn to the (8, 128) tile
+    there).
+    """
+    n, h, w, c = x.shape
+    ob, n_k, bm, bn = vals.shape
+    assert c % bm == 0, (c, bm)
+    ho, ph_lo, ph_hi = same_pads(h, k, stride)
+    wo, pw_lo, pw_hi = same_pads(w, k, stride)
+    # extra right columns so the in-kernel (wo*stride)-wide strided
+    # window never reads past the buffer at kx = k-1
+    pw_hi += stride - 1
+    xp = jnp.pad(x, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    wp = xp.shape[2]
+    ky, kx, cb = conv_block_coords(idx.astype(jnp.int32), k, c, bm)
+
+    grid = (n, ho, ob, n_k)
+    kernel = functools.partial(_kernel, n_k=n_k, wo=wo, stride=stride,
+                               relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                # H-block size 1 => the index map's H coordinate is an
+                # absolute row: oy*stride + ky is the implicit-GEMM
+                # gather, computed from the prefetched stream.
+                pl.BlockSpec(
+                    (1, 1, wp, bm),
+                    lambda i, oy, j, l, ky, kx, cb:
+                        (i, oy * stride + ky[j, l], 0, cb[j, l])),
+                pl.BlockSpec((1, 1, bm, bn),
+                             lambda i, oy, j, l, ky, kx, cb: (j, l, 0, 0)),
+                pl.BlockSpec((1, bn),
+                             lambda i, oy, j, l, ky, kx, cb: (0, j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, wo, bn),
+                lambda i, oy, j, l, ky, kx, cb: (i, oy, 0, j)),
+            scratch_shapes=[pltpu.VMEM((wo, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, ob * bn), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(ky, kx, cb, xp, vals, bias.reshape(1, ob * bn))

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _kernel(idx_ref, x_ref, vals_ref, o_ref, acc_ref, *, n_k: int):
     k = pl.program_id(2)
@@ -78,7 +80,7 @@ def sparse_matmul_pallas(x: jax.Array, vals: jax.Array, idx: jax.Array,
             scratch_shapes=[pltpu.VMEM((tm, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((m, ob * bn), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -221,7 +221,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
     from repro.launch import shardings as shl
     pure_dp = shl.use_pure_dp(cfg)
-    with jax.set_mesh(mesh):
+    # jax.set_mesh is 0.5+; on 0.4.x the Mesh itself is the context
+    with (jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh):
         bspec = (P(("data", "model"), None, None) if pure_dp
                  else P("data", "model", None))
         lmlib.set_boundary_spec(None if shape.kind == "decode" else bspec,

@@ -1,10 +1,16 @@
 """The paper's own networks: ResNet-50 V1, MobileNet-V1, MobileNet-V2.
 
-Every (non-depthwise) convolution runs as im2col patches x weight-matrix,
-so the HPIPE block-balanced sparse matmul — the paper's convolution
-unit — is the compute primitive, exactly as on the FPGA. Depthwise
-convolutions stay dense (the paper's depthwise unit is separate and the
-MobileNets are evaluated dense).
+Every (non-depthwise) sparse convolution runs through the fused
+implicit-GEMM block-sparse conv (repro/kernels/sparse_conv.py) — the
+HPIPE convolution unit — which gathers surviving weight blocks against
+the UNEXPANDED NHWC activation; no im2col patch tensor is ever
+materialized (see DESIGN.md §3). Dense convolutions use the native
+conv; depthwise convolutions stay dense (the paper's depthwise unit is
+separate and the MobileNets are evaluated dense).
+
+Conv weights are stored 2D as (k*k*cin, cout) with rows in HWIO order
+(row f = (ky*k + kx)*cin + c), so the block ids of a pruned weight
+decompose into the fused kernel's (ky, kx, channel-block) gathers.
 
 Each model also exposes a ``*_specs()`` layer list consumed by the
 throughput-balancing planner (repro/core/planner.py) — the analogue of
@@ -131,11 +137,16 @@ def specs_for(name: str) -> list[ConvSpec]:
 # params + forward
 # ---------------------------------------------------------------------------
 
-def _maybe_sparse(w2d, sp):
+def _maybe_sparse(w2d, sp, cin: Optional[int] = None):
+    """Prune a 2D weight block-balanced. For conv weights pass ``cin``:
+    the block-row size must divide the input-channel count (not just
+    k*k*cin) so every block is a single (ky, kx, channel-block) gather
+    of the fused implicit-GEMM kernel."""
     if sp is None or not sp.enabled:
         return w2d
     d_in, d_out = w2d.shape
-    bm = sp.block_m if d_in % sp.block_m == 0 else _largest_div(d_in, sp.block_m)
+    unit = cin if cin is not None else d_in
+    bm = sp.block_m if unit % sp.block_m == 0 else _largest_div(unit, sp.block_m)
     bn = sp.block_n if d_out % sp.block_n == 0 else _largest_div(d_out, sp.block_n)
     if bm < 4 or bn < 4 or d_in // bm < 4:
         return w2d                       # too small to prune blockwise
@@ -161,7 +172,7 @@ def init_cnn(cfg, key, *, image_size: int = 224):
         if s.kind == "conv":
             w = L.dense_init(k, (s.k * s.k * s.cin, s.cout),
                              s.k * s.k * s.cin, jnp.bfloat16)
-            params[s.name] = {"w": _maybe_sparse(w, sp),
+            params[s.name] = {"w": _maybe_sparse(w, sp, cin=s.cin),
                               "b": jnp.zeros((s.cout,), jnp.bfloat16)}
         elif s.kind == "dw":
             params[s.name] = {
@@ -175,18 +186,25 @@ def init_cnn(cfg, key, *, image_size: int = 224):
 
 
 def conv2d(x, p, s: ConvSpec, *, relu=True):
-    """im2col conv: the HPIPE convolution unit (sparse-aware matmul)."""
-    n, h, w, c = x.shape
-    pad = "SAME"
-    patches = lax.conv_general_dilated_patches(
-        x, (s.k, s.k), (s.stride, s.stride), pad,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))     # (N,Ho,Wo,k*k*C)
-    ho, wo = patches.shape[1], patches.shape[2]
-    y = L.linear(patches.reshape(n * ho * wo, -1), p["w"])
-    y = y.reshape(n, ho, wo, s.cout) + p["b"]
+    """The HPIPE convolution unit: fused implicit-GEMM sparse conv for
+    pruned weights (patches form in VMEM per grid step, never in HBM),
+    native conv for dense weights. No im2col tensor either way."""
+    w = p["w"]
+    if isinstance(w, SparseWeight):
+        from repro.kernels import ops as kops
+        return kops.sparse_conv(x, w, p["b"], k=s.k, stride=s.stride,
+                                relu=relu)
+    w4 = w.reshape(s.k, s.k, s.cin, s.cout)              # HWIO row order
+    # f32 accumulation (what the MXU does natively with bf16 inputs);
+    # XLA:CPU would otherwise accumulate the conv in bf16
+    y = lax.conv_general_dilated(
+        x, w4, (s.stride, s.stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
+    y = y + p["b"].astype(jnp.float32)
     if relu:
         y = jax.nn.relu(y)
-    return y
+    return y.astype(x.dtype)
 
 
 def depthwise(x, p, s: ConvSpec, *, relu=True):

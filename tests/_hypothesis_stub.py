@@ -1,0 +1,73 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+This container doesn't ship hypothesis and nothing may be pip-installed,
+so the property tests fall back to seeded random sampling with the same
+``@settings/@given/strategies`` surface they already use. No shrinking,
+no database — just N seeded examples per test, which preserves the
+tests' value as randomized checks while keeping failures reproducible.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(lambda r: [elements.sample(r)
+                                for _ in range(r.randint(min_size, max_size))])
+
+
+class _Strategies:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+
+
+strategies = _Strategies()
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            rng = random.Random(0)
+            for _ in range(getattr(runner, "_max_examples",
+                                   _DEFAULT_EXAMPLES)):
+                example = {k: s.sample(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **example)
+        runner._max_examples = _DEFAULT_EXAMPLES
+        # hide the wrapped signature, or pytest treats the strategy
+        # parameters as fixtures
+        del runner.__wrapped__
+        runner.__signature__ = inspect.Signature([])
+        return runner
+    return deco
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -53,7 +53,9 @@ _SUB = textwrap.dedent("""
     ref = x
     for l in range(L):
         ref = block_fn({"w": blocks["w"][l]}, ref)
-    with jax.set_mesh(mesh):
+    # jax.set_mesh is 0.5+; on 0.4.x the Mesh itself is the context
+    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+    with mesh_ctx:
         out1 = jax.jit(lambda sp, m, xmb: pp.pipeline_apply(
             stage_fn, sp, m, xmb, mesh=mesh, stage_axis="pod",
             n_stages=4))(stacked, mask, x_mb).reshape(8, 4, D)

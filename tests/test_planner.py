@@ -4,7 +4,10 @@ import itertools
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container has no hypothesis
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core import planner, sparsity as S

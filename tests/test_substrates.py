@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container has no hypothesis
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.checkpoint import ckpt
 from repro.configs.base import SparsityConfig
