@@ -54,8 +54,12 @@ def _modeled_bytes(n, hw, cin, k, stride, sw, dtype_bytes=2):
     return im2col, fused
 
 
-def main():
-    for name, n, hw, cin, cout, k, stride, bm, bn in SHAPES:
+def main(smoke: bool = False):
+    shapes = SHAPES
+    if smoke:   # CI: same layer shapes at reduced batch/resolution
+        shapes = [("r50_s1b0_c2", 2, 28, 128, 128, 3, 1, 32, 32),
+                  ("r50_conv1", 1, 96, 3, 64, 7, 2, 3, 32)]
+    for name, n, hw, cin, cout, k, stride, bm, bn in shapes:
         cfg = SparsityConfig(enabled=True, sparsity=SPARSITY, block_m=bm,
                              block_n=bn)
         ks = jax.random.split(jax.random.PRNGKey(0), 3)

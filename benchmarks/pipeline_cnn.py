@@ -1,0 +1,76 @@
+"""Pipelined sparse ResNet-50: measured fill/drain bubble vs microbatch
+count against the analytic ``bubble_fraction()`` curve (paper Table I's
+latency story: more partitions in flight amortize the pipeline fill).
+
+Single-host measurement through the GSPMD heterogeneous executor: every
+scan step runs all S stage programs, so wall-clock is
+(M + S - 1) x t_step while sequential execution of the same M
+microbatches costs M x t_step — the measured idle fraction
+1 - t_seq/t_pipe traces (S-1)/(M+S-1) directly. The baseline is M
+forwards at the PIPELINE'S microbatch size (one image), not one batched
+M-image forward: batching efficiency would otherwise masquerade as
+pipeline bubble. Emits CSV rows plus one JSON summary line (and
+optionally a JSON file via ``--out``).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import pipeline as pp, planner
+from repro.models import cnn
+from benchmarks.common import row, timeit
+
+ARCH = "resnet50"
+N_STAGES = 4
+
+
+def main(smoke: bool = False, out: str = None):
+    img = 32 if smoke else 48
+    mbs = (1, 4) if smoke else (1, 2, 4, 8)
+    cfg = get_config(ARCH)
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+    plan = planner.plan_cnn_pipeline(cfg, params, N_STAGES)
+    s = plan["n_stages"]
+    results = {"arch": ARCH, "n_stages": s, "image_size": img,
+               "imbalance": plan["imbalance"], "points": []}
+    one = jax.random.normal(jax.random.PRNGKey(1), (1, img, img, 3))
+    us_seq1, _ = timeit(
+        jax.jit(lambda x: cnn.cnn_forward(cfg, params, x)), one,
+        warmup=1, iters=3)
+    for m in mbs:
+        imgs = jax.random.normal(jax.random.PRNGKey(1), (m, img, img, 3))
+        x_mb = pp.microbatch(imgs, m)                  # microbatch size 1
+        stage_fns, pack_in, unpack_out, _ = cnn.stage_programs(
+            cfg, params, plan["stage_of"], x_mb.shape[1:])
+
+        def pipe(xmb):
+            wires = jax.vmap(pack_in)(xmb)
+            o = pp.pipeline_apply_gspmd_hetero(stage_fns, wires, n_stages=s)
+            return jnp.concatenate(
+                [unpack_out(o[i]) for i in range(m)], axis=0)
+
+        us_pipe, _ = timeit(jax.jit(pipe), x_mb, warmup=1, iters=3)
+        us_seq = m * us_seq1                  # M microbatch-sized forwards
+        measured = max(1.0 - us_seq / us_pipe, 0.0)
+        analytic = pp.bubble_fraction(m, s)
+        results["points"].append({
+            "microbatches": m, "us_pipeline": us_pipe, "us_sequential": us_seq,
+            "bubble_measured": measured, "bubble_analytic": analytic})
+        row(f"pipeline_cnn_m{m}", us_pipe,
+            f"bubble_meas={measured:.3f}_analytic={analytic:.3f}")
+    print("pipeline_cnn_json," + json.dumps(results))
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    main(smoke=a.smoke, out=a.out)

@@ -1,21 +1,37 @@
 """Benchmark harness: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows. A module failure — at
 import or inside main() — prints its ERROR row and the suite
-continues; the exit code is nonzero iff any module failed."""
+continues; the exit code is nonzero iff any module failed.
+
+``--smoke`` runs tiny shapes so CI finishes in minutes: modules whose
+``main`` accepts a ``smoke`` keyword get ``smoke=True``; the rest run
+as-is (they are already CPU-sized).
+"""
+import argparse
 import importlib
+import inspect
 import sys
 import traceback
 
 MODULES = ("balance_fig3", "planner_accuracy", "sparse_speedup",
-           "conv_fused", "throughput_tab4", "resources_tab2")
+           "conv_fused", "throughput_tab4", "resources_tab2",
+           "pipeline_cnn")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failed = []
     for name in MODULES:
         try:
-            importlib.import_module(f"benchmarks.{name}").main()
+            fn = importlib.import_module(f"benchmarks.{name}").main
+            if args.smoke and "smoke" in inspect.signature(fn).parameters:
+                fn(smoke=True)
+            else:
+                fn()
         except Exception:
             traceback.print_exc()
             print(f"benchmarks.{name},0,ERROR")

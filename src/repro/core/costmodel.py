@@ -100,6 +100,16 @@ def op_cost_dense(name: str, cin_units: int, cout: int, lines: int,
                   n_in_units=cin_units, idx=None)
 
 
+def op_cost_dw(name: str, k: int, cin: int, lines: int, width: int) -> OpCost:
+    """Depthwise conv (HPIPE's DepthwiseConv2D unit): one k*k MAC chain
+    per channel, no cross-channel reduction — the partitionable unit
+    axis is the k*k taps. Cheap next to the main convs but NOT free;
+    pricing it keeps MobileNet stage cuts honest."""
+    nnz = np.full(cin, k * k, np.int64)
+    return OpCost(name=name, lines=lines, width=width, nnz_per_co=nnz,
+                  n_in_units=k * k, idx=None)
+
+
 def op_cost_unstructured(name: str, mask: np.ndarray, lines: int,
                          width: int) -> OpCost:
     """Unstructured scalar sparsity (the paper's actual format): mask is

@@ -1,0 +1,186 @@
+"""Layer-graph IR — the network the HPIPE compiler walks.
+
+The paper's compiler consumes a TensorFlow graph and emits one hardware
+stage per layer; our analogue is a small SSA-ish IR over the CNN layer
+kinds (conv / dw / maxpool / avgpool / fc / add) with explicit residual
+edges. The spec builders in ``repro/models/cnn.py`` emit a flat
+``ConvSpec`` list; :class:`LayerGraph` resolves it into nodes + edges
+using three per-spec fields:
+
+- the *primary* input of a node is the previous node's output, unless
+  ``input_from`` names another producer (ResNet projection shortcuts
+  read the block input, not the preceding conv);
+- ``add`` nodes additionally consume ``residual_from`` (the skip edge);
+- ``relu`` records whether the node fuses a ReLU epilogue (residual
+  branches and MobileNet-V2 linear bottlenecks don't).
+
+The graph is pure structure (numpy-free, jax-free): the interpreter
+that executes it lives in ``repro/models/cnn.py``; the stage
+partitioner below computes, for any contiguous stage assignment, the
+set of *live values* crossing each stage cut — the skip buffer the
+heterogeneous pipeline (``core/pipeline.py``) must carry when a
+residual edge spans stages.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+#: pseudo-value name for the graph input (the image batch)
+INPUT = "__images__"
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    kind: str            # conv | dw | maxpool | avgpool | fc | add
+    cin: int = 0
+    cout: int = 0
+    k: int = 1
+    stride: int = 1
+    in_hw: int = 0       # input spatial size (square)
+    residual_from: str = ""   # for add nodes: the skip-edge producer
+    relu: bool = True         # fused ReLU epilogue
+    input_from: str = ""      # primary input override ("" = previous node)
+
+    @property
+    def out_hw(self) -> int:
+        return -(-self.in_hw // self.stride)
+
+    def macs(self) -> int:
+        """Dense multiply-accumulates for this op."""
+        if self.kind == "conv":
+            return self.out_hw ** 2 * self.k ** 2 * self.cin * self.cout
+        if self.kind == "dw":
+            return self.out_hw ** 2 * self.k ** 2 * self.cin
+        if self.kind == "fc":
+            return self.cin * self.cout
+        return 0
+
+
+@dataclass(frozen=True)
+class StageSlice:
+    """One pipeline stage: nodes [start, stop) plus its wire contract.
+
+    ``in_live`` / ``out_live`` are the value names crossing the stage's
+    input / output cut, ordered by producer index (INPUT first). A
+    residual edge whose producer and consumer land in different stages
+    appears in every boundary in between — that is the skip buffer.
+    """
+    stage: int
+    start: int
+    stop: int
+    in_live: tuple[str, ...]
+    out_live: tuple[str, ...]
+
+
+class LayerGraph:
+    """Topologically ordered layer DAG with explicit residual edges."""
+
+    def __init__(self, name: str, nodes: tuple[ConvSpec, ...],
+                 inputs: tuple[tuple[str, ...], ...]):
+        self.name = name
+        self.nodes = nodes
+        self.inputs = inputs          # per node: (primary[, residual])
+        self._index = {n.name: i for i, n in enumerate(nodes)}
+
+    @classmethod
+    def from_specs(cls, name: str, specs: list[ConvSpec]) -> "LayerGraph":
+        nodes = tuple(specs)
+        inputs = []
+        for i, s in enumerate(nodes):
+            primary = s.input_from or (nodes[i - 1].name if i else INPUT)
+            edge = (primary,)
+            if s.kind == "add":
+                if not s.residual_from:
+                    raise ValueError(f"add node {s.name!r} has no "
+                                     "residual_from edge")
+                edge = (primary, s.residual_from)
+            inputs.append(edge)
+        g = cls(name, nodes, tuple(inputs))
+        g.validate()
+        return g
+
+    # -- structure ---------------------------------------------------------
+
+    def index(self, name: str) -> int:
+        return self._index[name]
+
+    @property
+    def output(self) -> str:
+        return self.nodes[-1].name
+
+    def validate(self) -> None:
+        """Every edge references INPUT or an earlier node (topo order)."""
+        seen = {INPUT}
+        for node, edge in zip(self.nodes, self.inputs):
+            if node.name in seen:
+                raise ValueError(f"duplicate node name {node.name!r}")
+            for src in edge:
+                if src not in seen:
+                    raise ValueError(
+                        f"{self.name}: node {node.name!r} reads {src!r} "
+                        "which is not produced earlier (or at all)")
+            seen.add(node.name)
+
+    def consumers(self) -> dict[str, list[int]]:
+        """value name -> node indices that read it (graph output is
+        consumed at index len(nodes))."""
+        cons: dict[str, list[int]] = {INPUT: []}
+        for i, edge in enumerate(self.inputs):
+            for src in edge:
+                cons.setdefault(src, []).append(i)
+        cons.setdefault(self.output, []).append(len(self.nodes))
+        return cons
+
+    def live_at(self, boundary: int) -> tuple[str, ...]:
+        """Values produced before node index ``boundary`` that some node
+        at index >= boundary still reads, ordered by producer index
+        (INPUT first). This is the wire content at a stage cut."""
+        cons = self.consumers()
+        live = []
+        if boundary == 0 or any(c >= boundary for c in cons.get(INPUT, [])):
+            live.append(INPUT)
+        for i, node in enumerate(self.nodes):
+            if i >= boundary:
+                break
+            if any(c >= boundary for c in cons.get(node.name, [])):
+                live.append(node.name)
+        return tuple(live)
+
+    # -- stage partitioning ------------------------------------------------
+
+    def partition(self, stage_of: list[int]) -> list[StageSlice]:
+        """Split into contiguous stages per ``stage_of`` (one id per
+        node, nondecreasing, starting at 0, no gaps). Returns one
+        :class:`StageSlice` per stage with resolved wire contracts."""
+        if len(stage_of) != len(self.nodes):
+            raise ValueError(f"stage_of has {len(stage_of)} entries for "
+                             f"{len(self.nodes)} nodes")
+        if stage_of and stage_of[0] != 0:
+            raise ValueError("stage ids must start at 0")
+        for a, b in zip(stage_of, stage_of[1:]):
+            if b - a not in (0, 1):
+                raise ValueError("stage ids must be contiguous and "
+                                 f"nondecreasing, got ...{a},{b}...")
+        n_stages = (max(stage_of) + 1) if stage_of else 0
+        bounds = [0]
+        for s in range(n_stages):
+            bounds.append(max(i for i, sid in enumerate(stage_of)
+                              if sid == s) + 1)
+        slices = []
+        for s in range(n_stages):
+            start, stop = bounds[s], bounds[s + 1]
+            # live_at(0) == (INPUT,) and live_at(n) == (output,), so the
+            # edge stages need no special-casing
+            slices.append(StageSlice(stage=s, start=start, stop=stop,
+                                     in_live=self.live_at(start),
+                                     out_live=self.live_at(stop)))
+        return slices
+
+
+@functools.lru_cache(maxsize=None)
+def graph_for(name: str) -> LayerGraph:
+    """LayerGraph for one of the paper's CNNs (cached)."""
+    from repro.models import cnn
+    return LayerGraph.from_specs(name, cnn.specs_for(name))

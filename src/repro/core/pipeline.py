@@ -12,10 +12,24 @@ partitions in flight.
 
 Implementation: shard_map manual over the stage axis only; data/model
 axes stay auto so GSPMD still lays out TP/DP inside each stage.
+
+Two stage-program shapes are supported:
+
+- **homogeneous** (``stack_stages`` + ``pipeline_apply[_gspmd]``): every
+  layer has the same signature, stages scan a padded layer stack — the
+  LM transformer case.
+- **heterogeneous** (``pipeline_apply_hetero[_gspmd]``): each stage runs
+  its OWN program with its own activation shapes/dtypes; stage
+  boundaries exchange a fixed-width f32 *wire* (``WireFormat``) that
+  carries every live value crossing the cut — including residual skip
+  edges that span stages — exactly HPIPE's per-layer heterogeneous
+  hardware stages. The CNN layer pipeline (models/cnn.stage_programs)
+  runs on these.
 """
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
@@ -30,10 +44,20 @@ PyTree = Any
 def stack_stages(blocks: PyTree, stage_of: list[int], n_stages: int):
     """Re-pack per-layer stacked params (leading L axis) into per-stage
     stacks (S, Lmax, ...) with a validity mask (S, Lmax). Works under
-    jax.eval_shape (static indices only)."""
+    jax.eval_shape (static indices only).
+
+    Every stage must own at least one layer: an empty stage would run as
+    a silent identity (all-False mask row) and waste a pipeline rung —
+    use ``planner.assign_stages`` (which clamps) to build ``stage_of``.
+    """
     L = len(stage_of)
     per_stage = [[l for l in range(L) if stage_of[l] == s]
                  for s in range(n_stages)]
+    empty = [s for s, g in enumerate(per_stage) if not g]
+    if empty:
+        raise ValueError(
+            f"stage(s) {empty} own no layers ({L} layers over {n_stages} "
+            "stages); clamp n_stages to max(stage_of)+1 or rebalance")
     lmax = max(len(g) for g in per_stage)
 
     def leaf(a):
@@ -48,6 +72,24 @@ def stack_stages(blocks: PyTree, stage_of: list[int], n_stages: int):
     for s, g in enumerate(per_stage):
         mask[s, :len(g)] = True
     return stacked, jnp.asarray(mask)
+
+
+def _shard_map_stage(fn: Callable, mesh, in_specs, out_specs,
+                     stage_axis: str) -> Callable:
+    """Version-compat shard_map over ONE manual axis (the stage axis);
+    other mesh axes stay auto/replicated per the specs."""
+    if hasattr(jax, "shard_map"):             # jax >= 0.6
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+            axis_names=frozenset({stage_axis}))  # other mesh axes stay auto
+    # 0.4.x experimental API. Full manual: partial-auto lowers axis_index
+    # to a PartitionId op the XLA:CPU SPMD partitioner rejects. Non-stage
+    # axes are replicated per the specs (costs an all-gather of the
+    # input on multi-axis meshes; prefer the gspmd paths there).
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def make_stage_fn(block_fn: Callable) -> Callable:
@@ -104,29 +146,36 @@ def pipeline_apply(stage_fn: Callable, stage_params: PyTree, mask, x_mb,
                                   jnp.arange(m + n_stages - 1))
         return outs[None]                                 # add stage dim back
 
-    in_specs = (P(stage_axis), P(stage_axis), P())
-    out_specs = P(stage_axis)
-    if hasattr(jax, "shard_map"):             # jax >= 0.6
-        f = jax.shard_map(
-            per_device, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
-            axis_names=frozenset({stage_axis}))  # other mesh axes stay auto
-    else:                                     # 0.4.x experimental API
-        # full manual: partial-auto lowers axis_index to a PartitionId
-        # op the XLA:CPU SPMD partitioner rejects. Non-stage axes are
-        # replicated per the specs (costs an all-gather of x_mb on
-        # multi-axis meshes; prefer pipeline_apply_gspmd there).
-        from jax.experimental.shard_map import shard_map as _sm
-        f = _sm(per_device, mesh=mesh, in_specs=in_specs,
-                out_specs=out_specs, check_rep=False)
+    f = _shard_map_stage(per_device, mesh,
+                         (P(stage_axis), P(stage_axis), P()),
+                         P(stage_axis), stage_axis)
     outs_all = f(stage_params, mask, x_mb)                # (S, M, mb, T, d)
     return outs_all[-1]                                   # last stage's slice
 
 
-def microbatch(x, n_microbatches: int):
-    """(B, ...) -> (M, B/M, ...)"""
+def microbatch(x, n_microbatches: int, *, pad: bool = False):
+    """(B, ...) -> (M, ceil(B/M), ...). Used by every pipeline path
+    (homogeneous and heterogeneous), so the contract is shared:
+
+    - batch not divisible by the microbatch count raises ``ValueError``
+      (the old bare ``assert`` vanished under ``python -O``), unless
+    - ``pad=True``: the batch is zero-padded up to the next multiple;
+      the caller must drop the trailing ``M*mb - B`` padded outputs.
+    """
     b = x.shape[0]
-    assert b % n_microbatches == 0, (b, n_microbatches)
+    if n_microbatches < 1:
+        raise ValueError(f"n_microbatches must be >= 1, got {n_microbatches}")
+    if b % n_microbatches != 0:
+        if not pad:
+            raise ValueError(
+                f"batch {b} is not divisible by n_microbatches "
+                f"{n_microbatches}; pass pad=True to zero-pad (and drop "
+                "the padded outputs) or choose a divisor")
+        mb = -(-b // n_microbatches)
+        x = jnp.concatenate(
+            [x, jnp.zeros((mb * n_microbatches - b,) + x.shape[1:],
+                          x.dtype)], axis=0)
+        b = mb * n_microbatches
     return x.reshape((n_microbatches, b // n_microbatches) + x.shape[1:])
 
 
@@ -177,6 +226,161 @@ def pipeline_apply_gspmd(stage_fn, stage_params, mask, x_mb, *,
                                               jnp.clip(j, 0, m - 1), 0)
         outs = jnp.where(j >= 0, upd, outs)
         state = jnp.roll(y, 1, axis=0)                    # stage s -> s+1
+        return (state, outs), None
+
+    (state, outs), _ = lax.scan(step, (state, outs),
+                                jnp.arange(m + s - 1))
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous stages: wire format + executors
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class WireFormat:
+    """Fixed layout of the values crossing one stage boundary.
+
+    Heterogeneous stages produce different activation shapes/dtypes, but
+    ppermute/roll need ONE static buffer type on every hop, so each
+    boundary flattens its live values into a (mb, width) f32 wire. f32
+    is the widening type: bf16 -> f32 -> bf16 round-trips exactly, so
+    the pipelined result is bit-identical to sequential execution.
+
+    entries: per value (name, shape, dtype); shape includes the leading
+    microbatch dim, which all values must share.
+    """
+    entries: tuple[tuple[str, tuple, Any], ...]
+
+    @classmethod
+    def for_values(cls, entries) -> "WireFormat":
+        entries = tuple((n, tuple(s), jnp.dtype(d)) for n, s, d in entries)
+        if not entries:
+            raise ValueError("a stage boundary must carry at least one value")
+        mbs = {s[0] for _, s, _ in entries}
+        if len(mbs) != 1:
+            raise ValueError(f"mixed microbatch dims across wire: {mbs}")
+        return cls(entries)
+
+    @property
+    def mb(self) -> int:
+        return self.entries[0][1][0]
+
+    def _sizes(self):
+        return [int(np.prod(s[1:], dtype=np.int64)) for _, s, _ in self.entries]
+
+    @property
+    def width(self) -> int:
+        return sum(self._sizes())
+
+    def pack(self, values, width: int) -> jax.Array:
+        """values (matching entries order) -> (mb, width) f32 wire."""
+        if len(values) != len(self.entries):
+            raise ValueError(f"expected {len(self.entries)} values, got "
+                             f"{len(values)}")
+        flat = [v.astype(jnp.float32).reshape(self.mb, -1) for v in values]
+        wire = jnp.concatenate(flat, axis=1) if len(flat) > 1 else flat[0]
+        if wire.shape[1] > width:
+            raise ValueError(f"wire width {width} < payload {wire.shape[1]}")
+        return jnp.pad(wire, ((0, 0), (0, width - wire.shape[1])))
+
+    def unpack(self, wire: jax.Array) -> list[jax.Array]:
+        """(mb, >=width) f32 wire -> values in entries order/dtype."""
+        out, off = [], 0
+        for (name, shape, dtype), size in zip(self.entries, self._sizes()):
+            v = lax.slice_in_dim(wire, off, off + size, axis=1)
+            out.append(v.reshape(shape).astype(dtype))
+            off += size
+        return out
+
+
+def pipeline_apply_hetero(stage_fns: list, x_wire, *, mesh,
+                          stage_axis: str, n_stages: int):
+    """shard_map layer pipeline over HETEROGENEOUS per-stage programs.
+
+    stage_fns[s]: (mb, W) f32 wire -> (mb, W) f32 wire — stage s's whole
+    program (unpack live-in values, run its IR slice, pack live-out),
+    closing over its parameters (replicated across the stage axis; per-
+    stage weight placement is a follow-up). x_wire: (M, mb, W) packed
+    input microbatches. Returns the last stage's (M, mb, W) wires.
+
+    Every device runs ``lax.switch`` over the stage programs — the SPMD
+    program is shared, the selected branch differs per stage index, and
+    activations (including residual skips captured in the wire) hop
+    stage->stage with ppermute exactly as in ``pipeline_apply``.
+    """
+    if len(stage_fns) != n_stages:
+        raise ValueError(f"{len(stage_fns)} stage programs for "
+                         f"{n_stages} stages")
+    m = x_wire.shape[0]
+
+    def per_device(xs):
+        sidx = lax.axis_index(stage_axis)
+        act = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+        perm = [(s, (s + 1) % n_stages) for s in range(n_stages)]
+
+        def step(carry, i):
+            act, outs = carry
+            xin = jnp.where(sidx == 0, xs[jnp.clip(i, 0, m - 1)], act)
+            y = lax.switch(sidx, stage_fns, xin)
+            j = i - (n_stages - 1)
+            upd = lax.dynamic_update_index_in_dim(
+                outs, y, jnp.clip(j, 0, m - 1), 0)
+            outs = jnp.where((sidx == n_stages - 1) & (j >= 0), upd, outs)
+            act_next = lax.ppermute(y, stage_axis, perm)
+            return (act_next, outs), None
+
+        (act, outs), _ = lax.scan(step, (act, outs),
+                                  jnp.arange(m + n_stages - 1))
+        return outs[None]                                 # add stage dim back
+
+    f = _shard_map_stage(per_device, mesh, (P(),), P(stage_axis),
+                         stage_axis)
+    outs_all = f(x_wire)                                  # (S, M, mb, W)
+    return outs_all[-1]                                   # last stage's slice
+
+
+def pipeline_apply_gspmd_hetero(stage_fns: list, x_wire, *, n_stages: int,
+                                stage_axis: str = "pod", mesh=None):
+    """Pure-GSPMD heterogeneous pipeline (no shard_map).
+
+    The wire state lives on a leading (S, mb, W) axis; each scan step
+    runs every stage's program on its own slot (on a sharded mesh each
+    program's operands live on one stage shard, so GSPMD places them
+    there) and ``jnp.roll`` shifts wires stage->stage. Works unsharded
+    too (mesh=None): correct single-device semantics for tests/serving,
+    at S-fold step cost. Functionally identical to
+    ``pipeline_apply_hetero``.
+    """
+    if len(stage_fns) != n_stages:
+        raise ValueError(f"{len(stage_fns)} stage programs for "
+                         f"{n_stages} stages")
+    m = x_wire.shape[0]
+    s = n_stages
+
+    def constrain(st):
+        if mesh is None or stage_axis not in mesh.shape:
+            return st
+        return jax.lax.with_sharding_constraint(
+            st, P(stage_axis, *([None] * (st.ndim - 1))))
+
+    state = jnp.zeros((s,) + x_wire.shape[1:], x_wire.dtype)
+    outs = jnp.zeros_like(x_wire)
+
+    def step(carry, i):
+        state, outs = carry
+        inject = x_wire[jnp.clip(i, 0, m - 1)]
+        state = state.at[0].set(
+            jnp.where(i < m, inject, state[0]).astype(state.dtype))
+        state = constrain(state)
+        ys = jnp.stack([fn(state[k]) for k, fn in enumerate(stage_fns)])
+        ys = constrain(ys)
+        j = i - (s - 1)
+        upd = lax.dynamic_update_index_in_dim(outs, ys[-1],
+                                              jnp.clip(j, 0, m - 1), 0)
+        outs = jnp.where(j >= 0, upd, outs)
+        state = jnp.roll(ys, 1, axis=0)                   # stage s -> s+1
         return (state, outs), None
 
     (state, outs), _ = lax.scan(step, (state, outs),

@@ -94,9 +94,21 @@ def evaluate(ops: list[OpCost], splits: dict[str, int],
 
 
 def assign_stages(costs: np.ndarray, n_stages: int) -> list[int]:
-    """Contiguous linear partition of ``costs`` into ``n_stages`` groups
-    minimizing the max group sum. Returns stage id per layer."""
+    """Contiguous linear partition of ``costs`` into AT MOST ``n_stages``
+    groups minimizing the max group sum. Returns one stage id per layer.
+
+    Contract: ``n_stages`` is clamped to ``len(costs)`` — asking for
+    more stages than layers yields one layer per stage (ids
+    ``0..len(costs)-1``), never empty stages. Callers must size
+    downstream structures from ``max(stage_of) + 1``, NOT from the
+    requested ``n_stages`` (``pipeline.stack_stages`` rejects empty
+    stages, so a mismatch fails loudly rather than silently wasting
+    pipeline rungs)."""
     n = len(costs)
+    if n == 0:
+        raise ValueError("assign_stages needs at least one layer cost")
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
     if n_stages >= n:
         return list(range(n))
     prefix = np.concatenate([[0.0], np.cumsum(costs)])
@@ -175,3 +187,68 @@ def cnn_op_costs(cfg, params) -> list[OpCost]:
 
 def plan_cnn(cfg, params, dsp_target: int = 5000, *, model: str = "aware") -> Plan:
     return balance(cnn_op_costs(cfg, params), dsp_target, model=model)
+
+
+# --- CNN layer-graph -> pipeline stages (the TPU layer pipeline) -----------
+
+def cnn_node_costs(cfg, params, graph=None) -> np.ndarray:
+    """Per-IR-node cycle estimates for stage assignment.
+
+    Sparse convs are priced from their TRUE per-split gather counts
+    (costmodel.op_cost_conv_sparse over the pruned weights — the fused
+    kernel's cost, not raw FLOPs); dense convs/fc from their dot-unit
+    cycles; depthwise convs from their per-channel MAC chains
+    (op_cost_dw). Pools and adds are the FPGA's cheap companion ops:
+    one pass over their output lines."""
+    from repro.core.costmodel import op_cost_dw
+    from repro.core.graph import graph_for
+    from repro.models.layers import SparseWeight
+    g = graph if graph is not None else graph_for(cfg.name)
+    costs = []
+    for s in g.nodes:
+        if s.kind == "conv":
+            w = params[s.name]["w"]
+            if isinstance(w, SparseWeight):
+                c = op_cost_conv_sparse(s.name, w, s.k, s.cin,
+                                        s.out_hw, s.out_hw).cycles(1)
+            else:
+                c = op_cost_dense(s.name, max(s.k * s.k * s.cin // 8, 1),
+                                  s.cout, s.out_hw, s.out_hw).cycles(1)
+        elif s.kind == "fc":
+            w = params[s.name]["w"]
+            if isinstance(w, SparseWeight):
+                c = op_cost_from_sparse(s.name, w, 1, 1).cycles(1)
+            else:
+                c = op_cost_dense(s.name, max(s.cin // 8, 1), s.cout,
+                                  1, 1).cycles(1)
+        elif s.kind == "dw":
+            c = op_cost_dw(s.name, s.k, s.cin, s.out_hw, s.out_hw).cycles(1)
+        else:                       # maxpool/avgpool/add: line-rate companions
+            c = max(s.out_hw, 1)
+        costs.append(float(c))
+    return np.asarray(costs)
+
+
+def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None) -> dict:
+    """Cost-balanced stage assignment for a CNN layer graph: contiguous
+    partition of the IR minimizing the max per-stage cycle sum (the
+    multi-device analogue of HPIPE giving slow layers more DSPs).
+
+    Returns stage_of (per IR node), the per-stage cycle sums, the
+    imbalance ratio, and n_stages actually used (assign_stages clamps,
+    see its contract)."""
+    from repro.core.graph import graph_for
+    g = graph if graph is not None else graph_for(cfg.name)
+    costs = cnn_node_costs(cfg, params, graph=g)
+    stage_of = assign_stages(costs, n_stages)
+    used = max(stage_of) + 1
+    stage_cost = np.zeros(used)
+    for l, s in enumerate(stage_of):
+        stage_cost[s] += costs[l]
+    return {
+        "stage_of": stage_of,
+        "n_stages": used,
+        "stage_cost": stage_cost,
+        "imbalance": float(stage_cost.max() / max(stage_cost.mean(), 1.0)),
+        "node_cycles": costs,
+    }

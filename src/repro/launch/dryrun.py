@@ -311,12 +311,87 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     return res
 
 
+def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
+                          n_microbatches: int = 8, batch: int = 16,
+                          image_size: int = 64,
+                          verbose: bool = True) -> dict:
+    """``pipeline_cnn`` mode: lower + compile the heterogeneous CNN
+    layer pipeline (shard_map over a stage axis) and extract what the
+    LM cells extract — compile stats and per-collective HLO bytes. The
+    stage->stage wire hops lower to collective-permute, so
+    ``collectives['bytes']['collective-permute']`` is the pipeline's
+    ICI traffic; stage balance and the fill/drain bubble come from the
+    planner/analytic model."""
+    from repro.core import pipeline as pp, planner
+    from repro.models import cnn
+    cfg = get_config(arch)
+    if cfg.family != "cnn":
+        return {"arch": arch, "shape": "pipeline_cnn", "status": "skipped",
+                "reason": "not a CNN arch"}
+    if batch % n_microbatches != 0:
+        raise ValueError(
+            f"batch {batch} must be divisible by n_microbatches "
+            f"{n_microbatches} for the dry-run cell (serve pads instead)")
+    t0 = time.time()
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+    plan = planner.plan_cnn_pipeline(cfg, params, n_stages)
+    s = plan["n_stages"]
+    mesh = jax.make_mesh((s,), ("stage",))
+    imgs = jax.ShapeDtypeStruct((batch, image_size, image_size, 3),
+                                jnp.float32)
+    mb_shape = jax.eval_shape(
+        lambda x: pp.microbatch(x, n_microbatches), imgs).shape
+    stage_fns, pack_in, unpack_out, width = cnn.stage_programs(
+        cfg, params, plan["stage_of"], mb_shape[1:])
+
+    def step(xmb):
+        wires = jax.vmap(pack_in)(xmb)
+        out = pp.pipeline_apply_hetero(stage_fns, wires, mesh=mesh,
+                                       stage_axis="stage", n_stages=s)
+        return jnp.concatenate(
+            [unpack_out(out[i]) for i in range(n_microbatches)], axis=0)
+
+    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+    with mesh_ctx:
+        lowered = jax.jit(step).lower(
+            jax.ShapeDtypeStruct(mb_shape, jnp.float32))
+        compiled = lowered.compile()
+    t1 = time.time()
+    coll = collective_bytes(compiled.as_text())
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):       # 0.4.x: one dict per partition
+        cost = cost[0] if cost else {}
+    res = {
+        "arch": arch, "shape": "pipeline_cnn", "status": "ok",
+        "mesh": f"{s}x1(stage)", "pipeline": True,
+        "compile_s": round(t1 - t0, 1),
+        "n_stages": int(s),
+        "n_microbatches": int(n_microbatches),
+        "image_size": int(image_size),
+        "wire_width": int(width),
+        "stage_cost_cycles": [float(c) for c in plan["stage_cost"]],
+        "imbalance": plan["imbalance"],
+        "bubble_fraction": pp.bubble_fraction(n_microbatches, s),
+        "hlo_flops_per_dev": float(cost.get("flops", 0.0)),
+        "collectives": coll,
+    }
+    if verbose:
+        print(json.dumps(res, indent=None, default=float))
+    return res
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--pipeline", action="store_true")
+    ap.add_argument("--pipeline-cnn", action="store_true",
+                    help="CNN layer-pipeline cell (family=cnn archs)")
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--image-size", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
@@ -337,6 +412,15 @@ def main(argv=None):
                         traceback.print_exc()
                         print(json.dumps(r))
                     results.append(r)
+    elif args.pipeline_cnn or (args.arch and
+                               get_config(args.arch).family == "cnn"):
+        if not args.arch:
+            ap.error("--pipeline-cnn requires --arch (resnet50, "
+                     "mobilenet_v1 or mobilenet_v2)")
+        results.append(run_cnn_pipeline_cell(
+            args.arch, n_stages=args.stages,
+            n_microbatches=args.microbatches, batch=args.batch,
+            image_size=args.image_size))
     else:
         results.append(run_cell(args.arch, args.shape,
                                 multi_pod=args.multi_pod,

@@ -12,48 +12,28 @@ Conv weights are stored 2D as (k*k*cin, cout) with rows in HWIO order
 (row f = (ky*k + kx)*cin + c), so the block ids of a pruned weight
 decompose into the fused kernel's (ky, kx, channel-block) gathers.
 
-Each model also exposes a ``*_specs()`` layer list consumed by the
-throughput-balancing planner (repro/core/planner.py) — the analogue of
-the compiler walking the TensorFlow graph.
+Each model's layer list is a flat ``ConvSpec`` sequence that
+``repro/core/graph.LayerGraph`` resolves into the layer-graph IR
+(explicit residual edges, fused-relu flags). ``cnn_forward`` is a
+single graph interpreter over that IR — the per-model if/elif
+monoliths are gone (the old ResNet body survives only as
+``cnn_forward_reference``, the bit-for-bit regression oracle in
+tests). ``stage_programs`` compiles the same IR into per-stage wire
+programs for the heterogeneous layer pipeline (core/pipeline.py), with
+residual edges that cross a stage cut carried in the wire's skip
+buffer (DESIGN.md §4).
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.graph import INPUT, ConvSpec, LayerGraph, graph_for
 from repro.models import layers as L
 from repro.models.layers import SparseWeight
-
-
-@dataclass(frozen=True)
-class ConvSpec:
-    name: str
-    kind: str            # conv | dw | maxpool | avgpool | fc | add | relu
-    cin: int = 0
-    cout: int = 0
-    k: int = 1
-    stride: int = 1
-    in_hw: int = 0       # input spatial size (square)
-    residual_from: str = ""   # for add nodes
-
-    @property
-    def out_hw(self) -> int:
-        return -(-self.in_hw // self.stride)
-
-    def macs(self) -> int:
-        """Dense multiply-accumulates for this op."""
-        if self.kind == "conv":
-            return self.out_hw ** 2 * self.k ** 2 * self.cin * self.cout
-        if self.kind == "dw":
-            return self.out_hw ** 2 * self.k ** 2 * self.cin
-        if self.kind == "fc":
-            return self.cin * self.cout
-        return 0
 
 
 # ---------------------------------------------------------------------------
@@ -71,14 +51,22 @@ def resnet50_specs() -> list[ConvSpec]:
             stride = 2 if (bi == 0 and si > 0) else 1
             ihw = hw * stride      # input spatial before downsample
             pre = f"s{si}b{bi}"
+            block_in = specs[-1].name
             specs += [
                 ConvSpec(f"{pre}_c1", "conv", cin, mid, 1, stride, ihw),
                 ConvSpec(f"{pre}_c2", "conv", mid, mid, 3, 1, hw),
-                ConvSpec(f"{pre}_c3", "conv", mid, out, 1, 1, hw),
+                ConvSpec(f"{pre}_c3", "conv", mid, out, 1, 1, hw,
+                         relu=False),
             ]
+            resid = block_in
             if bi == 0:
+                resid = f"{pre}_proj"
                 specs.append(ConvSpec(f"{pre}_proj", "conv", cin, out, 1,
-                                      stride, ihw))
+                                      stride, ihw, relu=False,
+                                      input_from=block_in))
+            specs.append(ConvSpec(f"{pre}_add", "add", out, out, 1, 1, hw,
+                                  residual_from=resid,
+                                  input_from=f"{pre}_c3"))
             cin = out
     specs += [ConvSpec("avgpool", "avgpool", 2048, 2048, 7, 1, 7),
               ConvSpec("fc", "fc", 2048, 1000, 1, 1, 1)]
@@ -115,10 +103,17 @@ def mobilenet_v2_specs() -> list[ConvSpec]:
             s = stride if bi == 0 else 1
             mid = cin * t
             pre = f"s{si}b{bi}"
+            block_in = specs[-1].name
             if t != 1:
                 specs.append(ConvSpec(f"{pre}_exp", "conv", cin, mid, 1, 1, hw))
             specs += [ConvSpec(f"{pre}_dw", "dw", mid, mid, 3, s, hw),
-                      ConvSpec(f"{pre}_pj", "conv", mid, cout, 1, 1, hw // s)]
+                      ConvSpec(f"{pre}_pj", "conv", mid, cout, 1, 1, hw // s,
+                               relu=False)]
+            if s == 1 and cin == cout:
+                # MobileNet-V2 linear bottleneck: residual add, NO relu
+                specs.append(ConvSpec(f"{pre}_add", "add", cout, cout, 1, 1,
+                                      hw // s, residual_from=block_in,
+                                      relu=False))
             hw //= s
             cin = cout
     specs += [ConvSpec("conv_last", "conv", 320, 1280, 1, 1, 7),
@@ -134,7 +129,7 @@ def specs_for(name: str) -> list[ConvSpec]:
 
 
 # ---------------------------------------------------------------------------
-# params + forward
+# params + node executors
 # ---------------------------------------------------------------------------
 
 def _maybe_sparse(w2d, sp, cin: Optional[int] = None):
@@ -164,7 +159,7 @@ def _largest_div(n, cap):
 
 
 def init_cnn(cfg, key, *, image_size: int = 224):
-    specs = specs_for(cfg.name)
+    specs = [s for s in specs_for(cfg.name) if s.kind in ("conv", "dw", "fc")]
     params = {}
     keys = jax.random.split(key, len(specs))
     sp = cfg.sparsity
@@ -214,8 +209,134 @@ def depthwise(x, p, s: ConvSpec, *, relu=True):
     return jax.nn.relu(y) if relu else y
 
 
-def cnn_forward(cfg, params, images):
-    """images: (N, H, W, 3) -> logits (N, 1000)."""
+def run_node(node: ConvSpec, params, *args):
+    """Execute one IR node. ``args`` are the resolved input values
+    (primary[, residual] — see LayerGraph.inputs)."""
+    x = args[0]
+    if node.kind == "conv":
+        return conv2d(x, params[node.name], node, relu=node.relu)
+    if node.kind == "dw":
+        return depthwise(x, params[node.name], node, relu=node.relu)
+    if node.kind == "maxpool":
+        return lax.reduce_window(x, -jnp.inf, lax.max,
+                                 (1, node.k, node.k, 1),
+                                 (1, node.stride, node.stride, 1), "SAME")
+    if node.kind == "avgpool":
+        return x.mean(axis=(1, 2))                       # global avg pool
+    if node.kind == "add":
+        y = x + args[1]
+        return jax.nn.relu(y) if node.relu else y
+    if node.kind == "fc":
+        p = params[node.name]
+        return x.astype(jnp.float32) @ p["w"].astype(jnp.float32) \
+            + p["b"].astype(jnp.float32)
+    raise ValueError(f"unknown node kind {node.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# the graph interpreter (replaces the per-model forward monoliths)
+# ---------------------------------------------------------------------------
+
+def _interpret(g: LayerGraph, params, x, *, start=0, stop=None,
+               env=None) -> dict:
+    """Execute nodes [start, stop) of ``g``. ``env`` maps value names to
+    arrays and must contain every value the slice reads; returns the
+    env extended with each executed node's output. Dead values are NOT
+    freed here — slicing callers (stage programs) bound liveness via
+    the wire contract instead."""
+    env = dict(env or {})
+    if x is not None:
+        env[INPUT] = x
+    stop = len(g.nodes) if stop is None else stop
+    for i in range(start, stop):
+        node = g.nodes[i]
+        args = [env[src] for src in g.inputs[i]]
+        env[node.name] = run_node(node, params, *args)
+    return env
+
+
+def cnn_forward(cfg, params, images, *, graph: Optional[LayerGraph] = None):
+    """images: (N, H, W, 3) -> logits (N, 1000). Executes the layer-graph
+    IR node-by-node — one interpreter for all three CNNs."""
+    g = graph if graph is not None else graph_for(cfg.name)
+    env = _interpret(g, params, images.astype(jnp.bfloat16))
+    return env[g.output]
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous stage programs for the layer pipeline
+# ---------------------------------------------------------------------------
+
+def node_shapes(cfg, params, image_shape,
+                graph: Optional[LayerGraph] = None) -> dict:
+    """ShapeDtypeStruct for every IR value (INPUT + each node output) at
+    a concrete image shape — the shape inference the stage partitioner
+    needs to size wires."""
+    g = graph if graph is not None else graph_for(cfg.name)
+
+    def all_outputs(imgs):
+        return _interpret(g, params, imgs.astype(jnp.bfloat16))
+
+    imgs = jax.ShapeDtypeStruct(tuple(image_shape), jnp.float32)
+    return jax.eval_shape(all_outputs, imgs)
+
+
+def stage_programs(cfg, params, stage_of, image_shape, *,
+                   graph: Optional[LayerGraph] = None):
+    """Compile the IR into per-stage wire programs.
+
+    stage_of: stage id per IR node (contiguous, from
+    ``planner.plan_cnn_pipeline``). image_shape: (mb, H, W, 3) of ONE
+    microbatch. Returns ``(stage_fns, pack_in, unpack_out, width)``:
+
+    - stage_fns[s]: (mb, width) f32 wire -> (mb, width) f32 wire. The
+      wire carries the stage boundary's live values (activations AND
+      residual skips crossing the cut), each value f32-widened
+      (bf16 -> f32 is exact, so pipelined == sequential bit-for-bit).
+    - pack_in(images): (mb, H, W, 3) -> input wire for stage 0.
+    - unpack_out(wire): last stage's wire -> logits.
+    """
+    from repro.core import pipeline as pp
+    g = graph if graph is not None else graph_for(cfg.name)
+    slices = g.partition(list(stage_of))
+    shapes = node_shapes(cfg, params, image_shape, graph=g)
+
+    def fmt(names):
+        return pp.WireFormat.for_values(
+            [(n, shapes[n].shape, shapes[n].dtype) for n in names])
+
+    in_fmts = [fmt(sl.in_live) for sl in slices]
+    out_fmts = [fmt(sl.out_live) for sl in slices]
+    width = max(f.width for f in in_fmts + out_fmts)
+
+    def make_stage(sl, in_fmt, out_fmt):
+        def stage(wire):
+            env = dict(zip(sl.in_live, in_fmt.unpack(wire)))
+            env = _interpret(g, params, None, start=sl.start, stop=sl.stop,
+                             env=env)
+            return out_fmt.pack([env[n] for n in sl.out_live], width)
+        return stage
+
+    stage_fns = [make_stage(sl, fi, fo)
+                 for sl, fi, fo in zip(slices, in_fmts, out_fmts)]
+
+    def pack_in(images):
+        return in_fmts[0].pack([images.astype(jnp.bfloat16)], width)
+
+    def unpack_out(wire):
+        return out_fmts[-1].unpack(wire)[0]
+
+    return stage_fns, pack_in, unpack_out, width
+
+
+# ---------------------------------------------------------------------------
+# frozen pre-IR reference (regression oracle: tests compare the graph
+# interpreter and the pipelined executors against this bit-for-bit)
+# ---------------------------------------------------------------------------
+
+def cnn_forward_reference(cfg, params, images):
+    """The original per-model forward monoliths, kept verbatim as the
+    exact-equivalence bar for the IR refactor. Do not extend."""
     name = cfg.name
     specs = {s.name: s for s in specs_for(name)}
     x = images.astype(jnp.bfloat16)

@@ -1,0 +1,57 @@
+"""Subprocess body for the shard_map CNN-pipeline equivalence tests.
+
+Run as:  python _cnn_pipeline_sub.py <arch>
+with XLA_FLAGS=--xla_force_host_platform_device_count=4 set by the
+caller. Checks BOTH sparse and dense params: pipelined logits through
+``pipeline_apply_hetero`` (4-stage mesh) must exactly match the
+sequential graph interpreter. Prints SUBPROCESS_OK on success.
+"""
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import pipeline as pp, planner
+from repro.models import cnn
+
+
+def check(arch: str, sparse: bool, *, n_stages=4, img=32, batch=4, m=2):
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(
+        cfg, sparsity=dataclasses.replace(
+            cfg.sparsity, enabled=sparse,
+            block_m=min(cfg.sparsity.block_m, 32),
+            block_n=min(cfg.sparsity.block_n, 32)))
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_cnn(cfg, key)
+    plan = planner.plan_cnn_pipeline(cfg, params, n_stages)
+    s = plan["n_stages"]
+    assert s == n_stages, (s, n_stages)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (batch, img, img, 3))
+    x_mb = pp.microbatch(imgs, m)
+    stage_fns, pack_in, unpack_out, _ = cnn.stage_programs(
+        cfg, params, plan["stage_of"], x_mb.shape[1:])
+    x_wire = jax.vmap(pack_in)(x_mb)
+    mesh = jax.make_mesh((s,), ("stage",))
+    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+    with mesh_ctx:
+        out_w = jax.jit(lambda xw: pp.pipeline_apply_hetero(
+            stage_fns, xw, mesh=mesh, stage_axis="stage",
+            n_stages=s))(x_wire)
+    logits = jnp.concatenate([unpack_out(out_w[i]) for i in range(m)], 0)
+    ref = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))(params, imgs)
+    assert logits.shape == ref.shape, (logits.shape, ref.shape)
+    diff = float(jnp.abs(logits - ref).max())
+    exact = bool(jnp.all(logits == ref))
+    tag = "sparse" if sparse else "dense"
+    print(f"{arch} {tag}: exact={exact} maxdiff={diff}", flush=True)
+    assert exact, f"{arch} {tag}: pipelined != sequential (maxdiff {diff})"
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1]
+    for sparse in (True, False):
+        check(arch, sparse)
+    print("SUBPROCESS_OK")

@@ -1,0 +1,126 @@
+"""Heterogeneous CNN layer pipeline: pipelined-vs-sequential exact
+equivalence for all three paper CNNs on both executor paths, plus the
+stage-assignment / microbatch contract fixes.
+
+The GSPMD path needs no mesh, so it runs in-process on the default
+single device. The shard_map path needs one device per stage and runs
+in a subprocess with a forced host device count (like
+test_pipeline.py), executing tests/_cnn_pipeline_sub.py.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import pipeline as pp, planner
+from repro.models import cnn
+
+CNN_ARCHS = ["resnet50", "mobilenet_v1", "mobilenet_v2"]
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch, sparse):
+    cfg = get_config(arch)
+    return dataclasses.replace(
+        cfg, sparsity=dataclasses.replace(
+            cfg.sparsity, enabled=sparse,
+            block_m=min(cfg.sparsity.block_m, 32),
+            block_n=min(cfg.sparsity.block_n, 32)))
+
+
+# -- stage assignment from cost-model cycles ---------------------------------
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_plan_cnn_pipeline_cost_balanced(arch):
+    cfg = _cfg(arch, sparse=(arch == "resnet50"))
+    params = cnn.init_cnn(cfg, KEY)
+    plan = planner.plan_cnn_pipeline(cfg, params, 4)
+    assert plan["n_stages"] == 4
+    costs = plan["node_cycles"]
+    assert len(costs) == len(cnn.specs_for(arch))
+    assert (costs > 0).all()
+    # cost-balanced, not count-balanced: max stage cycle-sum within 2x
+    # of the mean even though per-stage layer counts vary widely
+    assert plan["imbalance"] < 2.0
+    counts = np.bincount(plan["stage_of"])
+    assert counts.min() >= 1
+    # cuts follow cycles, not layer count: stages own unequal node counts
+    assert counts.max() > counts.min()
+
+
+def test_assign_stages_clamps_when_overprovisioned():
+    """Satellite: n_stages > n_layers used to return fewer stage ids
+    than requested, leaving silent empty stages downstream."""
+    costs = np.array([3.0, 1.0, 2.0])
+    stage_of = planner.assign_stages(costs, 8)
+    assert stage_of == [0, 1, 2]              # clamped: one layer each
+    assert max(stage_of) + 1 == len(costs)
+    with pytest.raises(ValueError):
+        planner.assign_stages(costs, 0)
+    with pytest.raises(ValueError):
+        planner.assign_stages(np.array([]), 2)
+
+
+def test_stack_stages_rejects_empty_stage():
+    blocks = {"w": jnp.arange(6.0).reshape(3, 2)}
+    with pytest.raises(ValueError, match="own no layers"):
+        pp.stack_stages(blocks, [0, 0, 1], 4)   # stages 2,3 empty
+    stacked, mask = pp.stack_stages(blocks, [0, 0, 1], 2)
+    assert stacked["w"].shape == (2, 2, 2)
+
+
+def test_microbatch_contract():
+    x = jnp.arange(12.0).reshape(6, 2)
+    with pytest.raises(ValueError, match="not divisible"):
+        pp.microbatch(x, 4)
+    with pytest.raises(ValueError, match=">= 1"):
+        pp.microbatch(x, 0)
+    padded = pp.microbatch(x, 4, pad=True)
+    assert padded.shape == (4, 2, 2)
+    np.testing.assert_array_equal(np.asarray(padded.reshape(8, 2)[:6]),
+                                  np.asarray(x))
+    assert float(jnp.abs(padded.reshape(8, 2)[6:]).sum()) == 0.0
+    ok = pp.microbatch(x, 3)
+    assert ok.shape == (3, 2, 2)
+
+
+# -- pipelined == sequential: GSPMD path (in-process, single device) --------
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+@pytest.mark.parametrize("sparse", [True, False], ids=["sparse", "dense"])
+def test_gspmd_pipeline_matches_sequential(arch, sparse):
+    cfg = _cfg(arch, sparse)
+    params = cnn.init_cnn(cfg, KEY)
+    plan = planner.plan_cnn_pipeline(cfg, params, 3)
+    s = plan["n_stages"]
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    x_mb = pp.microbatch(imgs, 2)
+    stage_fns, pack_in, unpack_out, width = cnn.stage_programs(
+        cfg, params, plan["stage_of"], x_mb.shape[1:])
+    x_wire = jax.vmap(pack_in)(x_mb)
+    out_w = jax.jit(lambda xw: pp.pipeline_apply_gspmd_hetero(
+        stage_fns, xw, n_stages=s))(x_wire)
+    logits = jnp.concatenate([unpack_out(out_w[i]) for i in range(2)], 0)
+    ref = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))(params, imgs)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref))
+
+
+# -- pipelined == sequential: shard_map path (subprocess, 4 devices) --------
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_shardmap_pipeline_matches_sequential(arch):
+    sub = os.path.join(os.path.dirname(__file__), "_cnn_pipeline_sub.py")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src"),
+                    os.environ.get("PYTHONPATH", "")]))
+    r = subprocess.run([sys.executable, sub, arch], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert "SUBPROCESS_OK" in r.stdout, r.stdout + r.stderr

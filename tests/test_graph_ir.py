@@ -1,0 +1,146 @@
+"""Layer-graph IR: structure, partitioning, and the round-trip
+regression bar — specs_for -> LayerGraph -> interpreter must reproduce
+the pre-IR forward monoliths bit-for-bit."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import pipeline as pp
+from repro.core.graph import INPUT, ConvSpec, LayerGraph, graph_for
+from repro.models import cnn
+
+CNN_ARCHS = ["resnet50", "mobilenet_v1", "mobilenet_v2"]
+KEY = jax.random.PRNGKey(0)
+
+
+# -- structure ---------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_graph_valid_and_topo(arch):
+    g = graph_for(arch)
+    g.validate()                      # raises on bad edges
+    assert g.inputs[0] == (INPUT,)
+    assert g.nodes[-1].kind == "fc"
+    # every add node has exactly two resolved inputs, others one
+    for node, edge in zip(g.nodes, g.inputs):
+        assert len(edge) == (2 if node.kind == "add" else 1), node.name
+
+
+def test_resnet_residual_edges():
+    g = graph_for("resnet50")
+    # projection shortcut block: residual comes from the proj conv,
+    # whose own input bypasses c1/c2/c3 back to the block input
+    i = g.index("s1b0_add")
+    assert g.inputs[i] == ("s1b0_c3", "s1b0_proj")
+    j = g.index("s1b0_proj")
+    assert g.inputs[j] == ("s0b2_add",)
+    # identity block: residual skips straight to the previous block
+    k = g.index("s1b1_add")
+    assert g.inputs[k] == ("s1b1_c3", "s1b0_add")
+    # relu placement: residual-branch convs are linear, adds fuse relu
+    assert not g.nodes[g.index("s1b0_c3")].relu
+    assert not g.nodes[j].relu
+    assert g.nodes[i].relu
+
+
+def test_mbv2_linear_bottleneck_edges():
+    g = graph_for("mobilenet_v2")
+    i = g.index("s3b1_add")
+    assert g.nodes[i].residual_from == "s3b0_add" or \
+        g.nodes[i].residual_from.endswith(("_pj", "_add"))
+    assert not g.nodes[i].relu     # V2 adds are linear (no relu)
+    assert not g.nodes[g.index("s3b1_pj")].relu
+
+
+def test_graph_rejects_bad_edges():
+    bad = [ConvSpec("a", "conv", 3, 8, 3, 1, 8),
+           ConvSpec("b", "add", 8, 8, 1, 1, 8, residual_from="nope")]
+    with pytest.raises(ValueError, match="nope"):
+        LayerGraph.from_specs("bad", bad)
+    with pytest.raises(ValueError, match="residual_from"):
+        LayerGraph.from_specs("bad2", [
+            ConvSpec("a", "conv", 3, 8, 3, 1, 8),
+            ConvSpec("b", "add", 8, 8, 1, 1, 8)])
+
+
+# -- partitioning / live sets ------------------------------------------------
+
+def test_partition_live_sets_carry_residuals():
+    g = graph_for("resnet50")
+    # cut right after s0b0_c1: the block input (pool1) is still live
+    # (read by s0b0_proj) -> it must ride the skip buffer
+    b = g.index("s0b0_c1") + 1
+    live = g.live_at(b)
+    assert "pool1" in live and "s0b0_c1" in live
+    # a cut between blocks carries exactly one value
+    b2 = g.index("s0b0_add") + 1
+    assert g.live_at(b2) == ("s0b0_add",)
+
+
+def test_partition_contract_errors():
+    g = graph_for("mobilenet_v1")
+    n = len(g.nodes)
+    with pytest.raises(ValueError):
+        g.partition([0] * (n - 1))               # wrong length
+    with pytest.raises(ValueError):
+        g.partition([0] * (n - 1) + [2])         # gap in ids
+    with pytest.raises(ValueError):
+        g.partition([1] + [1] * (n - 1))         # doesn't start at 0
+    sl = g.partition([0] * (n // 2) + [1] * (n - n // 2))
+    assert sl[0].in_live == (INPUT,)
+    assert sl[-1].out_live == (g.output,)
+
+
+# -- wire format -------------------------------------------------------------
+
+def test_wire_format_roundtrip_exact():
+    fmt = pp.WireFormat.for_values([
+        ("a", (2, 3, 4), jnp.bfloat16),
+        ("b", (2, 5), jnp.float32),
+    ])
+    a = jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4).astype(jnp.bfloat16)
+    b = jnp.linspace(-1.0, 1.0, 10).reshape(2, 5)
+    wire = fmt.pack([a, b], width=32)
+    assert wire.shape == (2, 32) and wire.dtype == jnp.float32
+    a2, b2 = fmt.unpack(wire)
+    assert a2.dtype == jnp.bfloat16 and b2.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(a2, np.float32),
+                                  np.asarray(a, np.float32))
+    np.testing.assert_array_equal(np.asarray(b2), np.asarray(b))
+
+
+def test_wire_format_errors():
+    with pytest.raises(ValueError, match="at least one"):
+        pp.WireFormat.for_values([])
+    with pytest.raises(ValueError, match="microbatch"):
+        pp.WireFormat.for_values([("a", (2, 3), jnp.float32),
+                                  ("b", (3, 3), jnp.float32)])
+    fmt = pp.WireFormat.for_values([("a", (2, 8), jnp.float32)])
+    with pytest.raises(ValueError, match="width"):
+        fmt.pack([jnp.zeros((2, 8))], width=4)
+
+
+# -- round-trip regression bar ----------------------------------------------
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+@pytest.mark.parametrize("sparse", [True, False], ids=["sparse", "dense"])
+def test_interpreter_matches_reference_bitforbit(arch, sparse):
+    """specs_for -> IR -> graph interpreter == old cnn_forward monolith,
+    bit-for-bit, sparse and dense."""
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(
+        cfg, sparsity=dataclasses.replace(
+            cfg.sparsity, enabled=sparse,
+            block_m=min(cfg.sparsity.block_m, 32),
+            block_n=min(cfg.sparsity.block_n, 32)))
+    params = cnn.init_cnn(cfg, KEY)
+    img = jax.random.normal(KEY, (2, 32, 32, 3))
+    ref = jax.jit(lambda p, x: cnn.cnn_forward_reference(cfg, p, x))(
+        params, img)
+    new = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))(params, img)
+    assert ref.shape == new.shape == (2, 1000)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(new))
