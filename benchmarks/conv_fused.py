@@ -59,6 +59,7 @@ def main(smoke: bool = False):
     if smoke:   # CI: same layer shapes at reduced batch/resolution
         shapes = [("r50_s1b0_c2", 2, 28, 128, 128, 3, 1, 32, 32),
                   ("r50_conv1", 1, 96, 3, 64, 7, 2, 3, 32)]
+    results = {}
     for name, n, hw, cin, cout, k, stride, bm, bn in shapes:
         cfg = SparsityConfig(enabled=True, sparsity=SPARSITY, block_m=bm,
                              block_n=bn)
@@ -84,6 +85,10 @@ def main(smoke: bool = False):
             f"speedup={us_base / us_fused:.2f}x")
         row(f"conv_fused_{name}_hbm_bytes_ratio", 0.0,
             f"{mb / mf:.2f}x_modeled_im2col/fused")
+        results[name] = {"us_im2col": us_base, "us_fused": us_fused,
+                         "speedup": us_base / us_fused,
+                         "hbm_bytes_ratio": mb / mf}
+    return results
 
 
 if __name__ == "__main__":

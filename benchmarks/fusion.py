@@ -1,0 +1,96 @@
+"""Graph-level operator fusion: wall-clock + modeled HBM traffic.
+
+Measures exactly what core/fusion.py claims to buy:
+
+- **Wall-clock** — fused vs unfused MobileNet-V1 forward on the xla
+  path (the fused dw->pw twin feeds each depthwise row chunk straight
+  into the pointwise matmul; the unfused graph round-trips the full
+  depthwise tensor between nodes). Also checks fused == unfused logits
+  to accumulation rounding for all three CNNs while it's at it.
+- **Modeled HBM bytes** — ``fusion.graph_hbm_bytes`` (each node reads
+  its inputs once + writes its output once) on the unfused vs fused
+  graph: per fused super-node, the parts' traffic vs the super-node's.
+  MobileNet blocks drop from four full-tensor passes to two; residual
+  blocks (ResNet c3+add, MobileNet-V2 linear bottlenecks) save more.
+
+Emits CSV rows plus a dict (consumed by benchmarks/run.py --out for
+the consolidated BENCH.json headline numbers).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.fusion import fused_block_traffic, fused_graph_for, \
+    graph_hbm_bytes
+from repro.core.graph import graph_for
+from repro.models import cnn
+from benchmarks.common import row, timeit
+
+ARCHS = ("mobilenet_v1", "mobilenet_v2", "resnet50")
+WALLCLOCK_ARCH = "mobilenet_v1"
+
+
+def main(smoke: bool = False):
+    img, batch = (64, 2) if smoke else (160, 4)
+    results = {"archs": {}, "wallclock": {}}
+
+    # -- wall-clock: fused vs unfused MBV1 forward (xla path) --------------
+    cfg = get_config(WALLCLOCK_ARCH)
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, img, img, 3))
+    unfused = jax.jit(lambda a: cnn.cnn_forward(
+        cfg, params, a, graph=graph_for(WALLCLOCK_ARCH)))
+    fused = jax.jit(lambda a: cnn.cnn_forward(cfg, params, a))
+    us_unf, out_u = timeit(unfused, x, warmup=1, iters=3)
+    us_fus, out_f = timeit(fused, x, warmup=1, iters=3)
+    speedup = us_unf / us_fus
+    scale = max(float(jnp.abs(out_u).max()), 1e-6)
+    err = float(jnp.abs(out_f - out_u).max())
+    assert err <= 2e-2 * scale + 1e-6, (err, scale)
+    row(f"fusion_{WALLCLOCK_ARCH}_unfused", us_unf, f"img={img},b={batch}")
+    row(f"fusion_{WALLCLOCK_ARCH}_fused", us_fus, f"speedup={speedup:.2f}x")
+    results["wallclock"] = {"arch": WALLCLOCK_ARCH, "image_size": img,
+                            "batch": batch, "us_unfused": us_unf,
+                            "us_fused": us_fus, "speedup": speedup}
+
+    # -- modeled HBM traffic (224px, batch 1: the paper's shapes) ----------
+    for arch in ARCHS:
+        acfg = get_config(arch)
+        aparams = cnn.init_cnn(acfg, jax.random.PRNGKey(0))
+        shapes = cnn.node_shapes(acfg, aparams, (1, 224, 224, 3),
+                                 graph=graph_for(arch))
+        per_block = fused_block_traffic(arch, shapes)
+        ratios = sorted(t["ratio"] for t in per_block.values())
+        kinds = {n.name: n.kind for n in fused_graph_for(arch).nodes}
+        # the tentpole metric: full-tensor HBM passes per dw->pw block
+        # (4 unfused -> 2 fused; V2 triple fusions 6 -> 3 == 2x each)
+        dwpw_pass = [t["unfused_passes"] / t["fused_passes"]
+                     for n, t in per_block.items() if kinds[n] == "dw_pw"]
+        tot_unf = sum(graph_hbm_bytes(graph_for(arch), shapes).values())
+        tot_fus = sum(graph_hbm_bytes(fused_graph_for(arch),
+                                      shapes).values())
+        blk_unf = sum(t["unfused_bytes"] for t in per_block.values())
+        blk_fus = sum(t["fused_bytes"] for t in per_block.values())
+        results["archs"][arch] = {
+            "fused_blocks": len(per_block),
+            "block_ratio_min": ratios[0],
+            "block_ratio_mean": sum(ratios) / len(ratios),
+            "block_bytes_ratio": blk_unf / blk_fus,
+            "dwpw_pass_ratio_min": min(dwpw_pass) if dwpw_pass else None,
+            "graph_bytes_unfused": tot_unf,
+            "graph_bytes_fused": tot_fus,
+            "graph_bytes_ratio": tot_unf / tot_fus,
+        }
+        row(f"fusion_{arch}_hbm_block_ratio", 0.0,
+            f"{blk_unf / blk_fus:.2f}x_over_{len(per_block)}_blocks"
+            f"_min={ratios[0]:.2f}x")
+        if dwpw_pass:
+            row(f"fusion_{arch}_dwpw_hbm_passes", 0.0,
+                f"{min(dwpw_pass):.1f}x_fewer_full-tensor_passes_per_block")
+        row(f"fusion_{arch}_hbm_graph_ratio", 0.0,
+            f"{tot_unf / tot_fus:.2f}x_modeled_unfused/fused")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -6,36 +6,79 @@ continues; the exit code is nonzero iff any module failed.
 ``--smoke`` runs tiny shapes so CI finishes in minutes: modules whose
 ``main`` accepts a ``smoke`` keyword get ``smoke=True``; the rest run
 as-is (they are already CPU-sized).
+
+``--out BENCH.json`` consolidates the headline numbers (fused-conv
+speedup, pipeline bubble, fusion speedup + modeled HBM ratios) plus
+every module's returned dict into one top-level JSON — uploaded as a
+CI artifact so the perf trajectory is tracked across PRs.
 """
 import argparse
 import importlib
 import inspect
+import json
 import sys
 import traceback
 
 MODULES = ("balance_fig3", "planner_accuracy", "sparse_speedup",
-           "conv_fused", "throughput_tab4", "resources_tab2",
+           "conv_fused", "fusion", "throughput_tab4", "resources_tab2",
            "pipeline_cnn")
+
+
+def _headline(modules: dict) -> dict:
+    """Cross-PR trend numbers, pulled from the module result dicts.
+    Missing modules (failed or returning None) yield nulls, never a
+    crash — BENCH.json must materialize even on a partial run."""
+    out = {}
+    conv = modules.get("conv_fused") or {}
+    if "r50_s1b0_c2" in conv:
+        out["conv_fused_speedup_r50_3x3"] = conv["r50_s1b0_c2"]["speedup"]
+        out["conv_fused_hbm_ratio_r50_3x3"] = \
+            conv["r50_s1b0_c2"]["hbm_bytes_ratio"]
+    pipe = modules.get("pipeline_cnn") or {}
+    if pipe.get("points"):
+        last = pipe["points"][-1]
+        out["pipeline_bubble_measured"] = last["bubble_measured"]
+        out["pipeline_bubble_analytic"] = last["bubble_analytic"]
+        out["pipeline_imbalance"] = pipe.get("imbalance")
+    fus = modules.get("fusion") or {}
+    if fus.get("wallclock"):
+        out["fusion_speedup_mbv1"] = fus["wallclock"]["speedup"]
+    for arch, a in (fus.get("archs") or {}).items():
+        out[f"fusion_hbm_block_ratio_{arch}"] = a["block_bytes_ratio"]
+        out[f"fusion_hbm_graph_ratio_{arch}"] = a["graph_bytes_ratio"]
+    return out
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI")
+    ap.add_argument("--out", default=None,
+                    help="write consolidated headline JSON here")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failed = []
+    module_results = {}
     for name in MODULES:
         try:
             fn = importlib.import_module(f"benchmarks.{name}").main
             if args.smoke and "smoke" in inspect.signature(fn).parameters:
-                fn(smoke=True)
+                ret = fn(smoke=True)
             else:
-                fn()
+                ret = fn()
+            if isinstance(ret, dict):
+                module_results[name] = ret
         except Exception:
             traceback.print_exc()
             print(f"benchmarks.{name},0,ERROR")
             failed.append(name)
+    if args.out:
+        bench = {"smoke": args.smoke, "failed": failed,
+                 "headline": _headline(module_results),
+                 "modules": module_results}
+        with open(args.out, "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"# wrote {args.out}", file=sys.stderr)
     if failed:
         print(f"# {len(failed)} module(s) failed: {', '.join(failed)}",
               file=sys.stderr)

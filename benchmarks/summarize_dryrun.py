@@ -1,4 +1,4 @@
-"""Render dryrun_results.json into the EXPERIMENTS.md roofline table."""
+"""Render dryrun_results.json into a markdown roofline table."""
 import json
 import sys
 

@@ -110,6 +110,30 @@ def op_cost_dw(name: str, k: int, cin: int, lines: int, width: int) -> OpCost:
                   n_in_units=k * k, idx=None)
 
 
+def op_cost_fused_dw_pw(name: str, k: int, cin: int, cout: int, lines: int,
+                        width: int, pw_sw: Optional[SparseWeight] = None
+                        ) -> OpCost:
+    """Fused depthwise->pointwise super-node (core/fusion.py R1,
+    kernels/dw_pw_fused.py).
+
+    The fused unit streams the depthwise line straight into the 1x1
+    dot units — the two sub-units run in lockstep on the same output
+    line, so the SLOWER one governs the cycle count (on the FPGA the
+    dw shift chain and the pw DSP column are separate hardware; on TPU
+    the VPU dw accumulate overlaps the MXU matmul across grid steps).
+    Returns the dominant sub-unit's OpCost renamed to the fused node,
+    so ``balance()`` splits allocate against the true bottleneck."""
+    import dataclasses
+    dw = op_cost_dw(name + ".dw", k, cin, lines, width)
+    if pw_sw is not None:
+        pw = op_cost_from_sparse(name + ".pw", pw_sw, lines, width)
+    else:
+        pw = op_cost_dense(name + ".pw", max(cin // 8, 1), cout, lines,
+                           width)
+    dom = dw if dw.cycles(1) >= pw.cycles(1) else pw
+    return dataclasses.replace(dom, name=name)
+
+
 def op_cost_unstructured(name: str, mask: np.ndarray, lines: int,
                          width: int) -> OpCost:
     """Unstructured scalar sparsity (the paper's actual format): mask is
@@ -160,7 +184,7 @@ def lm_block_flops(cfg, seq: int, batch: int, layer_idx: int) -> float:
     raise ValueError(f)
 
 
-# --- whole-step analytic costs (roofline terms; see EXPERIMENTS.md) ---------
+# --- whole-step analytic costs (roofline terms for launch/dryrun.py) --------
 #
 # XLA's cost_analysis counts every loop body exactly once, so for scanned
 # programs (layer stacks, blockwise attention, chunked CE/SSM scans) its

@@ -34,14 +34,22 @@ INPUT = "__images__"
 class ConvSpec:
     name: str
     kind: str            # conv | dw | maxpool | avgpool | fc | add
+                         # + fused super-node kinds emitted by
+                         # core/fusion.py: dw_pw | avgpool_fc (and conv /
+                         # dw_pw with a residual epilogue: residual_from
+                         # set on a non-add node)
     cin: int = 0
     cout: int = 0
     k: int = 1
     stride: int = 1
     in_hw: int = 0       # input spatial size (square)
-    residual_from: str = ""   # for add nodes: the skip-edge producer
+    residual_from: str = ""   # skip-edge producer (add nodes, or a fused
+                              # residual epilogue on conv/dw_pw nodes)
     relu: bool = True         # fused ReLU epilogue
     input_from: str = ""      # primary input override ("" = previous node)
+    parts: tuple = ()         # fused super-nodes: the original ConvSpecs
+                              # in execution order (params stay keyed by
+                              # the part names); () = not a fusion
 
     @property
     def out_hw(self) -> int:
@@ -91,10 +99,12 @@ class LayerGraph:
         for i, s in enumerate(nodes):
             primary = s.input_from or (nodes[i - 1].name if i else INPUT)
             edge = (primary,)
-            if s.kind == "add":
-                if not s.residual_from:
-                    raise ValueError(f"add node {s.name!r} has no "
-                                     "residual_from edge")
+            if s.kind == "add" and not s.residual_from:
+                raise ValueError(f"add node {s.name!r} has no "
+                                 "residual_from edge")
+            if s.residual_from:
+                # add nodes, or a fused residual epilogue on a conv/dw_pw
+                # super-node (core/fusion.py)
                 edge = (primary, s.residual_from)
             inputs.append(edge)
         g = cls(name, nodes, tuple(inputs))
@@ -110,12 +120,22 @@ class LayerGraph:
     def output(self) -> str:
         return self.nodes[-1].name
 
+    #: node kinds whose executor consumes a residual edge (add nodes and
+    #: the fused residual epilogues — see models/cnn.run_node)
+    RESIDUAL_KINDS = ("add", "conv", "dw_pw")
+
     def validate(self) -> None:
-        """Every edge references INPUT or an earlier node (topo order)."""
+        """Every edge references INPUT or an earlier node (topo order),
+        and residual edges only appear on kinds that execute them."""
         seen = {INPUT}
         for node, edge in zip(self.nodes, self.inputs):
             if node.name in seen:
                 raise ValueError(f"duplicate node name {node.name!r}")
+            if node.residual_from and node.kind not in self.RESIDUAL_KINDS:
+                raise ValueError(
+                    f"{self.name}: {node.kind!r} node {node.name!r} has a "
+                    f"residual_from edge, but only {self.RESIDUAL_KINDS} "
+                    "consume one — it would be silently dropped")
             for src in edge:
                 if src not in seen:
                     raise ValueError(

@@ -192,39 +192,54 @@ def plan_cnn(cfg, params, dsp_target: int = 5000, *, model: str = "aware") -> Pl
 # --- CNN layer-graph -> pipeline stages (the TPU layer pipeline) -----------
 
 def cnn_node_costs(cfg, params, graph=None) -> np.ndarray:
-    """Per-IR-node cycle estimates for stage assignment.
+    """Per-IR-node cycle estimates for stage assignment (defaults to
+    the FUSED graph, matching the interpreter).
 
     Sparse convs are priced from their TRUE per-split gather counts
     (costmodel.op_cost_conv_sparse over the pruned weights — the fused
     kernel's cost, not raw FLOPs); dense convs/fc from their dot-unit
     cycles; depthwise convs from their per-channel MAC chains
-    (op_cost_dw). Pools and adds are the FPGA's cheap companion ops:
-    one pass over their output lines."""
-    from repro.core.costmodel import op_cost_dw
-    from repro.core.graph import graph_for
+    (op_cost_dw); fused dw->pw super-nodes at the slower sub-unit's
+    rate (op_cost_fused_dw_pw — the units run in lockstep). A fused
+    residual epilogue adds one line-rate pass (the skip gather at the
+    flush); its HBM traffic is already the conv's own — the pre-add
+    output never round-trips (fusion.graph_hbm_bytes models exactly
+    that). Pools and standalone adds are the FPGA's cheap companion
+    ops: one pass over their output lines."""
+    from repro.core.costmodel import op_cost_dw, op_cost_fused_dw_pw
+    from repro.core.fusion import conv_part, fused_graph_for
     from repro.models.layers import SparseWeight
-    g = graph if graph is not None else graph_for(cfg.name)
+    g = graph if graph is not None else fused_graph_for(cfg.name)
     costs = []
     for s in g.nodes:
         if s.kind == "conv":
-            w = params[s.name]["w"]
+            w = params[conv_part(s).name]["w"]
             if isinstance(w, SparseWeight):
                 c = op_cost_conv_sparse(s.name, w, s.k, s.cin,
                                         s.out_hw, s.out_hw).cycles(1)
             else:
                 c = op_cost_dense(s.name, max(s.k * s.k * s.cin // 8, 1),
                                   s.cout, s.out_hw, s.out_hw).cycles(1)
-        elif s.kind == "fc":
-            w = params[s.name]["w"]
+        elif s.kind == "dw_pw":
+            pw_w = params[conv_part(s).name]["w"]
+            sw = pw_w if isinstance(pw_w, SparseWeight) else None
+            c = op_cost_fused_dw_pw(s.name, s.k, s.cin, s.cout,
+                                    s.out_hw, s.out_hw, pw_sw=sw).cycles(1)
+        elif s.kind in ("fc", "avgpool_fc"):
+            w = params[conv_part(s).name]["w"]
             if isinstance(w, SparseWeight):
                 c = op_cost_from_sparse(s.name, w, 1, 1).cycles(1)
             else:
                 c = op_cost_dense(s.name, max(s.cin // 8, 1), s.cout,
                                   1, 1).cycles(1)
+            if s.kind == "avgpool_fc":      # fused pool: one line pass
+                c += max(s.in_hw, 1)
         elif s.kind == "dw":
             c = op_cost_dw(s.name, s.k, s.cin, s.out_hw, s.out_hw).cycles(1)
         else:                       # maxpool/avgpool/add: line-rate companions
             c = max(s.out_hw, 1)
+        if s.residual_from and s.kind != "add":
+            c += max(s.out_hw, 1)           # fused residual epilogue
         costs.append(float(c))
     return np.asarray(costs)
 
@@ -234,11 +249,14 @@ def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None) -> dict:
     partition of the IR minimizing the max per-stage cycle sum (the
     multi-device analogue of HPIPE giving slow layers more DSPs).
 
-    Returns stage_of (per IR node), the per-stage cycle sums, the
-    imbalance ratio, and n_stages actually used (assign_stages clamps,
-    see its contract)."""
-    from repro.core.graph import graph_for
-    g = graph if graph is not None else graph_for(cfg.name)
+    Plans over the FUSED graph by default (core/fusion.py), at fused-
+    node granularity: super-nodes are atomic, so a stage cut can never
+    land inside a fusion and stage balance reflects the real
+    post-fusion HBM traffic. Returns stage_of (per fused-IR node), the
+    per-stage cycle sums, the imbalance ratio, and n_stages actually
+    used (assign_stages clamps, see its contract)."""
+    from repro.core.fusion import fused_graph_for
+    g = graph if graph is not None else fused_graph_for(cfg.name)
     costs = cnn_node_costs(cfg, params, graph=g)
     stage_of = assign_stages(costs, n_stages)
     used = max(stage_of) + 1

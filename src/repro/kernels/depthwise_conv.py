@@ -2,12 +2,24 @@
 
 HPIPE implements DepthwiseConv2D as its own hardware unit (Sec. V,
 MobileNets); on TPU the op is VPU-bound (no channel reduction for the
-MXU), so the kernel keeps a (H, W, C-tile) image slab resident in VMEM
-and accumulates k*k shifted elementwise products in f32 — one pass over
-HBM per input, the TPU analogue of the paper's line-buffered shift unit.
+MXU), so the kernel is line-buffered like the paper's shift unit: one
+padded input row (1, 1, Wp, C-tile) resident in VMEM per grid step, a
+f32 (Wo, C-tile) accumulator revisited across the k innermost steps
+(the ky shift is folded into the HBM row address by the index map, the
+kx shift is an in-VMEM slice).
 
-Grid: (batch, channel-tiles). SAME padding is applied by the wrapper so
-the kernel body is pure shifted multiply-accumulate.
+The previous formulation kept a full (H, W, C-tile) image slab plus a
+full f32 accumulator resident per step — the 112x112 MobileNet layers
+overflowed the ~16 MB VMEM budget at block_c=128 (114*114*128 bf16 in
++ 112*112*128 f32 acc + out ~ 13 MB, f32 input ~ 23 MB). Row tiling
+caps the working set at a few hundred KB regardless of H, and
+``pick_block_c`` clamps the channel tile from an explicit VMEM budget
+for pathological widths.
+
+Grid: (batch, out-row, channel-tiles, k); k innermost so the
+accumulator line stays resident while the k input rows stream through.
+SAME padding is applied by the wrapper so the kernel body is pure
+shifted multiply-accumulate.
 """
 from __future__ import annotations
 
@@ -15,60 +27,101 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.sparse_conv import pad_same_hw
+
+#: per-core VMEM budget the channel tile is clamped against; half the
+#: hardware's ~16 MB so double-buffered DMAs fit too
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
-def _kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, h_out: int,
-            w_out: int):
-    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)       # (h_out, w_out, tc)
-    x = x_ref[0]
-    for i in range(k):
-        for j in range(k):
-            part = jax.lax.slice(
-                x, (i, j, 0),
-                (i + (h_out - 1) * stride + 1,
-                 j + (w_out - 1) * stride + 1, x.shape[-1]),
-                (stride, stride, 1))
-            acc = acc + part.astype(jnp.float32) * w_ref[i, j].astype(
-                jnp.float32)
-    o_ref[0] = acc.astype(o_ref.dtype)
+def shifted_row_mac(row, taps_ky, k: int, wo: int, stride: int):
+    """One ky step of the line-buffered depthwise unit: the k shifted
+    strided (wo, C) windows of the resident input row, multiplied by
+    that kernel row's taps and summed in f32. ``row``: (wp, C);
+    ``taps_ky``: (k, C). Shared by the depthwise and the fused dw->pw
+    kernels so the window/stride math lives in exactly one place."""
+    acc = jnp.zeros((wo, row.shape[-1]), jnp.float32)
+    for kx in range(k):
+        win = lax.dynamic_slice(row, (kx, 0),
+                                (wo * stride, row.shape[-1]))
+        win = win.reshape(wo, stride, win.shape[-1])[:, 0, :]   # (wo, C)
+        acc = acc + win.astype(jnp.float32) * \
+            taps_ky[kx].astype(jnp.float32)
+    return acc
+
+
+def _vmem_bytes(wp: int, wo: int, tc: int, k: int, itemsize: int) -> int:
+    """Per-grid-step working set of the row kernel: input row + f32
+    accumulator + output row + the (k, k, tc) taps."""
+    return (wp * tc * itemsize          # resident input row
+            + wo * tc * 4               # f32 accumulator line
+            + wo * tc * itemsize        # output line
+            + k * k * tc * itemsize)    # taps
+
+
+def pick_block_c(w: int, c: int, k: int, stride: int, itemsize: int,
+                 budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Largest channel tile dividing ``c`` whose row working set fits
+    the VMEM budget (always >= 1: a single channel's rows are tiny)."""
+    wo = -(-w // stride)
+    wp = w + max((wo - 1) * stride + k - w, 0) + stride - 1
+    for tc in range(min(c, 128), 0, -1):
+        if c % tc == 0 and _vmem_bytes(wp, wo, tc, k, itemsize) <= budget:
+            return tc
+    return 1
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, k: int, wo: int, stride: int):
+    ky = pl.program_id(3)
+
+    @pl.when(ky == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += shifted_row_mac(x_ref[0, 0], w_ref[ky], k, wo, stride)
+
+    @pl.when(ky == k - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("stride", "block_c", "interpret"))
 def depthwise_conv_pallas(x: jax.Array, w: jax.Array, *, stride: int = 1,
-                          block_c: int = 128,
+                          block_c: int = 0,
                           interpret: bool = True) -> jax.Array:
     """x: (N, H, W, C) NHWC; w: (k, k, C). SAME padding. Returns
-    (N, ceil(H/stride), ceil(W/stride), C)."""
+    (N, ceil(H/stride), ceil(W/stride), C). ``block_c=0`` (default)
+    picks the largest channel tile that fits the VMEM budget."""
     n, h, wd, c = x.shape
     k = w.shape[0]
-    h_out = -(-h // stride)
-    w_out = -(-wd // stride)
-    # SAME padding (as lax.conv with padding="SAME")
-    pad_h = max((h_out - 1) * stride + k - h, 0)
-    pad_w = max((w_out - 1) * stride + k - wd, 0)
-    xp = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
-                     (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
-    hp, wp = xp.shape[1], xp.shape[2]
-    tc = min(block_c, c)
-    assert c % tc == 0
-    kernel = functools.partial(_kernel, k=k, stride=stride,
-                               h_out=h_out, w_out=w_out)
+    xp, h_out, w_out = pad_same_hw(x, k, stride, overread=True)
+    wp = xp.shape[2]
+    tc = block_c or pick_block_c(wd, c, k, stride, x.dtype.itemsize)
+    tc = min(tc, c)
+    assert c % tc == 0, (c, tc)
+    kernel = functools.partial(_kernel, k=k, wo=w_out, stride=stride)
     return pl.pallas_call(
         kernel,
-        grid=(n, c // tc),
+        grid=(n, h_out, c // tc, k),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, tc), lambda b, ci: (b, 0, 0, ci)),
-            pl.BlockSpec((k, k, tc), lambda b, ci: (0, 0, ci)),
+            # H-block size 1 => absolute input row oy*stride + ky
+            pl.BlockSpec((1, 1, wp, tc),
+                         lambda b, oy, ci, ky: (b, oy * stride + ky, 0, ci)),
+            pl.BlockSpec((k, k, tc), lambda b, oy, ci, ky: (0, 0, ci)),
         ],
-        out_specs=pl.BlockSpec((1, h_out, w_out, tc),
-                               lambda b, ci: (b, 0, 0, ci)),
+        out_specs=pl.BlockSpec((1, 1, w_out, tc),
+                               lambda b, oy, ci, ky: (b, oy, 0, ci)),
         out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, c), x.dtype),
+        scratch_shapes=[pltpu.VMEM((w_out, tc), jnp.float32)],
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(xp, w)
 

@@ -18,17 +18,43 @@ from jax import lax
 
 _IMPL: Literal["xla", "pallas"] = os.environ.get("REPRO_KERNEL_IMPL", "xla")
 
-# Perf-iteration knob (EXPERIMENTS.md §Perf, qwen3 iter 2): token-shard
-# the sparse-matmul input. REFUTED at TP=16 — vals are ob-sharded on the
-# same axis, so GSPMD gathers the 2.5GB weight stack per layer instead
-# (27s -> 65s collective). Kept for meshes with a spare axis.
+# Perf-iteration knob: token-shard the sparse-matmul input so block
+# gathers stay shard-local (see the sharding note inside sparse_matmul).
+# REFUTED at TP=16 — vals are ob-sharded on the same axis, so GSPMD
+# gathers the 2.5GB weight stack per layer instead (27s -> 65s
+# collective). Kept, default-off, for meshes with a spare axis.
 _SPARSE_X_TOKEN_SHARD = False
 
 
-def set_impl(impl: str) -> None:
+class _ImplGuard:
+    """Returned by :func:`set_impl`; restores the previous impl on
+    ``__exit__`` so tests can scope the global dispatch:
+
+        with set_impl("pallas"):
+            ...   # pallas path
+        # previous impl restored
+    """
+
+    def __init__(self, prev: str):
+        self._prev = prev
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        global _IMPL
+        _IMPL = self._prev
+        return False
+
+
+def set_impl(impl: str) -> _ImplGuard:
+    """Set the kernel dispatch path. Usable bare (``set_impl("xla")``)
+    or as a context manager that restores the prior impl on exit."""
     global _IMPL
     assert impl in ("xla", "pallas"), impl
+    prev = _IMPL
     _IMPL = impl
+    return _ImplGuard(prev)
 
 
 def sparse_matmul(x: jax.Array, sw) -> jax.Array:
@@ -88,13 +114,17 @@ def sparse_matmul(x: jax.Array, sw) -> jax.Array:
 
 
 def sparse_conv(x, sw, bias, *, k: int, stride: int = 1,
-                relu: bool = True) -> jax.Array:
+                relu: bool = True, residual=None) -> jax.Array:
     """Fused implicit-GEMM block-sparse conv (HPIPE conv unit).
 
     x: (N, H, W, C) NHWC; sw: block-balanced SparseWeight over the
     HWIO-flattened (k*k*C, Cout) matrix (block rows must divide C);
     bias: (Cout,). SAME padding, fused bias + optional ReLU epilogue.
-    Neither path materializes the (N*Ho*Wo, k*k*C) im2col tensor.
+    ``residual`` (optional, (N, Ho, Wo, Cout)): fused skip tensor added
+    before the activation — the graph fusion pass (core/fusion.py)
+    folds ResNet's ``c3 -> add -> relu`` tail in here so the pre-add
+    conv output never round-trips HBM. Neither path materializes the
+    (N*Ho*Wo, k*k*C) im2col tensor.
     """
     n, h, w, c = x.shape
     ob, n_k, bm, bn = sw.vals.shape
@@ -102,7 +132,7 @@ def sparse_conv(x, sw, bias, *, k: int, stride: int = 1,
     assert c % bm == 0, (c, bm)
     if _IMPL == "pallas":
         from repro.kernels.sparse_conv import sparse_conv_pallas
-        return sparse_conv_pallas(x, sw.vals, sw.idx, bias, k=k,
+        return sparse_conv_pallas(x, sw.vals, sw.idx, bias, residual, k=k,
                                   stride=stride, relu=relu)
 
     # XLA path: lax.scan over the K surviving blocks per output column.
@@ -131,10 +161,20 @@ def sparse_conv(x, sw, bias, *, k: int, stride: int = 1,
         return acc + fdot("jnhwm,jmo->nhwjo", a, vals_l), None
 
     from repro.models.layers import accum_dtype as _ad
-    acc0 = jnp.zeros((n, ho, wo, ob, bn), _ad() or x.dtype)
+    ad = _ad() or x.dtype
+    if residual is None:
+        acc0 = jnp.zeros((n, ho, wo, ob, bn), ad)
+    else:
+        # fused residual epilogue: seed the accumulator with skip + bias
+        # so no full-tensor add follows the scan (the jaxpr regression
+        # in tests/test_fusion.py checks this)
+        acc0 = residual.astype(ad).reshape(n, ho, wo, ob, bn) \
+            + bias.astype(ad).reshape(ob, bn)
     acc, _ = lax.scan(step, acc0,
                       (ky.T, kx.T, cb.T, sw.vals.swapaxes(0, 1)))
-    y = acc.reshape(n, ho, wo, ob * bn) + bias.astype(acc.dtype)
+    y = acc.reshape(n, ho, wo, ob * bn)
+    if residual is None:
+        y = y + bias.astype(acc.dtype)
     if relu:
         y = jax.nn.relu(y)
     return y.astype(x.dtype)
@@ -155,8 +195,26 @@ def depthwise_conv(x, w, *, stride: int = 1):
     """NHWC depthwise conv dispatch (HPIPE's DepthwiseConv2D unit)."""
     if _IMPL == "pallas":
         from repro.kernels.depthwise_conv import depthwise_conv_pallas
-        c = x.shape[-1]
-        bc = 128 if c % 128 == 0 else (8 if c % 8 == 0 else c)
-        return depthwise_conv_pallas(x, w, stride=stride, block_c=bc)
+        # block_c=0: the kernel clamps the channel tile to its VMEM
+        # budget (the 112x112 MobileNet layers used to overflow at 128)
+        return depthwise_conv_pallas(x, w, stride=stride, block_c=0)
     from repro.kernels.depthwise_conv import depthwise_conv_ref
     return depthwise_conv_ref(x, w, stride=stride)
+
+
+def dw_pw_conv(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1,
+               dw_relu: bool = True, relu: bool = True, residual=None):
+    """Fused depthwise -> pointwise MobileNet block body (graph fusion
+    pass, core/fusion.py): one HBM read and one write — the depthwise
+    intermediate lives only in VMEM on both paths (DESIGN.md §5).
+
+    x: (N, H, W, C); dw_w: (k, k, C); dw_b: (C,); pw_w: (C, Cout) dense
+    2D; pw_b: (Cout,); residual: optional fused (N, Ho, Wo, Cout) skip.
+    """
+    if _IMPL == "pallas":
+        from repro.kernels.dw_pw_fused import dw_pw_pallas
+        return dw_pw_pallas(x, dw_w, dw_b, pw_w, pw_b, residual,
+                            stride=stride, dw_relu=dw_relu, relu=relu)
+    from repro.kernels.dw_pw_fused import dw_pw_xla
+    return dw_pw_xla(x, dw_w, dw_b, pw_w, pw_b, residual,
+                     stride=stride, dw_relu=dw_relu, relu=relu)

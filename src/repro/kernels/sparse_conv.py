@@ -57,8 +57,28 @@ def same_pads(size: int, k: int, stride: int) -> tuple[int, int, int]:
     return out, total // 2, total - total // 2
 
 
-def _kernel(ky_ref, kx_ref, cb_ref, x_ref, vals_ref, b_ref, o_ref, acc_ref,
-            *, n_k: int, wo: int, stride: int, relu: bool):
+def pad_same_hw(x, k: int, stride: int, *, overread: bool = False):
+    """SAME-pad the H/W axes of NHWC ``x``; returns (xp, ho, wo).
+
+    ``overread=True`` adds ``stride - 1`` extra right columns so a
+    kernel's in-VMEM ``(wo * stride)``-wide strided window never reads
+    past the buffer at kx = k-1 (shared by every line-buffered Pallas
+    kernel in this package)."""
+    n, h, w, _ = x.shape
+    ho, ph_lo, ph_hi = same_pads(h, k, stride)
+    wo, pw_lo, pw_hi = same_pads(w, k, stride)
+    if overread:
+        pw_hi += stride - 1
+    xp = jnp.pad(x, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    return xp, ho, wo
+
+
+def _kernel(ky_ref, kx_ref, cb_ref, x_ref, vals_ref, b_ref, *rest,
+            n_k: int, wo: int, stride: int, relu: bool, has_res: bool):
+    if has_res:
+        res_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
     j = pl.program_id(2)
     l = pl.program_id(3)
 
@@ -83,6 +103,11 @@ def _kernel(ky_ref, kx_ref, cb_ref, x_ref, vals_ref, b_ref, o_ref, acc_ref,
     @pl.when(l == n_k - 1)
     def _flush():
         y = acc_ref[...] + b_ref[...].astype(jnp.float32)       # (wo, bn)
+        if has_res:
+            # fused residual epilogue (core/fusion.py R2): the skip
+            # tensor's (wo, bn) line is gathered here, at the flush —
+            # the pre-add conv output never exists in HBM
+            y = y + res_ref[0, 0].astype(jnp.float32)
         if relu:
             y = jnp.maximum(y, 0.0)
         o_ref[0, 0] = y.astype(o_ref.dtype)
@@ -91,49 +116,55 @@ def _kernel(ky_ref, kx_ref, cb_ref, x_ref, vals_ref, b_ref, o_ref, acc_ref,
 @functools.partial(jax.jit, static_argnames=("k", "stride", "relu",
                                              "interpret"))
 def sparse_conv_pallas(x: jax.Array, vals: jax.Array, idx: jax.Array,
-                       bias: jax.Array, *, k: int, stride: int = 1,
+                       bias: jax.Array, residual: jax.Array = None, *,
+                       k: int, stride: int = 1,
                        relu: bool = True, interpret: bool = True) -> jax.Array:
     """y[n, oy, ox, j*bn:+bn] = act(sum_l win(x; ky,kx,cb)[oy,ox] @ vals[j,l] + b).
 
     x: (N, H, W, C) NHWC; vals: (ob, K, bm, bn); idx: (ob, K) int32 flat
-    HWIO block ids; bias: (ob*bn,). SAME padding. ``interpret=True``
-    runs the kernel body on CPU (this container); on a real TPU pass
-    interpret=False for the Mosaic path (pad Wo/bn to the (8, 128) tile
-    there).
+    HWIO block ids; bias: (ob*bn,). SAME padding. ``residual``
+    (optional, (N, Ho, Wo, ob*bn)) is a fused skip tensor added in the
+    K-1 flush epilogue before the activation (core/fusion.py residual
+    rule). ``interpret=True`` runs the kernel body on CPU (this
+    container); on a real TPU pass interpret=False for the Mosaic path
+    (pad Wo/bn to the (8, 128) tile there).
     """
     n, h, w, c = x.shape
     ob, n_k, bm, bn = vals.shape
     assert c % bm == 0, (c, bm)
-    ho, ph_lo, ph_hi = same_pads(h, k, stride)
-    wo, pw_lo, pw_hi = same_pads(w, k, stride)
-    # extra right columns so the in-kernel (wo*stride)-wide strided
-    # window never reads past the buffer at kx = k-1
-    pw_hi += stride - 1
-    xp = jnp.pad(x, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    xp, ho, wo = pad_same_hw(x, k, stride, overread=True)
     wp = xp.shape[2]
     ky, kx, cb = conv_block_coords(idx.astype(jnp.int32), k, c, bm)
 
     grid = (n, ho, ob, n_k)
+    has_res = residual is not None
     kernel = functools.partial(_kernel, n_k=n_k, wo=wo, stride=stride,
-                               relu=relu)
+                               relu=relu, has_res=has_res)
+    in_specs = [
+        # H-block size 1 => the index map's H coordinate is an
+        # absolute row: oy*stride + ky is the implicit-GEMM
+        # gather, computed from the prefetched stream.
+        pl.BlockSpec(
+            (1, 1, wp, bm),
+            lambda i, oy, j, l, ky, kx, cb:
+                (i, oy * stride + ky[j, l], 0, cb[j, l])),
+        pl.BlockSpec((1, 1, bm, bn),
+                     lambda i, oy, j, l, ky, kx, cb: (j, l, 0, 0)),
+        pl.BlockSpec((1, bn),
+                     lambda i, oy, j, l, ky, kx, cb: (0, j)),
+    ]
+    operands = [ky, kx, cb, xp, vals, bias.reshape(1, ob * bn)]
+    if has_res:
+        # skip line DMA'd only for the flush step's output block
+        in_specs.append(pl.BlockSpec(
+            (1, 1, wo, bn), lambda i, oy, j, l, ky, kx, cb: (i, oy, 0, j)))
+        operands.append(residual)
     return pl.pallas_call(
         kernel,
         grid_spec=PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
-            in_specs=[
-                # H-block size 1 => the index map's H coordinate is an
-                # absolute row: oy*stride + ky is the implicit-GEMM
-                # gather, computed from the prefetched stream.
-                pl.BlockSpec(
-                    (1, 1, wp, bm),
-                    lambda i, oy, j, l, ky, kx, cb:
-                        (i, oy * stride + ky[j, l], 0, cb[j, l])),
-                pl.BlockSpec((1, 1, bm, bn),
-                             lambda i, oy, j, l, ky, kx, cb: (j, l, 0, 0)),
-                pl.BlockSpec((1, bn),
-                             lambda i, oy, j, l, ky, kx, cb: (0, j)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (1, 1, wo, bn),
                 lambda i, oy, j, l, ky, kx, cb: (i, oy, 0, j)),
@@ -145,4 +176,4 @@ def sparse_conv_pallas(x: jax.Array, vals: jax.Array, idx: jax.Array,
                                  "arbitrary"),
         ),
         interpret=interpret,
-    )(ky, kx, cb, xp, vals, bias.reshape(1, ob * bn))
+    )(*operands)

@@ -97,7 +97,8 @@ def param_spec(path, leaf, mesh: Mesh, *, pure_dp: bool = False) -> P:
         # shard d_model, NOT vocab: a vocab-sharded table turns every
         # token lookup into a full-table all-gather (3.1GB f32 for qwen3)
         # and the grad scatter-add into another; d-sharded lookups are
-        # local. (Perf iteration 3, EXPERIMENTS.md SPerf.)
+        # local. (Perf iteration 3; see the sharding note in
+        # kernels/ops.sparse_matmul.)
         return _spec_with_dim(shape, -1, "model", msize)
     if name == "head":
         return _spec_with_dim(shape, -1, "model", msize)

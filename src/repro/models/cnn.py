@@ -18,10 +18,14 @@ Each model's layer list is a flat ``ConvSpec`` sequence that
 single graph interpreter over that IR — the per-model if/elif
 monoliths are gone (the old ResNet body survives only as
 ``cnn_forward_reference``, the bit-for-bit regression oracle in
-tests). ``stage_programs`` compiles the same IR into per-stage wire
-programs for the heterogeneous layer pipeline (core/pipeline.py), with
-residual edges that cross a stage cut carried in the wire's skip
-buffer (DESIGN.md §4).
+tests). The interpreter, the stage planner and ``stage_programs`` all
+run the FUSED graph by default (core/fusion.py): dw->pw pairs,
+residual ``add``(+relu) tails and the avgpool->fc head collapse into
+super-nodes whose intermediates live only in VMEM (DESIGN.md §5).
+``stage_programs`` compiles the IR into per-stage wire programs for
+the heterogeneous layer pipeline (core/pipeline.py), with residual
+edges that cross a stage cut carried in the wire's skip buffer
+(DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -31,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.fusion import conv_part, fused_graph_for
 from repro.core.graph import INPUT, ConvSpec, LayerGraph, graph_for
 from repro.models import layers as L
 from repro.models.layers import SparseWeight
@@ -180,15 +185,17 @@ def init_cnn(cfg, key, *, image_size: int = 224):
     return params
 
 
-def conv2d(x, p, s: ConvSpec, *, relu=True):
+def conv2d(x, p, s: ConvSpec, *, relu=True, residual=None):
     """The HPIPE convolution unit: fused implicit-GEMM sparse conv for
     pruned weights (patches form in VMEM per grid step, never in HBM),
-    native conv for dense weights. No im2col tensor either way."""
+    native conv for dense weights. No im2col tensor either way.
+    ``residual``: optional fused skip tensor added in the epilogue
+    before the activation (graph fusion, core/fusion.py)."""
     w = p["w"]
     if isinstance(w, SparseWeight):
         from repro.kernels import ops as kops
         return kops.sparse_conv(x, w, p["b"], k=s.k, stride=s.stride,
-                                relu=relu)
+                                relu=relu, residual=residual)
     w4 = w.reshape(s.k, s.k, s.cin, s.cout)              # HWIO row order
     # f32 accumulation (what the MXU does natively with bf16 inputs);
     # XLA:CPU would otherwise accumulate the conv in bf16
@@ -197,6 +204,14 @@ def conv2d(x, p, s: ConvSpec, *, relu=True):
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         preferred_element_type=jnp.float32)
     y = y + p["b"].astype(jnp.float32)
+    if residual is not None:
+        # fused epilogue in the activation dtype — the exact op sequence
+        # the unfused graph ran (conv -> round -> add -> relu), so fused
+        # == unfused BITWISE on the dense path and the elementwise chain
+        # stays bit-stable across compilation contexts (shard_map vs
+        # standalone)
+        y = y.astype(x.dtype) + residual
+        return jax.nn.relu(y) if relu else y
     if relu:
         y = jax.nn.relu(y)
     return y.astype(x.dtype)
@@ -209,12 +224,35 @@ def depthwise(x, p, s: ConvSpec, *, relu=True):
     return jax.nn.relu(y) if relu else y
 
 
+def _fused_dw_pw(x, params, node: ConvSpec, residual=None):
+    """Execute a fused dw_pw super-node: the depthwise intermediate
+    lives only in VMEM (kernels/dw_pw_fused.py). A SPARSE pointwise
+    weight falls back to the two-op sequence inside the node (the
+    fusion legality note in DESIGN.md §5: the fused MXU matmul needs a
+    dense (C, Cout) operand; the paper evaluates the MobileNets dense,
+    so this is the off-spec path)."""
+    dw_s, pw_s = node.parts[0], node.parts[1]
+    dw_p, pw_p = params[dw_s.name], params[pw_s.name]
+    if isinstance(pw_p["w"], SparseWeight):
+        y = depthwise(x, dw_p, dw_s, relu=dw_s.relu)
+        return conv2d(y, pw_p, pw_s, relu=node.relu, residual=residual)
+    from repro.kernels import ops as kops
+    return kops.dw_pw_conv(x, dw_p["w"], dw_p["b"], pw_p["w"], pw_p["b"],
+                           stride=node.stride, dw_relu=dw_s.relu,
+                           relu=node.relu, residual=residual)
+
+
 def run_node(node: ConvSpec, params, *args):
-    """Execute one IR node. ``args`` are the resolved input values
-    (primary[, residual] — see LayerGraph.inputs)."""
+    """Execute one IR node (original layer kinds + the fused
+    super-nodes emitted by core/fusion.py). ``args`` are the resolved
+    input values (primary[, residual] — see LayerGraph.inputs)."""
     x = args[0]
+    res = args[1] if (node.residual_from and node.kind != "add") else None
     if node.kind == "conv":
-        return conv2d(x, params[node.name], node, relu=node.relu)
+        p = params[conv_part(node).name]
+        return conv2d(x, p, node, relu=node.relu, residual=res)
+    if node.kind == "dw_pw":
+        return _fused_dw_pw(x, params, node, residual=res)
     if node.kind == "dw":
         return depthwise(x, params[node.name], node, relu=node.relu)
     if node.kind == "maxpool":
@@ -226,8 +264,10 @@ def run_node(node: ConvSpec, params, *args):
     if node.kind == "add":
         y = x + args[1]
         return jax.nn.relu(y) if node.relu else y
-    if node.kind == "fc":
-        p = params[node.name]
+    if node.kind in ("fc", "avgpool_fc"):
+        if node.kind == "avgpool_fc":                    # fused head
+            x = x.mean(axis=(1, 2))
+        p = params[conv_part(node).name]
         return x.astype(jnp.float32) @ p["w"].astype(jnp.float32) \
             + p["b"].astype(jnp.float32)
     raise ValueError(f"unknown node kind {node.kind!r}")
@@ -257,8 +297,12 @@ def _interpret(g: LayerGraph, params, x, *, start=0, stop=None,
 
 def cnn_forward(cfg, params, images, *, graph: Optional[LayerGraph] = None):
     """images: (N, H, W, 3) -> logits (N, 1000). Executes the layer-graph
-    IR node-by-node — one interpreter for all three CNNs."""
-    g = graph if graph is not None else graph_for(cfg.name)
+    IR node-by-node — one interpreter for all three CNNs. Runs the
+    FUSED graph by default (core/fusion.py: dw->pw, residual epilogues
+    and the avgpool->fc head collapse into super-nodes whose
+    intermediates never touch HBM); pass ``graph=graph_for(name)`` for
+    the unfused view."""
+    g = graph if graph is not None else fused_graph_for(cfg.name)
     env = _interpret(g, params, images.astype(jnp.bfloat16))
     return env[g.output]
 
@@ -271,8 +315,9 @@ def node_shapes(cfg, params, image_shape,
                 graph: Optional[LayerGraph] = None) -> dict:
     """ShapeDtypeStruct for every IR value (INPUT + each node output) at
     a concrete image shape — the shape inference the stage partitioner
-    needs to size wires."""
-    g = graph if graph is not None else graph_for(cfg.name)
+    needs to size wires. Defaults to the fused graph (matching
+    ``cnn_forward``); pass an explicit graph for the unfused view."""
+    g = graph if graph is not None else fused_graph_for(cfg.name)
 
     def all_outputs(imgs):
         return _interpret(g, params, imgs.astype(jnp.bfloat16))
@@ -285,9 +330,10 @@ def stage_programs(cfg, params, stage_of, image_shape, *,
                    graph: Optional[LayerGraph] = None):
     """Compile the IR into per-stage wire programs.
 
-    stage_of: stage id per IR node (contiguous, from
-    ``planner.plan_cnn_pipeline``). image_shape: (mb, H, W, 3) of ONE
-    microbatch. Returns ``(stage_fns, pack_in, unpack_out, width)``:
+    stage_of: stage id per IR node of the FUSED graph (contiguous, from
+    ``planner.plan_cnn_pipeline`` — fused super-nodes are atomic, so a
+    stage cut can never land inside a fusion). image_shape: (mb, H, W, 3)
+    of ONE microbatch. Returns ``(stage_fns, pack_in, unpack_out, width)``:
 
     - stage_fns[s]: (mb, width) f32 wire -> (mb, width) f32 wire. The
       wire carries the stage boundary's live values (activations AND
@@ -297,7 +343,7 @@ def stage_programs(cfg, params, stage_of, image_shape, *,
     - unpack_out(wire): last stage's wire -> logits.
     """
     from repro.core import pipeline as pp
-    g = graph if graph is not None else graph_for(cfg.name)
+    g = graph if graph is not None else fused_graph_for(cfg.name)
     slices = g.partition(list(stage_of))
     shapes = node_shapes(cfg, params, image_shape, graph=g)
 

@@ -108,6 +108,41 @@ def test_depthwise_conv_allclose(k, stride, c, hw, dtype):
                                rtol=tol, atol=tol)
 
 
+def test_depthwise_conv_largest_mobilenet_shape_fits_vmem():
+    """The 112x112 MobileNet layers used to overflow VMEM: the old
+    kernel kept a full (H, W, block_c) slab + f32 accumulator resident
+    (~13-23 MB at block_c=128). The row kernel's working set must fit
+    the budget for EVERY MobileNet dw layer at the auto-picked tile,
+    and the largest shape must still be numerically right."""
+    from repro.kernels.depthwise_conv import (VMEM_BUDGET_BYTES,
+                                              _vmem_bytes,
+                                              depthwise_conv_pallas,
+                                              depthwise_conv_ref,
+                                              pick_block_c)
+    from repro.models import cnn as cnn_mod
+    for arch in ("mobilenet_v1", "mobilenet_v2"):
+        for s in cnn_mod.specs_for(arch):
+            if s.kind != "dw":
+                continue
+            for itemsize in (2, 4):                  # bf16 and f32 inputs
+                tc = pick_block_c(s.in_hw, s.cin, s.k, s.stride, itemsize)
+                assert s.cin % tc == 0
+                wo = -(-s.in_hw // s.stride)
+                wp = s.in_hw + max((wo - 1) * s.stride + s.k - s.in_hw,
+                                   0) + s.stride - 1
+                assert _vmem_bytes(wp, wo, tc, s.k, itemsize) \
+                    <= VMEM_BUDGET_BYTES, (arch, s.name, tc)
+    # the worst offender end-to-end: 112x112, C=128 (old kernel: ~13 MB
+    # bf16 / ~23 MB f32 resident; row kernel: a few hundred KB)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(k1, (1, 112, 112, 128), jnp.float32)
+    w = jax.random.normal(k2, (3, 3, 128), jnp.float32)
+    want = depthwise_conv_ref(x, w, stride=1)
+    got = depthwise_conv_pallas(x, w, stride=1)      # auto block_c
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_mobilenet_forward_with_pallas_depthwise():
     """End-to-end MobileNet-V1 with the Pallas depthwise path."""
     from repro.configs import get_config
@@ -117,14 +152,11 @@ def test_mobilenet_forward_with_pallas_depthwise():
     params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
     img = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
     ref_logits = cnn.cnn_forward(cfg, params, img)
-    ops.set_impl("pallas")
-    try:
-        # only the depthwise dispatch differs; sparse matmuls need
+    with ops.set_impl("pallas"):
+        # only the depthwise/dw_pw dispatch differs; sparse matmuls need
         # aligned token counts for the pallas path, keep xla for them by
         # checking shapes inside ops (pallas sparse needs M%8==0; 32x32
         # image gives M=1024 ✓)
         pal_logits = cnn.cnn_forward(cfg, params, img)
-    finally:
-        ops.set_impl("xla")
     np.testing.assert_allclose(np.asarray(pal_logits), np.asarray(ref_logits),
                                rtol=2e-2, atol=2e-2)

@@ -55,12 +55,8 @@ def test_fused_conv_matches_dense_oracle(impl, k, stride, sp):
         sw = S.to_block_balanced(w, cfg)
         w4 = S.densify(sw).reshape(k, k, cin, cout)
         want = _dense_oracle(x, w4, b, stride, True)
-        prev = kops._IMPL
-        kops.set_impl(impl)
-        try:
+        with kops.set_impl(impl):
             got = cnn.conv2d(x, {"w": sw, "b": b}, spec)
-        finally:
-            kops.set_impl(prev)
     err = float(jnp.abs(got.astype(jnp.float32) - want).max())
     assert err <= 2e-2, err
 
@@ -77,12 +73,8 @@ def test_fused_conv_no_relu_epilogue(impl):
         enabled=True, sparsity=0.5, block_m=bm, block_n=bn))
     want = _dense_oracle(x, S.densify(sw).reshape(3, 3, cin, cout), b, 1,
                          False)
-    prev = kops._IMPL
-    kops.set_impl(impl)
-    try:
+    with kops.set_impl(impl):
         got = kops.sparse_conv(x, sw, b, k=3, stride=1, relu=False)
-    finally:
-        kops.set_impl(prev)
     assert float(jnp.min(want)) < 0.0          # oracle actually goes negative
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
