@@ -1,0 +1,72 @@
+"""Per-stage weight placement: per-device parameter residency of the
+placed pipeline vs the replicated executor (HPIPE's per-layer weight
+memories vs a whole-model copy on every device).
+
+Pure accounting over the real param pytrees + the memory-aware planner
+— no wall-clock, so the numbers are deterministic and gate-friendly:
+``placed_ratio`` (max stage bytes / total bytes) is what one device
+holds after ``stage_param_shardings`` places the packed buffer.
+Sparse ResNet-50 additionally plans under the 1/4 budget (the ISSUE 4
+acceptance configuration); the MobileNets run dense (paper Table IV)
+and unbudgeted, showing what cost-balanced cuts alone leave resident.
+
+Emits CSV rows plus a JSON summary consumed by benchmarks/run.py for
+BENCH.json headline keys (``placement_param_ratio_<arch>``).
+"""
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import get_config
+from repro.core import planner
+from repro.core.costmodel import pytree_param_bytes
+from repro.models import cnn
+from benchmarks.common import row
+
+N_STAGES = 8
+ARCHS = (("resnet50", True, 0.25), ("mobilenet_v1", False, None),
+         ("mobilenet_v2", False, None))
+
+
+def main(smoke: bool = False, out: str = None):
+    results = {"n_stages": N_STAGES, "archs": {}}
+    for arch, sparse, budget_frac in ARCHS:
+        cfg = get_config(arch)
+        cfg = dataclasses.replace(
+            cfg, sparsity=dataclasses.replace(
+                cfg.sparsity, enabled=sparse,
+                block_m=min(cfg.sparsity.block_m, 32),
+                block_n=min(cfg.sparsity.block_n, 32)))
+        params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+        total = pytree_param_bytes(params)
+        budget = int(budget_frac * total) if budget_frac else None
+        plan = planner.plan_cnn_pipeline(cfg, params, N_STAGES,
+                                         max_stage_param_bytes=budget)
+        placed = int(plan["placed_bytes_per_device"])
+        ratio = placed / total
+        results["archs"][arch] = {
+            "sparse": sparse,
+            "param_bytes_replicated_per_device": total,
+            "param_bytes_placed_per_device": placed,
+            "placed_ratio": ratio,
+            "budget_frac": budget_frac,
+            "imbalance": plan["imbalance"],
+            "stage_param_bytes": [int(b) for b in plan["stage_param_bytes"]],
+        }
+        row(f"placement_{arch}", 0,
+            f"placed={placed}B_repl={total}B_ratio={ratio:.3f}")
+    print("placement_json," + json.dumps(results))
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    main(smoke=a.smoke, out=a.out)

@@ -8,20 +8,55 @@ continues; the exit code is nonzero iff any module failed.
 as-is (they are already CPU-sized).
 
 ``--out BENCH.json`` consolidates the headline numbers (fused-conv
-speedup, pipeline bubble, fusion speedup + modeled HBM ratios) plus
-every module's returned dict into one top-level JSON — uploaded as a
-CI artifact so the perf trajectory is tracked across PRs.
+speedup, pipeline bubble, fusion speedup + modeled HBM ratios,
+placement bytes ratios) plus every module's returned dict into one
+top-level JSON — uploaded as a CI artifact so the perf trajectory is
+tracked across PRs.
+
+``--baseline BENCH_BASELINE.json`` turns the smoke run into a
+REGRESSION GATE: each headline key is compared against the checked-in
+baseline with a per-key direction + relative tolerance (wall-clock
+keys get loose tolerances, modeled/analytic keys tight ones); a
+worse-than-tolerance value — or a baseline key that vanished — fails
+the run. The delta table is printed, and appended to
+``$GITHUB_STEP_SUMMARY`` as markdown when that env var is set (the CI
+job summary).
 """
 import argparse
 import importlib
 import inspect
 import json
+import os
 import sys
 import traceback
 
 MODULES = ("balance_fig3", "planner_accuracy", "sparse_speedup",
            "conv_fused", "fusion", "throughput_tab4", "resources_tab2",
-           "pipeline_cnn")
+           "pipeline_cnn", "placement")
+
+# headline-key gate spec: direction ("higher"/"lower" is better) and
+# relative tolerance. Wall-clock-derived keys are noisy on shared CI
+# runners -> generous tolerance, regression-direction only; modeled /
+# analytic keys are deterministic -> tight. A ZERO baseline has no
+# relative scale, so the tolerance is applied as an ABSOLUTE bound
+# there (e.g. pipeline_bubble_measured 0.0 -> 0.7 must still fail).
+GATE = {
+    "conv_fused_speedup_r50_3x3": ("higher", 0.50),
+    "conv_fused_hbm_ratio_r50_3x3": ("higher", 0.05),
+    "pipeline_bubble_measured": ("lower", 0.60),
+    "pipeline_bubble_analytic": ("lower", 0.01),
+    "pipeline_imbalance": ("lower", 0.10),
+    "fusion_speedup_mbv1": ("higher", 0.50),
+    "fusion_hbm_block_ratio_resnet50": ("higher", 0.05),
+    "fusion_hbm_block_ratio_mobilenet_v1": ("higher", 0.05),
+    "fusion_hbm_block_ratio_mobilenet_v2": ("higher", 0.05),
+    "fusion_hbm_graph_ratio_resnet50": ("higher", 0.05),
+    "fusion_hbm_graph_ratio_mobilenet_v1": ("higher", 0.05),
+    "fusion_hbm_graph_ratio_mobilenet_v2": ("higher", 0.05),
+    "placement_param_ratio_resnet50": ("lower", 0.05),
+    "placement_param_ratio_mobilenet_v1": ("lower", 0.05),
+    "placement_param_ratio_mobilenet_v2": ("lower", 0.05),
+}
 
 
 def _headline(modules: dict) -> dict:
@@ -46,7 +81,88 @@ def _headline(modules: dict) -> dict:
     for arch, a in (fus.get("archs") or {}).items():
         out[f"fusion_hbm_block_ratio_{arch}"] = a["block_bytes_ratio"]
         out[f"fusion_hbm_graph_ratio_{arch}"] = a["graph_bytes_ratio"]
+    for arch, a in ((modules.get("placement") or {}).get("archs")
+                    or {}).items():
+        out[f"placement_param_ratio_{arch}"] = a["placed_ratio"]
     return out
+
+
+def compare_to_baseline(headline: dict, baseline: dict) -> tuple[list, bool]:
+    """Per-key delta rows [(key, base, cur, delta%, status)] + overall
+    pass/fail. A key present in the baseline but missing (or null) now
+    is a regression (a module silently stopped reporting); a NEW key
+    with no baseline is informational only."""
+    rows, ok = [], True
+    keys = sorted(set(baseline) | set(headline))
+    for k in keys:
+        base, cur = baseline.get(k), headline.get(k)
+        if base is None:
+            rows.append((k, base, cur, None, "new"))
+            continue
+        if cur is None:
+            rows.append((k, base, cur, None, "MISSING"))
+            ok = False
+            continue
+        if k not in GATE:
+            # an ungated key has no declared direction — guessing one
+            # would gate lower-is-better metrics backwards, so report
+            # it informationally until a GATE entry is added
+            delta = (cur - base) / abs(base) if base else None
+            rows.append((k, base, cur, delta, "ungated"))
+            continue
+        direction, tol = GATE[k]
+        if base:
+            delta = (cur - base) / abs(base)
+            worse = -delta if direction == "higher" else delta
+        else:
+            # zero baseline: relative delta is undefined — gate on the
+            # absolute move instead (tol doubles as the absolute bound)
+            delta = None
+            worse = base - cur if direction == "higher" else cur - base
+        status = "ok" if worse <= tol else "REGRESSED"
+        if status == "REGRESSED":
+            ok = False
+        rows.append((k, base, cur, delta, status))
+    return rows, ok
+
+
+def _fmt(v):
+    return "-" if v is None else (f"{v:.4g}" if isinstance(v, float)
+                                  else str(v))
+
+
+def render_delta_table(rows, markdown: bool = False) -> str:
+    lines = []
+    if markdown:
+        lines.append("### Smoke benchmark gate\n")
+        lines.append("| headline | baseline | current | delta | status |")
+        lines.append("|---|---|---|---|---|")
+        for k, base, cur, delta, status in rows:
+            d = "-" if delta is None else f"{delta:+.1%}"
+            mark = {"ok": "✅", "new": "🆕", "ungated": "ℹ️"}.get(
+                status, "❌")
+            lines.append(f"| {k} | {_fmt(base)} | {_fmt(cur)} | {d} "
+                         f"| {mark} {status} |")
+    else:
+        for k, base, cur, delta, status in rows:
+            d = "-" if delta is None else f"{delta:+.1%}"
+            lines.append(f"# gate {status:>10}  {k}: {_fmt(base)} -> "
+                         f"{_fmt(cur)} ({d})")
+    return "\n".join(lines)
+
+
+def run_gate(headline: dict, baseline_path: str) -> bool:
+    with open(baseline_path) as f:
+        baseline = json.load(f).get("headline", {})
+    rows, ok = compare_to_baseline(headline, baseline)
+    print(render_delta_table(rows), file=sys.stderr)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(render_delta_table(rows, markdown=True) + "\n")
+    if not ok:
+        print("# benchmark gate FAILED (see table above)", file=sys.stderr)
+    return ok
 
 
 def main(argv=None) -> None:
@@ -55,6 +171,10 @@ def main(argv=None) -> None:
                     help="tiny shapes for CI")
     ap.add_argument("--out", default=None,
                     help="write consolidated headline JSON here")
+    ap.add_argument("--baseline", default=None,
+                    help="gate headline keys against this "
+                         "BENCH_BASELINE.json (nonzero exit on "
+                         "regression)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failed = []
@@ -72,16 +192,21 @@ def main(argv=None) -> None:
             traceback.print_exc()
             print(f"benchmarks.{name},0,ERROR")
             failed.append(name)
+    headline = _headline(module_results)
     if args.out:
         bench = {"smoke": args.smoke, "failed": failed,
-                 "headline": _headline(module_results),
+                 "headline": headline,
                  "modules": module_results}
         with open(args.out, "w") as f:
             json.dump(bench, f, indent=1)
         print(f"# wrote {args.out}", file=sys.stderr)
+    gate_ok = True
+    if args.baseline:
+        gate_ok = run_gate(headline, args.baseline)
     if failed:
         print(f"# {len(failed)} module(s) failed: {', '.join(failed)}",
               file=sys.stderr)
+    if failed or not gate_ok:
         sys.exit(1)
 
 

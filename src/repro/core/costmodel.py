@@ -134,6 +134,30 @@ def op_cost_fused_dw_pw(name: str, k: int, cin: int, cout: int, lines: int,
     return dataclasses.replace(dom, name=name)
 
 
+# --- weight residency (per-stage placement, HPIPE's per-layer M20Ks) -------
+
+def pytree_param_bytes(tree) -> int:
+    """Total bytes of a parameter pytree's leaves (a SparseWeight
+    counts vals AND idx — both must live next to the stage's compute,
+    exactly the runlength stream + weight memory HPIPE provisions per
+    layer)."""
+    import jax
+    return sum(int(np.prod(l.shape, dtype=np.int64))
+               * np.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def node_weight_bytes(node, params) -> int:
+    """Weight-residency bytes of one (possibly fused) IR node: the
+    param bytes of every part the node executes. This is what a stage
+    owning the node must hold on-device under per-stage placement —
+    the planner's memory term (``planner.plan_cnn_pipeline``'s
+    ``max_stage_param_bytes`` budget prices stages with it)."""
+    parts = node.parts or (node,)
+    return sum(pytree_param_bytes(params[p.name]) for p in parts
+               if p.name in params)
+
+
 def op_cost_unstructured(name: str, mask: np.ndarray, lines: int,
                          width: int) -> OpCost:
     """Unstructured scalar sparsity (the paper's actual format): mask is

@@ -24,7 +24,11 @@ Two stage-program shapes are supported:
   carries every live value crossing the cut — including residual skip
   edges that span stages — exactly HPIPE's per-layer heterogeneous
   hardware stages. The CNN layer pipeline (models/cnn.stage_programs)
-  runs on these.
+  runs on these. Stage WEIGHTS place the same way the activations do:
+  each stage's param slice packs into one row of a ``(S, P)`` byte
+  buffer (``ParamFormat``/``PlacedParams``) sharded over the stage
+  axis, so a device holds only its own stage's weights — HPIPE's
+  per-layer weight memories, not a replicated model.
 """
 from __future__ import annotations
 
@@ -294,15 +298,137 @@ class WireFormat:
         return out
 
 
+class ParamFormat:
+    """Fixed BYTE layout of one stage's parameter pytree.
+
+    The per-stage placement analogue of :class:`WireFormat`: stage
+    parameter pytrees are heterogeneous (different leaf shapes, dtypes,
+    even SparseWeight nodes per stage), but placing each stage's slice
+    on only its own devices needs ONE static buffer type that a
+    ``(n_stages, width)`` array sharded over the stage axis can carry.
+    Each leaf is bitcast to raw uint8 (``lax.bitcast_convert_type`` —
+    lossless for every dtype, unlike an f32 widening which would
+    corrupt int32 indices above 2^24), flattened and concatenated in
+    tree-flatten order, then padded to the common stage width. Unpack
+    is the exact inverse, so a stage program running on unpacked params
+    is BIT-IDENTICAL to one closing over the originals.
+    """
+
+    def __init__(self, treedef, leaves_meta):
+        self.treedef = treedef
+        self.leaves_meta = tuple(leaves_meta)   # per leaf: (shape, dtype)
+
+    @classmethod
+    def for_tree(cls, tree) -> "ParamFormat":
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        meta = []
+        for l in leaves:
+            dt = jnp.dtype(l.dtype)
+            if dt == jnp.dtype(bool):
+                # bitcast_convert_type has no pred<->u8 lowering; no
+                # param tree carries bool leaves, so fail loudly rather
+                # than silently value-converting
+                raise ValueError(f"unsupported param leaf dtype {dt}")
+            meta.append((tuple(l.shape), dt))
+        return cls(treedef, meta)
+
+    def _leaf_bytes(self):
+        return [int(np.prod(s, dtype=np.int64)) * d.itemsize
+                for s, d in self.leaves_meta]
+
+    @property
+    def nbytes(self) -> int:
+        """Live bytes of this stage's params — the sum of its part
+        leaves, NOT the padded buffer width."""
+        return sum(self._leaf_bytes())
+
+    def pack(self, tree, width: int) -> jax.Array:
+        """Param pytree -> (width,) uint8 buffer (zero-padded)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != len(self.leaves_meta):
+            raise ValueError(f"expected {len(self.leaves_meta)} leaves, "
+                             f"got {len(leaves)}")
+        if self.nbytes > width:
+            raise ValueError(f"param width {width} < payload {self.nbytes}")
+        segs = []
+        for l, (shape, dt) in zip(leaves, self.leaves_meta):
+            if tuple(l.shape) != shape or jnp.dtype(l.dtype) != dt:
+                raise ValueError(f"leaf mismatch: {l.shape}/{l.dtype} vs "
+                                 f"{shape}/{dt}")
+            # bitcast, never astype: itemsize-1 dtypes (int8/float8) are
+            # a same-size bitcast — an astype would VALUE-convert and
+            # break the bit-exact round-trip
+            segs.append(lax.bitcast_convert_type(l, jnp.uint8).reshape(-1))
+        buf = (jnp.concatenate(segs) if segs
+               else jnp.zeros((0,), jnp.uint8))
+        return jnp.pad(buf, (0, width - buf.shape[0]))
+
+    def unpack(self, buf: jax.Array):
+        """(>= nbytes,) uint8 buffer -> the param pytree, bit-exact."""
+        leaves, off = [], 0
+        for (shape, dt), size in zip(self.leaves_meta, self._leaf_bytes()):
+            seg = lax.slice_in_dim(buf, off, off + size, axis=0)
+            src = seg.reshape(shape + (dt.itemsize,)) if dt.itemsize > 1 \
+                else seg.reshape(shape)
+            leaves.append(lax.bitcast_convert_type(src, dt))
+            off += size
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+@dataclass(frozen=True)
+class PlacedParams:
+    """Per-stage parameter placement plan for a heterogeneous pipeline.
+
+    formats[s] packs/unpacks stage s's param subtree; ``width`` is the
+    common buffer width (max stage payload) — the per-device parameter
+    residency once the (S, width) buffer is sharded over the stage
+    axis. ``trees[s]`` holds the concrete per-stage subtrees (keyed by
+    fused-node part names) that ``pack()`` serializes.
+    """
+    formats: tuple
+    trees: tuple
+    width: int
+
+    @property
+    def stage_bytes(self) -> tuple[int, ...]:
+        """Live (unpadded) param bytes per stage."""
+        return tuple(f.nbytes for f in self.formats)
+
+    @property
+    def replicated_bytes(self) -> int:
+        """Per-device residency of the replicated executor: every
+        device holds every stage's params."""
+        return sum(self.stage_bytes)
+
+    def pack(self) -> jax.Array:
+        """(n_stages, width) uint8 buffer — row s is stage s's params.
+        Shard axis 0 over the stage axis (``jax.device_put`` with
+        ``launch/shardings.stage_param_shardings``) and each device
+        holds ONLY its stage's weights."""
+        return jnp.stack([f.pack(t, self.width)
+                          for f, t in zip(self.formats, self.trees)])
+
+
 def pipeline_apply_hetero(stage_fns: list, x_wire, *, mesh,
-                          stage_axis: str, n_stages: int):
+                          stage_axis: str, n_stages: int,
+                          stage_params=None):
     """shard_map layer pipeline over HETEROGENEOUS per-stage programs.
 
     stage_fns[s]: (mb, W) f32 wire -> (mb, W) f32 wire — stage s's whole
-    program (unpack live-in values, run its IR slice, pack live-out),
-    closing over its parameters (replicated across the stage axis; per-
-    stage weight placement is a follow-up). x_wire: (M, mb, W) packed
-    input microbatches. Returns the last stage's (M, mb, W) wires.
+    program (unpack live-in values, run its IR slice, pack live-out).
+    x_wire: (M, mb, W) packed input microbatches. Returns the last
+    stage's (M, mb, W) wires.
+
+    Params come in two flavours:
+
+    - ``stage_params=None`` — each stage program closes over its
+      parameters, which therefore replicate across the stage axis.
+    - ``stage_params`` = the ``(S, P)`` uint8 buffer from
+      :meth:`PlacedParams.pack` — per-stage weight PLACEMENT: the
+      buffer is sharded ``P(stage_axis)``, so each device holds only
+      its own stage's packed weights, and every ``lax.switch`` branch
+      receives the device-local row (``stage_fns[s]`` then takes
+      ``(param_buf, wire)`` and unpacks its own layout).
 
     Every device runs ``lax.switch`` over the stage programs — the SPMD
     program is shared, the selected branch differs per stage index, and
@@ -313,8 +439,14 @@ def pipeline_apply_hetero(stage_fns: list, x_wire, *, mesh,
         raise ValueError(f"{len(stage_fns)} stage programs for "
                          f"{n_stages} stages")
     m = x_wire.shape[0]
+    placed = stage_params is not None
 
-    def per_device(xs):
+    def per_device(*args):
+        if placed:
+            pbuf, xs = args
+            p1 = pbuf[0]                      # drop stage dim: own row only
+        else:
+            (xs,) = args
         sidx = lax.axis_index(stage_axis)
         act = jnp.zeros_like(xs[0])
         outs = jnp.zeros_like(xs)
@@ -323,7 +455,10 @@ def pipeline_apply_hetero(stage_fns: list, x_wire, *, mesh,
         def step(carry, i):
             act, outs = carry
             xin = jnp.where(sidx == 0, xs[jnp.clip(i, 0, m - 1)], act)
-            y = lax.switch(sidx, stage_fns, xin)
+            if placed:
+                y = lax.switch(sidx, stage_fns, p1, xin)
+            else:
+                y = lax.switch(sidx, stage_fns, xin)
             j = i - (n_stages - 1)
             upd = lax.dynamic_update_index_in_dim(
                 outs, y, jnp.clip(j, 0, m - 1), 0)
@@ -335,14 +470,20 @@ def pipeline_apply_hetero(stage_fns: list, x_wire, *, mesh,
                                   jnp.arange(m + n_stages - 1))
         return outs[None]                                 # add stage dim back
 
-    f = _shard_map_stage(per_device, mesh, (P(),), P(stage_axis),
-                         stage_axis)
-    outs_all = f(x_wire)                                  # (S, M, mb, W)
+    if placed:
+        f = _shard_map_stage(per_device, mesh, (P(stage_axis), P()),
+                             P(stage_axis), stage_axis)
+        outs_all = f(stage_params, x_wire)                # (S, M, mb, W)
+    else:
+        f = _shard_map_stage(per_device, mesh, (P(),), P(stage_axis),
+                             stage_axis)
+        outs_all = f(x_wire)                              # (S, M, mb, W)
     return outs_all[-1]                                   # last stage's slice
 
 
 def pipeline_apply_gspmd_hetero(stage_fns: list, x_wire, *, n_stages: int,
-                                stage_axis: str = "pod", mesh=None):
+                                stage_axis: str = "pod", mesh=None,
+                                stage_params=None):
     """Pure-GSPMD heterogeneous pipeline (no shard_map).
 
     The wire state lives on a leading (S, mb, W) axis; each scan step
@@ -352,10 +493,30 @@ def pipeline_apply_gspmd_hetero(stage_fns: list, x_wire, *, n_stages: int,
     too (mesh=None): correct single-device semantics for tests/serving,
     at S-fold step cost. Functionally identical to
     ``pipeline_apply_hetero``.
+
+    ``stage_params``: optional ``(S, P)`` uint8 buffer from
+    :meth:`PlacedParams.pack` — per-stage weight placement. Shard it
+    ``P(stage_axis)`` (``jax.device_put`` with
+    ``launch/shardings.stage_param_shardings``) so stage k's row lives
+    only on stage k's devices; ``stage_fns[k]`` then takes
+    ``(param_buf, wire)``. Placement REQUIRES a mesh carrying
+    ``stage_axis``: with ``mesh=None`` there are no stage devices to
+    place onto — the buffer would silently replicate, defeating the
+    point — so that combination raises.
     """
     if len(stage_fns) != n_stages:
         raise ValueError(f"{len(stage_fns)} stage programs for "
                          f"{n_stages} stages")
+    placed = stage_params is not None
+    if placed and (mesh is None or stage_axis not in mesh.shape):
+        have = "no mesh" if mesh is None else \
+            f"mesh axes {tuple(mesh.shape)}"
+        raise ValueError(
+            "per-stage weight placement (stage_params=...) requires a "
+            f"mesh with a {stage_axis!r} axis to place each stage's "
+            f"weights onto, got {have}; pass mesh=jax.make_mesh"
+            f"(({n_stages},), ({stage_axis!r},)) or drop stage_params "
+            "to run with replicated params")
     m = x_wire.shape[0]
     s = n_stages
 
@@ -365,6 +526,8 @@ def pipeline_apply_gspmd_hetero(stage_fns: list, x_wire, *, n_stages: int,
         return jax.lax.with_sharding_constraint(
             st, P(stage_axis, *([None] * (st.ndim - 1))))
 
+    if placed:
+        stage_params = constrain(stage_params)
     state = jnp.zeros((s,) + x_wire.shape[1:], x_wire.dtype)
     outs = jnp.zeros_like(x_wire)
 
@@ -374,7 +537,11 @@ def pipeline_apply_gspmd_hetero(stage_fns: list, x_wire, *, n_stages: int,
         state = state.at[0].set(
             jnp.where(i < m, inject, state[0]).astype(state.dtype))
         state = constrain(state)
-        ys = jnp.stack([fn(state[k]) for k, fn in enumerate(stage_fns)])
+        if placed:
+            ys = jnp.stack([fn(stage_params[k], state[k])
+                            for k, fn in enumerate(stage_fns)])
+        else:
+            ys = jnp.stack([fn(state[k]) for k, fn in enumerate(stage_fns)])
         ys = constrain(ys)
         j = i - (s - 1)
         upd = lax.dynamic_update_index_in_dim(outs, ys[-1],

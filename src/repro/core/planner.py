@@ -93,7 +93,9 @@ def evaluate(ops: list[OpCost], splits: dict[str, int],
     return {op.name: op.cycles(splits[op.name], model) for op in ops}
 
 
-def assign_stages(costs: np.ndarray, n_stages: int) -> list[int]:
+def assign_stages(costs: np.ndarray, n_stages: int, *,
+                  weights: Optional[np.ndarray] = None,
+                  weight_budget: Optional[float] = None) -> list[int]:
     """Contiguous linear partition of ``costs`` into AT MOST ``n_stages``
     groups minimizing the max group sum. Returns one stage id per layer.
 
@@ -103,18 +105,46 @@ def assign_stages(costs: np.ndarray, n_stages: int) -> list[int]:
     downstream structures from ``max(stage_of) + 1``, NOT from the
     requested ``n_stages`` (``pipeline.stack_stages`` rejects empty
     stages, so a mismatch fails loudly rather than silently wasting
-    pipeline rungs)."""
+    pipeline rungs).
+
+    Memory-aware mode (``weights`` + ``weight_budget``): ``weights[l]``
+    is layer l's weight-residency bytes (per-stage placement puts a
+    stage's weights on its own devices, so a stage's byte sum is its
+    devices' parameter HBM). The DP then only considers groups whose
+    weight sum fits the budget — cuts REBALANCE around the memory wall
+    (a cycle-optimal stage holding 60% of ResNet-50's weights splits
+    even if that costs cycle balance), mirroring HPIPE's compiler
+    trading DSP balance against per-layer M20K capacity. Raises
+    ``ValueError`` when no contiguous ``n_stages``-partition fits
+    (single layer over budget, or too few stages)."""
     n = len(costs)
     if n == 0:
         raise ValueError("assign_stages needs at least one layer cost")
     if n_stages < 1:
         raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    budgeted = weights is not None and weight_budget is not None
+    if budgeted:
+        weights = np.asarray(weights, dtype=np.float64)
+        if len(weights) != n:
+            raise ValueError(f"{len(weights)} weights for {n} layers")
+        over = [i for i in range(n) if weights[i] > weight_budget]
+        if over:
+            raise ValueError(
+                f"layer(s) {over} alone exceed the per-stage weight "
+                f"budget ({weights[over[0]]:.0f} > {weight_budget:.0f} "
+                "bytes); a contiguous partition cannot fit — raise the "
+                "budget or split the layer")
+        wprefix = np.concatenate([[0.0], np.cumsum(weights)])
     if n_stages >= n:
-        return list(range(n))
+        return list(range(n))             # one layer per stage: minimal
     prefix = np.concatenate([[0.0], np.cumsum(costs)])
 
     def group_cost(i, j):                 # layers [i, j)
         return prefix[j] - prefix[i]
+
+    def group_fits(i, j):
+        return (not budgeted
+                or wprefix[j] - wprefix[i] <= weight_budget)
 
     INF = float("inf")
     dp = np.full((n_stages + 1, n + 1), INF)
@@ -123,10 +153,17 @@ def assign_stages(costs: np.ndarray, n_stages: int) -> list[int]:
     for s in range(1, n_stages + 1):
         for j in range(1, n + 1):
             for i in range(s - 1, j):
+                if dp[s - 1, i] == INF or not group_fits(i, j):
+                    continue
                 c = max(dp[s - 1, i], group_cost(i, j))
                 if c < dp[s, j]:
                     dp[s, j] = c
                     cut[s, j] = i
+    if dp[n_stages, n] == INF:
+        raise ValueError(
+            f"no contiguous {n_stages}-stage partition of {n} layers "
+            f"fits the per-stage weight budget {weight_budget:.0f} "
+            "bytes; allow more stages or raise the budget")
     # walk back
     bounds = [n]
     j = n
@@ -244,7 +281,8 @@ def cnn_node_costs(cfg, params, graph=None) -> np.ndarray:
     return np.asarray(costs)
 
 
-def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None) -> dict:
+def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None, *,
+                      max_stage_param_bytes: Optional[int] = None) -> dict:
     """Cost-balanced stage assignment for a CNN layer graph: contiguous
     partition of the IR minimizing the max per-stage cycle sum (the
     multi-device analogue of HPIPE giving slow layers more DSPs).
@@ -253,20 +291,44 @@ def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None) -> dict:
     node granularity: super-nodes are atomic, so a stage cut can never
     land inside a fusion and stage balance reflects the real
     post-fusion HBM traffic. Returns stage_of (per fused-IR node), the
-    per-stage cycle sums, the imbalance ratio, and n_stages actually
-    used (assign_stages clamps, see its contract)."""
+    per-stage cycle sums, the imbalance ratio, n_stages actually used
+    (assign_stages clamps, see its contract), and the weight-residency
+    accounting (``node_param_bytes`` / ``stage_param_bytes``).
+
+    MEMORY-AWARE planning: per-stage weight placement puts each stage's
+    params on its own devices, so a stage's weight bytes are its
+    devices' parameter HBM. ``max_stage_param_bytes`` bounds that
+    residency: the cut DP (``assign_stages``) rebalances — only
+    partitions whose every stage fits the budget are considered, so a
+    cycle-optimal cut that parks most of ResNet-50's tail weights on
+    one device is rejected in favor of the best cut that fits."""
+    from repro.core.costmodel import node_weight_bytes
     from repro.core.fusion import fused_graph_for
     g = graph if graph is not None else fused_graph_for(cfg.name)
     costs = cnn_node_costs(cfg, params, graph=g)
-    stage_of = assign_stages(costs, n_stages)
+    wbytes = np.array([node_weight_bytes(node, params) for node in g.nodes],
+                      dtype=np.float64)
+    stage_of = assign_stages(
+        costs, n_stages,
+        weights=wbytes if max_stage_param_bytes is not None else None,
+        weight_budget=max_stage_param_bytes)
     used = max(stage_of) + 1
     stage_cost = np.zeros(used)
+    stage_bytes = np.zeros(used)
     for l, s in enumerate(stage_of):
         stage_cost[s] += costs[l]
+        stage_bytes[s] += wbytes[l]
     return {
         "stage_of": stage_of,
         "n_stages": used,
         "stage_cost": stage_cost,
         "imbalance": float(stage_cost.max() / max(stage_cost.mean(), 1.0)),
         "node_cycles": costs,
+        "node_param_bytes": wbytes,
+        "stage_param_bytes": stage_bytes,
+        "param_budget_bytes": max_stage_param_bytes,
+        # the ACHIEVED residency (largest stage = what one device holds
+        # under placement) — deliberately NOT named after the budget
+        # kwarg, which is echoed back as param_budget_bytes above
+        "placed_bytes_per_device": float(stage_bytes.max()),
     }

@@ -313,7 +313,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
                           n_microbatches: int = 8, batch: int = 16,
-                          image_size: int = 64,
+                          image_size: int = 64, placed: bool = True,
+                          param_budget_frac=None,
                           verbose: bool = True) -> dict:
     """``pipeline_cnn`` mode: lower + compile the heterogeneous CNN
     layer pipeline (shard_map over a stage axis) and extract what the
@@ -321,8 +322,19 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
     stage->stage wire hops lower to collective-permute, so
     ``collectives['bytes']['collective-permute']`` is the pipeline's
     ICI traffic; stage balance and the fill/drain bubble come from the
-    planner/analytic model."""
+    planner/analytic model.
+
+    Per-stage weight PLACEMENT is on by default: the cell compiles the
+    placed pipeline (each stage's packed param row device_put onto its
+    own stage device) and reports per-device parameter bytes both ways
+    — ``param_bytes_placed_per_device`` (the buffer row each device
+    holds) vs ``param_bytes_replicated_per_device`` (what the
+    replicated executor would hold everywhere). ``param_budget_frac``
+    bounds any stage to that fraction of the model's bytes and lets
+    the memory-aware planner rebalance cuts."""
     from repro.core import pipeline as pp, planner
+    from repro.core.costmodel import pytree_param_bytes
+    from repro.launch.shardings import placed_stage_setup
     from repro.models import cnn
     cfg = get_config(arch)
     if cfg.family != "cnn":
@@ -334,28 +346,49 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
             f"{n_microbatches} for the dry-run cell (serve pads instead)")
     t0 = time.time()
     params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
-    plan = planner.plan_cnn_pipeline(cfg, params, n_stages)
+    total_bytes = pytree_param_bytes(params)
+    budget = (int(param_budget_frac * total_bytes)
+              if param_budget_frac else None)
+    plan = planner.plan_cnn_pipeline(cfg, params, n_stages,
+                                     max_stage_param_bytes=budget)
     s = plan["n_stages"]
-    mesh = jax.make_mesh((s,), ("stage",))
     imgs = jax.ShapeDtypeStruct((batch, image_size, image_size, 3),
                                 jnp.float32)
     mb_shape = jax.eval_shape(
         lambda x: pp.microbatch(x, n_microbatches), imgs).shape
-    stage_fns, pack_in, unpack_out, width = cnn.stage_programs(
-        cfg, params, plan["stage_of"], mb_shape[1:])
 
-    def step(xmb):
+    xmb_spec = jax.ShapeDtypeStruct(mb_shape, jnp.float32)
+    if placed:
+        stage_fns, pack_in, unpack_out, width, pparams, mesh, sps = \
+            placed_stage_setup(cfg, params, plan, mb_shape[1:])
+        placed_bytes = pparams.width
+        lower_args = (xmb_spec, jax.ShapeDtypeStruct(
+            (s, pparams.width), jnp.uint8, sharding=sps["buffer"]))
+
+        def pipeline(wires, pbuf):
+            return pp.pipeline_apply_hetero(
+                stage_fns, wires, mesh=mesh, stage_axis="stage",
+                n_stages=s, stage_params=pbuf)
+    else:
+        stage_fns, pack_in, unpack_out, width = cnn.stage_programs(
+            cfg, params, plan["stage_of"], mb_shape[1:])
+        mesh = jax.make_mesh((s,), ("stage",))
+        placed_bytes = int(plan["placed_bytes_per_device"])
+        lower_args = (xmb_spec,)
+
+        def pipeline(wires):
+            return pp.pipeline_apply_hetero(stage_fns, wires, mesh=mesh,
+                                            stage_axis="stage", n_stages=s)
+    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+    def step(xmb, *pbuf):
         wires = jax.vmap(pack_in)(xmb)
-        out = pp.pipeline_apply_hetero(stage_fns, wires, mesh=mesh,
-                                       stage_axis="stage", n_stages=s)
+        out = pipeline(wires, *pbuf)
         return jnp.concatenate(
             [unpack_out(out[i]) for i in range(n_microbatches)], axis=0)
 
-    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
     with mesh_ctx:
-        lowered = jax.jit(step).lower(
-            jax.ShapeDtypeStruct(mb_shape, jnp.float32))
-        compiled = lowered.compile()
+        compiled = jax.jit(step).lower(*lower_args).compile()
     t1 = time.time()
     coll = collective_bytes(compiled.as_text())
     cost = compiled.cost_analysis() or {}
@@ -374,6 +407,13 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
         "bubble_fraction": pp.bubble_fraction(n_microbatches, s),
         "hlo_flops_per_dev": float(cost.get("flops", 0.0)),
         "collectives": coll,
+        # the placement story: what ONE device holds in weights
+        "params_placed": bool(placed),
+        "param_budget_bytes": budget,
+        "stage_param_bytes": [int(b) for b in plan["stage_param_bytes"]],
+        "param_bytes_replicated_per_device": int(total_bytes),
+        "param_bytes_placed_per_device": int(placed_bytes),
+        "param_placement_ratio": placed_bytes / max(total_bytes, 1),
     }
     if verbose:
         print(json.dumps(res, indent=None, default=float))
@@ -392,6 +432,13 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=8)
     ap.add_argument("--image-size", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--replicated-params", action="store_true",
+                    help="pipeline-cnn: compile with replicated params "
+                         "instead of per-stage placement")
+    ap.add_argument("--param-budget-frac", type=float, default=None,
+                    help="pipeline-cnn: bound any stage's weight bytes "
+                         "to this fraction of the model (memory-aware "
+                         "planner rebalances cuts)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
@@ -420,7 +467,9 @@ def main(argv=None):
         results.append(run_cnn_pipeline_cell(
             args.arch, n_stages=args.stages,
             n_microbatches=args.microbatches, batch=args.batch,
-            image_size=args.image_size))
+            image_size=args.image_size,
+            placed=not args.replicated_params,
+            param_budget_frac=args.param_budget_frac))
     else:
         results.append(run_cell(args.arch, args.shape,
                                 multi_pod=args.multi_pod,

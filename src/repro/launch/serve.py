@@ -16,6 +16,7 @@ hardware.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -80,18 +81,26 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
 
 def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
               n_stages: int = 4, image_size: int = 64, iters: int = 3,
-              seed: int = 0, verbose: bool = True):
+              seed: int = 0, verbose: bool = True, placed=None,
+              param_budget_frac=None):
     """Batched image serving through the heterogeneous layer pipeline
     (``pipeline_cnn`` mode).
 
     Plans cost-balanced stage cuts over the layer-graph IR
     (planner.plan_cnn_pipeline, cycle estimates from the pruned
     weights), compiles per-stage wire programs, and streams
-    microbatches through the GSPMD pipeline executor — single-device
-    semantics here; on a pod mesh the same program shards over the
-    stage axis. Returns logits + throughput and the pipeline's analytic
-    bubble fraction. Batches that don't divide the microbatch count are
-    zero-padded and the padded outputs dropped.
+    microbatches through the GSPMD pipeline executor.
+
+    Weight placement: with one device per stage available, each stage's
+    param slice is packed and ``jax.device_put`` onto ONLY that stage's
+    device (``stage_param_shardings``) — per-device parameter residency
+    drops from the whole model to the largest stage (both are reported
+    either way, so the win — or the replication cost — is visible).
+    ``placed=None`` auto-enables placement when the host has enough
+    devices; ``param_budget_frac`` bounds any stage's weight bytes to
+    that fraction of the model and lets the planner rebalance cuts
+    (memory-aware planning). Batches that don't divide the microbatch
+    count are zero-padded and the padded outputs dropped.
     """
     from repro.core import pipeline as pp, planner
     from repro.models import cnn
@@ -100,27 +109,63 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
         raise ValueError(f"{arch} is not a CNN arch")
     key = jax.random.PRNGKey(seed)
     params = cnn.init_cnn(cfg, key)
-    plan = planner.plan_cnn_pipeline(cfg, params, n_stages)
+    from repro.core.costmodel import pytree_param_bytes
+    total_bytes = pytree_param_bytes(params)
+    budget = (int(param_budget_frac * total_bytes)
+              if param_budget_frac else None)
+    plan = planner.plan_cnn_pipeline(cfg, params, n_stages,
+                                     max_stage_param_bytes=budget)
     s = plan["n_stages"]
+    use_placed = (len(jax.devices()) >= s) if placed is None else placed
     images = jax.random.normal(key, (batch, image_size, image_size, 3))
     x_mb = pp.microbatch(images, n_microbatches, pad=True)
-    stage_fns, pack_in, unpack_out, width = cnn.stage_programs(
-        cfg, params, plan["stage_of"], x_mb.shape[1:])
+
+    if use_placed:
+        if len(jax.devices()) < s:
+            raise ValueError(
+                f"placed=True needs >= {s} devices (one per stage), "
+                f"have {len(jax.devices())}; run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={s} "
+                "or drop placement")
+        from repro.launch.shardings import placed_stage_setup
+        stage_fns, pack_in, unpack_out, width, pparams, mesh, sps = \
+            placed_stage_setup(cfg, params, plan, x_mb.shape[1:])
+        placed_bytes = pparams.width
+        run_args = (x_mb, jax.device_put(pparams.pack(), sps["buffer"]))
+        mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+        def pipeline(wires, pb):
+            return pp.pipeline_apply_gspmd_hetero(
+                stage_fns, wires, n_stages=s, stage_axis="stage",
+                mesh=mesh, stage_params=pb)
+    else:
+        stage_fns, pack_in, unpack_out, width = cnn.stage_programs(
+            cfg, params, plan["stage_of"], x_mb.shape[1:])
+        placed_bytes = int(plan["placed_bytes_per_device"])  # what
+        #                                     placement WOULD hold
+        run_args = (x_mb,)
+        mesh_ctx = contextlib.nullcontext()
+
+        def pipeline(wires):
+            return pp.pipeline_apply_gspmd_hetero(stage_fns, wires,
+                                                  n_stages=s)
 
     @jax.jit
-    def run(xmb):
+    def run(xmb, *pb):
         wires = jax.vmap(pack_in)(xmb)
-        out = pp.pipeline_apply_gspmd_hetero(stage_fns, wires, n_stages=s)
+        out = pipeline(wires, *pb)
         return jnp.concatenate(
             [unpack_out(out[i]) for i in range(xmb.shape[0])], axis=0)
 
-    t0 = time.time()
-    logits = jax.block_until_ready(run(x_mb))
-    compile_s = time.time() - t0
-    t0 = time.time()
-    for _ in range(iters):
-        logits = jax.block_until_ready(run(x_mb))
-    run_s = (time.time() - t0) / max(iters, 1)
+    with mesh_ctx:
+        t0 = time.time()
+        logits = jax.block_until_ready(run(*run_args))
+        compile_s = time.time() - t0
+        t0 = time.time()
+        for _ in range(iters):
+            logits = jax.block_until_ready(run(*run_args))
+        run_s = (time.time() - t0) / max(iters, 1)
+
     logits = logits[:batch]                      # drop pad rows
     ims_per_s = batch / max(run_s, 1e-9)
     bub = pp.bubble_fraction(n_microbatches, s)
@@ -129,10 +174,23 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
               f"(M={n_microbatches}): {ims_per_s:.1f} im/s "
               f"(compile {compile_s:.1f}s, bubble {bub:.2f}, "
               f"imbalance {plan['imbalance']:.2f})")
+        x = total_bytes / max(placed_bytes, 1)
+        if use_placed:
+            print(f"{arch}: params/device: {placed_bytes / 1e6:.2f} MB "
+                  f"placed vs {total_bytes / 1e6:.2f} MB replicated "
+                  f"(x{x:.1f} smaller)")
+        else:
+            print(f"{arch}: params/device: {total_bytes / 1e6:.2f} MB "
+                  f"replicated (placement would hold "
+                  f"{placed_bytes / 1e6:.2f} MB, x{x:.1f} smaller)")
     return {"logits": np.asarray(logits), "images_per_s": ims_per_s,
             "compile_s": compile_s, "run_s": run_s,
             "bubble_fraction": bub, "n_stages": s,
-            "imbalance": plan["imbalance"]}
+            "imbalance": plan["imbalance"],
+            "placed": use_placed,
+            "param_bytes_replicated_per_device": int(total_bytes),
+            "param_bytes_placed_per_device": int(placed_bytes),
+            "param_placement_ratio": placed_bytes / max(total_bytes, 1)}
 
 
 def main(argv=None):
@@ -145,11 +203,21 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--image-size", type=int, default=64)
+    ap.add_argument("--placed", action="store_true", default=None,
+                    help="force per-stage weight placement (needs one "
+                         "device per stage; default: auto)")
+    ap.add_argument("--replicated-params", dest="placed",
+                    action="store_false",
+                    help="force replicated params")
+    ap.add_argument("--param-budget-frac", type=float, default=None,
+                    help="bound any stage's weight bytes to this "
+                         "fraction of the model (memory-aware planner)")
     args = ap.parse_args(argv)
     if get_config(args.arch).family == "cnn":
         serve_cnn(args.arch, batch=args.batch,
                   n_microbatches=args.microbatches, n_stages=args.stages,
-                  image_size=args.image_size)
+                  image_size=args.image_size, placed=args.placed,
+                  param_budget_frac=args.param_budget_frac)
     else:
         serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
               gen_tokens=args.gen, use_reduced=args.reduced)

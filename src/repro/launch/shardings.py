@@ -196,3 +196,73 @@ def cache_shardings(cache, mesh: Mesh, **kw):
     return jax.tree_util.tree_unflatten(
         treedef,
         [NamedSharding(mesh, cache_spec(p, l, mesh, **kw)) for p, l in flat])
+
+
+# --- per-stage weight placement (the heterogeneous CNN pipeline) -----------
+
+def stage_param_shardings(graph, plan, mesh: Mesh, *, params=None,
+                          stage_axis: str = "stage") -> dict:
+    """Placement plan for a heterogeneous pipeline's weights: the
+    NamedSharding that pins each stage's packed param row onto that
+    stage's mesh devices, plus the byte accounting that makes the win
+    visible (HPIPE's per-layer weight memories vs a replicated model).
+
+    graph: the (fused) LayerGraph the plan partitions. plan: the dict
+    from ``planner.plan_cnn_pipeline`` (or any dict with "stage_of").
+    mesh: must carry ``stage_axis`` with one device slot per stage.
+    Returns::
+
+        buffer      NamedSharding(mesh, P(stage_axis)) — device_put the
+                    (S, P) uint8 buffer from PlacedParams.pack() with it
+        stage_parts per stage: the fused-node part names whose params
+                    live on that stage's devices
+        + when ``params`` is given: stage_param_bytes (live bytes per
+        stage), replicated_bytes_per_device (every stage's params — the
+        replicated executor's residency), placed_bytes_per_device (the
+        padded buffer row = max stage bytes), placement_ratio.
+    """
+    from repro.models.cnn import stage_part_names
+    stage_of = list(plan["stage_of"]) if isinstance(plan, dict) else \
+        list(plan)
+    n_stages = max(stage_of) + 1
+    if stage_axis not in mesh.shape:
+        raise ValueError(f"mesh has no {stage_axis!r} axis "
+                         f"(axes: {tuple(mesh.shape)})")
+    if mesh.shape[stage_axis] != n_stages:
+        raise ValueError(
+            f"mesh {stage_axis!r} axis has {mesh.shape[stage_axis]} "
+            f"slots for {n_stages} stages; one stage per slot required "
+            "so each stage's weights land on exactly its devices")
+    parts = stage_part_names(graph, stage_of)
+    out = {"buffer": NamedSharding(mesh, P(stage_axis)),
+           "stage_parts": parts}
+    if params is not None:
+        from repro.core.costmodel import pytree_param_bytes
+        sb = [sum(pytree_param_bytes(params[n]) for n in names)
+              for names in parts]
+        out["stage_param_bytes"] = sb
+        out["replicated_bytes_per_device"] = sum(sb)
+        out["placed_bytes_per_device"] = max(max(sb), 1)
+        out["placement_ratio"] = out["placed_bytes_per_device"] / max(
+            out["replicated_bytes_per_device"], 1)
+    return out
+
+
+def placed_stage_setup(cfg, params, plan, mb_shape, *,
+                       stage_axis: str = "stage"):
+    """Placed-pipeline scaffolding shared by serve/dryrun: compile the
+    placed stage programs, build the one-device-per-stage mesh and the
+    buffer sharding that pins each stage's packed params to its device.
+    Returns ``(stage_fns, pack_in, unpack_out, width, pparams, mesh,
+    sps)`` where sps is :func:`stage_param_shardings`'s dict (with the
+    byte accounting, since params are given)."""
+    import jax as _jax
+    from repro.core.fusion import fused_graph_for
+    from repro.models import cnn
+    s = plan["n_stages"]
+    stage_fns, pack_in, unpack_out, width, pparams = cnn.stage_programs(
+        cfg, params, plan["stage_of"], mb_shape, placed=True)
+    mesh = _jax.make_mesh((s,), (stage_axis,))
+    sps = stage_param_shardings(fused_graph_for(cfg.name), plan, mesh,
+                                params=params, stage_axis=stage_axis)
+    return stage_fns, pack_in, unpack_out, width, pparams, mesh, sps

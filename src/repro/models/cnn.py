@@ -179,9 +179,14 @@ def init_cnn(cfg, key, *, image_size: int = 224):
                 "w": L.dense_init(k, (s.k, s.k, s.cin), s.k * s.k, jnp.bfloat16),
                 "b": jnp.zeros((s.cin,), jnp.bfloat16)}
         elif s.kind == "fc":
-            params[s.name] = {
-                "w": L.dense_init(k, (s.cin, s.cout), s.cin, jnp.bfloat16),
-                "b": jnp.zeros((s.cout,), jnp.bfloat16)}
+            # the classifier prunes with the rest of the network (the
+            # paper's 85% covers it; the planner already prices a
+            # SparseWeight fc via op_cost_from_sparse) — also the
+            # largest single dense residue, which matters once
+            # per-stage placement bounds a stage's weight bytes
+            w = L.dense_init(k, (s.cin, s.cout), s.cin, jnp.bfloat16)
+            params[s.name] = {"w": _maybe_sparse(w, sp),
+                              "b": jnp.zeros((s.cout,), jnp.bfloat16)}
     return params
 
 
@@ -242,6 +247,22 @@ def _fused_dw_pw(x, params, node: ConvSpec, residual=None):
                            relu=node.relu, residual=residual)
 
 
+def fc_apply(p, x):
+    """The classifier matmul, dense or pruned — f32 inputs and
+    accumulation either way, so logits stay f32. Shared by the graph
+    interpreter AND ``cnn_forward_reference`` (one dispatch point, so
+    the bit-for-bit oracle bar keeps guarding the graph machinery, not
+    the weight format)."""
+    w = p["w"]
+    x32 = x.astype(jnp.float32)
+    if isinstance(w, SparseWeight):
+        from repro.kernels import ops as kops
+        y = kops.sparse_matmul(x32, w)
+    else:
+        y = x32 @ w.astype(jnp.float32)
+    return y + p["b"].astype(jnp.float32)
+
+
 def run_node(node: ConvSpec, params, *args):
     """Execute one IR node (original layer kinds + the fused
     super-nodes emitted by core/fusion.py). ``args`` are the resolved
@@ -267,9 +288,7 @@ def run_node(node: ConvSpec, params, *args):
     if node.kind in ("fc", "avgpool_fc"):
         if node.kind == "avgpool_fc":                    # fused head
             x = x.mean(axis=(1, 2))
-        p = params[conv_part(node).name]
-        return x.astype(jnp.float32) @ p["w"].astype(jnp.float32) \
-            + p["b"].astype(jnp.float32)
+        return fc_apply(params[conv_part(node).name], x)
     raise ValueError(f"unknown node kind {node.kind!r}")
 
 
@@ -326,8 +345,33 @@ def node_shapes(cfg, params, image_shape,
     return jax.eval_shape(all_outputs, imgs)
 
 
+def stage_part_names(g: LayerGraph, stage_of) -> list[list[str]]:
+    """Per stage: the fused-node PART names owning parameters — the
+    keys of the param dict each stage's weights live under (a fused
+    super-node's params stay keyed by its original part specs)."""
+    slices = g.partition(list(stage_of))
+    out = []
+    for sl in slices:
+        names = []
+        for node in g.nodes[sl.start:sl.stop]:
+            for part in (node.parts or (node,)):
+                if part.kind in ("conv", "dw", "fc"):
+                    names.append(part.name)
+        out.append(names)
+    return out
+
+
+def stage_param_trees(g: LayerGraph, stage_of, params) -> list[dict]:
+    """Extract each stage's parameter slice from the full pytree —
+    exactly the part params its IR slice reads, nothing else. This is
+    what per-stage placement materializes on a stage's devices."""
+    return [{n: params[n] for n in names}
+            for names in stage_part_names(g, stage_of)]
+
+
 def stage_programs(cfg, params, stage_of, image_shape, *,
-                   graph: Optional[LayerGraph] = None):
+                   graph: Optional[LayerGraph] = None,
+                   placed: bool = False):
     """Compile the IR into per-stage wire programs.
 
     stage_of: stage id per IR node of the FUSED graph (contiguous, from
@@ -341,6 +385,15 @@ def stage_programs(cfg, params, stage_of, image_shape, *,
       (bf16 -> f32 is exact, so pipelined == sequential bit-for-bit).
     - pack_in(images): (mb, H, W, 3) -> input wire for stage 0.
     - unpack_out(wire): last stage's wire -> logits.
+
+    ``placed=True`` compiles PLACED stage programs instead: each
+    stage_fns[s] takes ``(param_buf, wire)`` and unpacks its own param
+    slice from the device-local row of the placement buffer
+    (``pipeline.ParamFormat`` — bit-exact, so placed == replicated
+    BITWISE), and a fifth return value ``pipeline.PlacedParams`` plans
+    the buffer: ``.pack()`` builds the (S, P) uint8 array to
+    ``jax.device_put`` with ``launch/shardings.stage_param_shardings``.
+    No stage program closes over a weight, so nothing replicates.
     """
     from repro.core import pipeline as pp
     g = graph if graph is not None else fused_graph_for(cfg.name)
@@ -355,16 +408,37 @@ def stage_programs(cfg, params, stage_of, image_shape, *,
     out_fmts = [fmt(sl.out_live) for sl in slices]
     width = max(f.width for f in in_fmts + out_fmts)
 
-    def make_stage(sl, in_fmt, out_fmt):
+    placed_params = None
+    if placed:
+        trees = stage_param_trees(g, stage_of, params)
+        pfmts = [pp.ParamFormat.for_tree(t) for t in trees]
+        pwidth = max(max((f.nbytes for f in pfmts), default=0), 1)
+        placed_params = pp.PlacedParams(formats=tuple(pfmts),
+                                        trees=tuple(trees), width=pwidth)
+
+    def make_stage(sl, in_fmt, out_fmt, pfmt=None):
         def stage(wire):
             env = dict(zip(sl.in_live, in_fmt.unpack(wire)))
             env = _interpret(g, params, None, start=sl.start, stop=sl.stop,
                              env=env)
             return out_fmt.pack([env[n] for n in sl.out_live], width)
-        return stage
 
-    stage_fns = [make_stage(sl, fi, fo)
-                 for sl, fi, fo in zip(slices, in_fmts, out_fmts)]
+        def stage_placed(pbuf, wire):
+            sparams = pfmt.unpack(pbuf)
+            env = dict(zip(sl.in_live, in_fmt.unpack(wire)))
+            env = _interpret(g, sparams, None, start=sl.start, stop=sl.stop,
+                             env=env)
+            return out_fmt.pack([env[n] for n in sl.out_live], width)
+
+        return stage_placed if pfmt is not None else stage
+
+    if placed:
+        stage_fns = [make_stage(sl, fi, fo, pf)
+                     for sl, fi, fo, pf in zip(slices, in_fmts, out_fmts,
+                                               placed_params.formats)]
+    else:
+        stage_fns = [make_stage(sl, fi, fo)
+                     for sl, fi, fo in zip(slices, in_fmts, out_fmts)]
 
     def pack_in(images):
         return in_fmts[0].pack([images.astype(jnp.bfloat16)], width)
@@ -372,6 +446,8 @@ def stage_programs(cfg, params, stage_of, image_shape, *,
     def unpack_out(wire):
         return out_fmts[-1].unpack(wire)[0]
 
+    if placed:
+        return stage_fns, pack_in, unpack_out, width, placed_params
     return stage_fns, pack_in, unpack_out, width
 
 
@@ -430,6 +506,8 @@ def cnn_forward_reference(cfg, params, images):
         x = x.mean(axis=(1, 2))
     else:
         raise ValueError(name)
-    logits = x.astype(jnp.float32) @ params["fc"]["w"].astype(jnp.float32) \
-        + params["fc"]["b"].astype(jnp.float32)
-    return logits
+    # fc_apply is the one (deliberate) shared dispatch with the
+    # interpreter: the classifier weight may be pruned, and both sides
+    # must execute the identical matmul for the bit-for-bit bar to
+    # isolate the graph machinery
+    return fc_apply(params["fc"], x)

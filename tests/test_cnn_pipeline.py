@@ -1,11 +1,15 @@
 """Heterogeneous CNN layer pipeline: pipelined-vs-sequential exact
-equivalence for all three paper CNNs on both executor paths, plus the
-stage-assignment / microbatch contract fixes.
+equivalence for all three paper CNNs on both executor paths, the
+stage-assignment / microbatch contract fixes, and per-stage WEIGHT
+PLACEMENT (each stage's params live only on its own devices — HPIPE's
+per-layer weight memories).
 
 The GSPMD path needs no mesh, so it runs in-process on the default
 single device. The shard_map path needs one device per stage and runs
 in a subprocess with a forced host device count (like
-test_pipeline.py), executing tests/_cnn_pipeline_sub.py.
+test_pipeline.py), executing tests/_cnn_pipeline_sub.py; the placed
+checks force EIGHT devices (the CI multi-device job runs this file
+under the same flag).
 """
 import dataclasses
 import os
@@ -117,14 +121,163 @@ def test_gspmd_pipeline_matches_sequential(arch, sparse):
 
 # -- pipelined == sequential: shard_map path (subprocess, 4 devices) --------
 
-@pytest.mark.parametrize("arch", CNN_ARCHS)
-def test_shardmap_pipeline_matches_sequential(arch):
+def _run_sub(arch, mode=None, devices=4):
     sub = os.path.join(os.path.dirname(__file__), "_cnn_pipeline_sub.py")
     env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
                PYTHONPATH=os.pathsep.join(
                    [os.path.join(os.path.dirname(__file__), "..", "src"),
                     os.environ.get("PYTHONPATH", "")]))
-    r = subprocess.run([sys.executable, sub, arch], env=env,
-                       capture_output=True, text=True, timeout=900)
+    cmd = [sys.executable, sub, arch] + ([mode] if mode else [])
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=900)
     assert "SUBPROCESS_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_shardmap_pipeline_matches_sequential(arch):
+    _run_sub(arch)
+
+
+# -- per-stage weight placement (subprocess, 8 devices) ---------------------
+#
+# Each stage's packed param row must physically live on only its own
+# device, per-device live-weight bytes must equal that stage's part
+# params (not the full model), sparse ResNet-50 under the 1/4 budget
+# must hold <= 1/4 of the replicated bytes per device, and placed
+# pipelined logits must match the sequential interpreter BITWISE (the
+# byte-packing round-trip is lossless). See _cnn_pipeline_sub.py.
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_placed_pipeline_8dev(arch):
+    _run_sub(arch, mode="placed", devices=8)
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >=4 host devices — runs in the CI multi-device job "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_placed_pipeline_inprocess_multidev():
+    """Placed gspmd pipeline on a real stage mesh IN-PROCESS — coverage
+    unique to the multi-device CI leg (the subprocess tests above force
+    their own device count, so they run identically in every leg).
+    Also exercises launch.shardings.placed_stage_setup end-to-end."""
+    from repro.launch.shardings import placed_stage_setup
+    cfg = _cfg("mobilenet_v1", sparse=False)
+    params = cnn.init_cnn(cfg, KEY)
+    plan = planner.plan_cnn_pipeline(cfg, params, 4)
+    s = plan["n_stages"]
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    x_mb = pp.microbatch(imgs, 2)
+    stage_fns, pack_in, unpack_out, _, pparams, mesh, sps = \
+        placed_stage_setup(cfg, params, plan, x_mb.shape[1:])
+    buf = jax.device_put(pparams.pack(), sps["buffer"])
+    assert sps["placed_bytes_per_device"] == max(pparams.stage_bytes)
+    x_wire = jax.vmap(pack_in)(x_mb)
+    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+    with mesh_ctx:
+        out_w = jax.jit(lambda xw, pb: pp.pipeline_apply_gspmd_hetero(
+            stage_fns, xw, n_stages=s, stage_axis="stage", mesh=mesh,
+            stage_params=pb))(x_wire, buf)
+    logits = jnp.concatenate([unpack_out(out_w[i]) for i in range(2)], 0)
+    ref = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))(params, imgs)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref))
+
+
+# -- placement plumbing that needs no mesh ----------------------------------
+
+def test_param_format_roundtrip_bitexact():
+    """ParamFormat packs ANY param pytree (mixed dtypes, SparseWeight
+    children) into uint8 and unpacks it bit-identically."""
+    from repro.models.layers import SparseWeight
+    key = jax.random.PRNGKey(0)
+    tree = {
+        "conv": {"w": jax.random.normal(key, (9, 16)).astype(jnp.bfloat16),
+                 "b": jnp.arange(16, dtype=jnp.float32)},
+        "fc": {"w": SparseWeight(
+            vals=jax.random.normal(key, (2, 3, 4, 4)).astype(jnp.bfloat16),
+            idx=jnp.array([[0, 2, 5], [1, 3, 4]], jnp.int32), d_in=24),
+            "b": jnp.zeros((8,), jnp.bfloat16)},
+        # itemsize-1 leaves must BITCAST (an astype would value-convert
+        # float8 and wrap int8)
+        "q": {"w8": jnp.array([0.5, -0.25, 1.0], jnp.float8_e4m3fn),
+              "i8": jnp.array([-128, -1, 127], jnp.int8)},
+    }
+    fmt = pp.ParamFormat.for_tree(tree)
+    nb = fmt.nbytes
+    assert nb == 9 * 16 * 2 + 16 * 4 + 2 * 3 * 4 * 4 * 2 + 2 * 3 * 4 \
+        + 8 * 2 + 3 + 3
+    buf = fmt.pack(tree, nb + 13)            # padded width
+    assert buf.shape == (nb + 13,) and buf.dtype == jnp.uint8
+    out = fmt.unpack(buf)
+    la, lb = jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(tree)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert isinstance(out["fc"]["w"], SparseWeight)
+    assert out["fc"]["w"].d_in == 24
+    with pytest.raises(ValueError, match="width"):
+        fmt.pack(tree, nb - 1)
+
+
+def test_gspmd_placement_requires_mesh():
+    """Satellite fix: requesting per-stage placement with no mesh (or a
+    mesh without the stage axis) used to silently replicate the buffer;
+    now it raises."""
+    fns = [lambda pb, w: w]
+    xw = jnp.zeros((2, 1, 4))
+    pbuf = jnp.zeros((1, 8), jnp.uint8)
+    with pytest.raises(ValueError, match="requires a mesh"):
+        pp.pipeline_apply_gspmd_hetero(fns, xw, n_stages=1,
+                                       stage_params=pbuf)
+    mesh = jax.make_mesh((1,), ("data",))    # no 'stage' axis
+    with pytest.raises(ValueError, match="requires a mesh"):
+        pp.pipeline_apply_gspmd_hetero(fns, xw, n_stages=1, mesh=mesh,
+                                       stage_axis="stage",
+                                       stage_params=pbuf)
+    # replicated operation stays mesh-optional
+    out = pp.pipeline_apply_gspmd_hetero([lambda w: w + 1.0], xw,
+                                         n_stages=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(xw + 1.0))
+
+
+def test_assign_stages_weight_budget_rebalances():
+    """Memory-aware planning: the cut DP must reject weight-overweight
+    groups even when they are cycle-optimal."""
+    costs = np.array([1.0, 1.0, 8.0])
+    weights = np.array([6.0, 6.0, 1.0])
+    # unbudgeted: cycle-optimal cut groups the two cheap layers
+    assert planner.assign_stages(costs, 2) == [0, 0, 1]
+    # budgeted: 6+6 > 10 busts the budget -> rebalance around it
+    got = planner.assign_stages(costs, 2, weights=weights,
+                                weight_budget=10.0)
+    assert got == [0, 1, 1]
+    # a single layer over budget can never fit a contiguous partition
+    with pytest.raises(ValueError, match="alone exceed"):
+        planner.assign_stages(costs, 3, weights=np.array([1.0, 20.0, 1.0]),
+                              weight_budget=10.0)
+    # feasible per-layer but no 2-stage contiguous split fits
+    with pytest.raises(ValueError, match="fits the per-stage weight"):
+        planner.assign_stages(np.ones(3), 2, weights=np.array([6., 6., 6.]),
+                              weight_budget=7.0)
+
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_plan_cnn_pipeline_memory_aware(arch):
+    """plan_cnn_pipeline prices weight residency and respects a
+    per-stage byte budget; the plan reports the accounting."""
+    from repro.core.costmodel import pytree_param_bytes
+    cfg = _cfg(arch, sparse=(arch == "resnet50"))
+    params = cnn.init_cnn(cfg, KEY)
+    total = pytree_param_bytes(params)
+    plan = planner.plan_cnn_pipeline(cfg, params, 8)
+    assert int(sum(plan["stage_param_bytes"])) == total
+    # tightest feasible-ish budget: a single IR node is the atomic
+    # placement unit (the dense MobileNet heads are ~1/3 of the model)
+    budget = max(total // 3, int(plan["node_param_bytes"].max()))
+    plan_b = planner.plan_cnn_pipeline(cfg, params, 8,
+                                       max_stage_param_bytes=budget)
+    assert plan_b["placed_bytes_per_device"] <= budget
+    assert plan_b["param_budget_bytes"] == budget
+    assert int(sum(plan_b["stage_param_bytes"])) == total

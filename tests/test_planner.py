@@ -80,14 +80,18 @@ def test_assign_stages_optimal(costs, n_stages):
 
 
 def test_fig3_reproduction_shape():
-    """Balancing a sparse ResNet-50 yields a >=10x bottleneck reduction
-    at the paper's 5000-DSP budget (paper: 30x)."""
+    """Balancing a sparse ResNet-50 yields a large bottleneck reduction
+    at the paper's 5000-DSP budget (paper: 30x). The bar is >8x: the
+    classifier now prunes with the rest of the network (per-stage
+    placement PR), so the UNBALANCED network lost the dense-fc outlier
+    that used to inflate the numerator past 10x — the conv balancing
+    itself is unchanged."""
     cfg = get_config("resnet50")
     params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
     ops = planner.cnn_op_costs(cfg, params)
     unbal = max(op.cycles(1) for op in ops)
     plan = planner.plan_cnn(cfg, params, 5000)
-    assert unbal / plan.bottleneck_cycles > 10.0
+    assert unbal / plan.bottleneck_cycles > 8.0
     assert plan.resources <= 5000
 
 
