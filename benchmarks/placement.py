@@ -10,6 +10,12 @@ Sparse ResNet-50 additionally plans under the 1/4 budget (the ISSUE 4
 acceptance configuration); the MobileNets run dense (paper Table IV)
 and unbudgeted, showing what cost-balanced cuts alone leave resident.
 
+Ragged accounting: the sharded (S, P) buffer pads every stage row to
+the largest stage's bytes; ``ragged_reclaimed_bytes`` is what the
+per-stage-width rows (``PlacedParams.pack_ragged``, used on the
+single-host packed path) give back on unbalanced nets, and
+``ragged_padding_frac`` is that as a fraction of the padded buffer.
+
 Emits CSV rows plus a JSON summary consumed by benchmarks/run.py for
 BENCH.json headline keys (``placement_param_ratio_<arch>``).
 """
@@ -45,6 +51,11 @@ def main(smoke: bool = False, out: str = None):
                                          max_stage_param_bytes=budget)
         placed = int(plan["placed_bytes_per_device"])
         ratio = placed / total
+        stage_bytes = [int(b) for b in plan["stage_param_bytes"]]
+        # ragged accounting: the even (S, P) buffer pads every row to
+        # the widest stage; per-stage-width rows reclaim the difference
+        padded_total = len(stage_bytes) * placed
+        reclaimed = padded_total - sum(stage_bytes)
         results["archs"][arch] = {
             "sparse": sparse,
             "param_bytes_replicated_per_device": total,
@@ -52,10 +63,16 @@ def main(smoke: bool = False, out: str = None):
             "placed_ratio": ratio,
             "budget_frac": budget_frac,
             "imbalance": plan["imbalance"],
-            "stage_param_bytes": [int(b) for b in plan["stage_param_bytes"]],
+            "stage_param_bytes": stage_bytes,
+            "padded_buffer_bytes": padded_total,
+            "ragged_reclaimed_bytes": reclaimed,
+            "ragged_padding_frac": reclaimed / max(padded_total, 1),
         }
         row(f"placement_{arch}", 0,
             f"placed={placed}B_repl={total}B_ratio={ratio:.3f}")
+        row(f"placement_ragged_{arch}", 0,
+            f"reclaimed={reclaimed}B_of_{padded_total}B_padded"
+            f"_frac={reclaimed / max(padded_total, 1):.3f}")
     print("placement_json," + json.dumps(results))
     if out:
         with open(out, "w") as f:

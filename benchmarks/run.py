@@ -32,7 +32,7 @@ import traceback
 
 MODULES = ("balance_fig3", "planner_accuracy", "sparse_speedup",
            "conv_fused", "fusion", "throughput_tab4", "resources_tab2",
-           "pipeline_cnn", "placement")
+           "pipeline_cnn", "placement", "serving")
 
 # headline-key gate spec: direction ("higher"/"lower" is better) and
 # relative tolerance. Wall-clock-derived keys are noisy on shared CI
@@ -56,6 +56,11 @@ GATE = {
     "placement_param_ratio_resnet50": ("lower", 0.05),
     "placement_param_ratio_mobilenet_v1": ("lower", 0.05),
     "placement_param_ratio_mobilenet_v2": ("lower", 0.05),
+    # continuous serving: wall-clock im/s is noisy on shared runners
+    # (regression-direction only, very loose); the steady bubble is
+    # tick-count-derived — deterministic, tight
+    "serving_throughput_imgs_per_s": ("higher", 0.90),
+    "serving_steady_bubble": ("lower", 0.05),
 }
 
 
@@ -84,6 +89,11 @@ def _headline(modules: dict) -> dict:
     for arch, a in ((modules.get("placement") or {}).get("archs")
                     or {}).items():
         out[f"placement_param_ratio_{arch}"] = a["placed_ratio"]
+    srv = modules.get("serving") or {}
+    if "serving_throughput_imgs_per_s" in srv:
+        out["serving_throughput_imgs_per_s"] = \
+            srv["serving_throughput_imgs_per_s"]
+        out["serving_steady_bubble"] = srv["serving_steady_bubble"]
     return out
 
 

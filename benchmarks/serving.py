@@ -1,0 +1,71 @@
+"""Continuous-batching serving: throughput and steady-state bubble of
+the never-draining pipeline (launch/serve.CNNPipelineServer) vs the
+batch path that fills and drains per request.
+
+Two headline numbers feed the CI gate:
+
+- ``serving_throughput_imgs_per_s`` — wall-clock im/s of the
+  continuous server over K back-to-back requests (noisy on shared
+  runners: loose, regression-direction-only tolerance);
+- ``serving_steady_bubble`` — the schedule bubble from the server's
+  own tick accounting, (S-1)/(K*M + S-1) for K requests of M
+  microbatches: tick-count-derived, so DETERMINISTIC and tightly
+  gated. The run asserts it beats the single-batch fill bubble
+  (S-1)/(M + S-1) — the whole point of continuous injection.
+
+Runs sparse ResNet-50 (the paper's headline net) on whatever devices
+the host has; single-device smoke uses the ragged packed-params path.
+"""
+import json
+
+from repro.launch.serve import serve_cnn_continuous
+from benchmarks.common import row
+
+ARCH = "resnet50"
+N_STAGES = 4
+
+
+def main(smoke: bool = False, out: str = None):
+    img = 32 if smoke else 48
+    n_requests = 4 if smoke else 8
+    batch = 4 if smoke else 8
+    mb = 2
+    m = serve_cnn_continuous(ARCH, n_requests=n_requests, batch=batch,
+                             mb_size=mb, n_stages=N_STAGES,
+                             image_size=img, verbose=False)
+    results = {
+        "arch": ARCH,
+        "n_stages": m["n_stages"],
+        "n_replicas": m["n_replicas"],
+        "n_requests": n_requests,
+        "batch": batch,
+        "mb_size": mb,
+        "image_size": img,
+        "images": m["images"],
+        "ticks": m["ticks"],
+        "serving_throughput_imgs_per_s": m["images_per_s"],
+        "serving_steady_bubble": m["steady_bubble"],
+        "fill_bubble_single_batch": m["fill_bubble_single_batch"],
+    }
+    assert m["steady_bubble"] < m["fill_bubble_single_batch"], (
+        "continuous injection must amortize the fill bubble across "
+        f"requests: steady {m['steady_bubble']:.3f} >= single-batch "
+        f"fill {m['fill_bubble_single_batch']:.3f}")
+    row("serving_continuous", 1e6 * m["elapsed_s"] / max(m["ticks"], 1),
+        f"imgs_per_s={m['images_per_s']:.1f}_steady_bubble="
+        f"{m['steady_bubble']:.3f}_vs_fill="
+        f"{m['fill_bubble_single_batch']:.3f}")
+    print("serving_json," + json.dumps(results))
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    main(smoke=a.smoke, out=a.out)

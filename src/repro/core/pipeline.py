@@ -29,6 +29,18 @@ Two stage-program shapes are supported:
   buffer (``ParamFormat``/``PlacedParams``) sharded over the stage
   axis, so a device holds only its own stage's weights — HPIPE's
   per-layer weight memories, not a replicated model.
+
+Scale-out past one pipeline happens on a 2-D ``(data, stage)`` mesh:
+once a single layer-pipeline is bubble-free its throughput is fixed by
+the bottleneck stage, so the heterogeneous executors take
+``n_replicas`` — each data-replica runs the FULL stage pipeline on its
+own stage column, the batch shards across replicas, and stage weights
+replicate ONLY across the data axis (per-device bytes unchanged from
+the 1-replica placed mode). ``pipeline_step_hetero`` exposes one
+pipeline tick for continuous batching: a serving loop injects a fresh
+microbatch every step instead of draining between requests, so the
+fill/drain bubble amortizes over the whole request stream
+(``steady_bubble_fraction``), not one batch.
 """
 from __future__ import annotations
 
@@ -79,14 +91,17 @@ def stack_stages(blocks: PyTree, stage_of: list[int], n_stages: int):
 
 
 def _shard_map_stage(fn: Callable, mesh, in_specs, out_specs,
-                     stage_axis: str) -> Callable:
-    """Version-compat shard_map over ONE manual axis (the stage axis);
-    other mesh axes stay auto/replicated per the specs."""
+                     stage_axis, extra_axes: tuple = ()) -> Callable:
+    """Version-compat shard_map over the stage axis (plus any
+    ``extra_axes`` that are also manual — the data axis of a 2-D
+    stage x data pipeline); remaining mesh axes stay auto/replicated
+    per the specs."""
+    manual = frozenset({stage_axis, *extra_axes})
     if hasattr(jax, "shard_map"):             # jax >= 0.6
         return jax.shard_map(
             fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
-            axis_names=frozenset({stage_axis}))  # other mesh axes stay auto
+            axis_names=manual)                # other mesh axes stay auto
     # 0.4.x experimental API. Full manual: partial-auto lowers axis_index
     # to a PartitionId op the XLA:CPU SPMD partitioner rejects. Non-stage
     # axes are replicated per the specs (costs an all-gather of the
@@ -157,35 +172,61 @@ def pipeline_apply(stage_fn: Callable, stage_params: PyTree, mask, x_mb,
     return outs_all[-1]                                   # last stage's slice
 
 
-def microbatch(x, n_microbatches: int, *, pad: bool = False):
-    """(B, ...) -> (M, ceil(B/M), ...). Used by every pipeline path
-    (homogeneous and heterogeneous), so the contract is shared:
+def microbatch(x, n_microbatches: int, *, pad: bool = False,
+               n_replicas: int = 1):
+    """(B, ...) -> (M, B/M, ...), or (R, M, B/(R*M), ...) when the
+    pipeline is replicated (``n_replicas`` > 1: replica r runs
+    microbatches ``x.reshape(R, M, mb)[r]``). Used by every pipeline
+    path (homogeneous and heterogeneous), so the contract is shared:
 
-    - batch not divisible by the microbatch count raises ``ValueError``
-      (the old bare ``assert`` vanished under ``python -O``), unless
+    - a batch not divisible by ``n_replicas * n_microbatches`` raises
+      ``ValueError`` naming BOTH divisors (the old message blamed only
+      the microbatch count, which sent replicated-serving users hunting
+      the wrong knob), unless
     - ``pad=True``: the batch is zero-padded up to the next multiple;
-      the caller must drop the trailing ``M*mb - B`` padded outputs.
+      the caller must drop the trailing ``R*M*mb - B`` padded outputs.
     """
     b = x.shape[0]
     if n_microbatches < 1:
         raise ValueError(f"n_microbatches must be >= 1, got {n_microbatches}")
-    if b % n_microbatches != 0:
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    div = n_microbatches * n_replicas
+    if b % div != 0:
         if not pad:
+            if n_replicas > 1:
+                raise ValueError(
+                    f"batch {b} is not divisible by n_replicas "
+                    f"{n_replicas} * n_microbatches {n_microbatches} "
+                    f"= {div}; pass pad=True to zero-pad (and drop the "
+                    "padded outputs) or choose a batch both divide")
             raise ValueError(
                 f"batch {b} is not divisible by n_microbatches "
                 f"{n_microbatches}; pass pad=True to zero-pad (and drop "
                 "the padded outputs) or choose a divisor")
-        mb = -(-b // n_microbatches)
+        b2 = -(-b // div) * div
         x = jnp.concatenate(
-            [x, jnp.zeros((mb * n_microbatches - b,) + x.shape[1:],
-                          x.dtype)], axis=0)
-        b = mb * n_microbatches
+            [x, jnp.zeros((b2 - b,) + x.shape[1:], x.dtype)], axis=0)
+        b = b2
+    if n_replicas > 1:
+        return x.reshape((n_replicas, n_microbatches, b // div)
+                         + x.shape[1:])
     return x.reshape((n_microbatches, b // n_microbatches) + x.shape[1:])
 
 
 def bubble_fraction(n_microbatches: int, n_stages: int) -> float:
     """Pipeline fill/drain overhead (paper Table I 'Latency: Good')."""
     return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def steady_bubble_fraction(n_ticks_injected: int, n_stages: int) -> float:
+    """Steady-state bubble of a CONTINUOUS pipeline: one fill of S-1
+    ticks amortizes over every microbatch injected across the whole
+    request stream, not one batch. With K back-to-back requests of M
+    microbatches each, ``n_ticks_injected = K*M`` and the bubble is
+    (S-1)/(K*M + S-1) < the single-batch fill bubble (S-1)/(M + S-1)
+    for K > 1."""
+    return (n_stages - 1) / (n_ticks_injected + n_stages - 1)
 
 
 def pipeline_apply_gspmd(stage_fn, stage_params, mask, x_mb, *,
@@ -384,6 +425,13 @@ class PlacedParams:
     residency once the (S, width) buffer is sharded over the stage
     axis. ``trees[s]`` holds the concrete per-stage subtrees (keyed by
     fused-node part names) that ``pack()`` serializes.
+
+    The padded ``(S, width)`` form is what a SHARDED buffer must be
+    (JAX shards evenly, so every stage row pays the largest stage's
+    bytes); ``stage_widths``/``pack_ragged()`` expose the unpadded
+    per-stage layout for paths that carry rows individually (the
+    single-host packed executor), and ``padding_bytes`` reports what
+    the even-width buffer wastes on unbalanced nets.
     """
     formats: tuple
     trees: tuple
@@ -395,10 +443,29 @@ class PlacedParams:
         return tuple(f.nbytes for f in self.formats)
 
     @property
+    def stage_widths(self) -> tuple[int, ...]:
+        """Ragged per-stage buffer widths — exactly each stage's live
+        bytes, no padding to the largest stage."""
+        return self.stage_bytes
+
+    @property
     def replicated_bytes(self) -> int:
         """Per-device residency of the replicated executor: every
         device holds every stage's params."""
         return sum(self.stage_bytes)
+
+    @property
+    def padded_buffer_bytes(self) -> int:
+        """Total bytes of the even-width (S, width) buffer."""
+        return len(self.formats) * self.width
+
+    @property
+    def padding_bytes(self) -> int:
+        """Bytes the even-width buffer pads beyond the live payloads —
+        what ragged per-stage rows reclaim. Per DEVICE the padding is
+        ``width - stage_widths[s]`` on stage s's devices; summed over
+        stages it is this number."""
+        return self.padded_buffer_bytes - sum(self.stage_widths)
 
     def pack(self) -> jax.Array:
         """(n_stages, width) uint8 buffer — row s is stage s's params.
@@ -408,10 +475,77 @@ class PlacedParams:
         return jnp.stack([f.pack(t, self.width)
                           for f, t in zip(self.formats, self.trees)])
 
+    def pack_ragged(self) -> tuple:
+        """Per-stage ``(stage_widths[s],)`` uint8 buffers — the same
+        payloads as :meth:`pack` rows without the even-width padding.
+        The heterogeneous executors accept this tuple as
+        ``stage_params`` on the single-host (mesh-less) path, where the
+        one device would otherwise hold the whole padded buffer; a
+        SHARDED placement still needs the even ``(S, width)`` form
+        (JAX cannot shard rows of unequal width over a mesh axis)."""
+        return tuple(f.pack(t, f.nbytes)
+                     for f, t in zip(self.formats, self.trees))
+
+
+def _check_hetero_params(stage_fns, n_stages, stage_params, mesh,
+                         stage_axis):
+    """Shared validation for the heterogeneous executors. Returns
+    ``(placed, ragged)``: ``ragged`` marks the tuple-of-rows form from
+    :meth:`PlacedParams.pack_ragged` (single-host packed params, no
+    even-width padding)."""
+    if len(stage_fns) != n_stages:
+        raise ValueError(f"{len(stage_fns)} stage programs for "
+                         f"{n_stages} stages")
+    placed = stage_params is not None
+    ragged = placed and isinstance(stage_params, (tuple, list))
+    if ragged:
+        if len(stage_params) != n_stages:
+            raise ValueError(f"{len(stage_params)} ragged param rows for "
+                             f"{n_stages} stages")
+        if mesh is not None and stage_axis in mesh.shape:
+            raise ValueError(
+                "ragged per-stage param rows have unequal widths and "
+                "cannot shard over the stage axis; pass the even "
+                "(S, width) buffer from PlacedParams.pack() for "
+                "placement on a mesh, or drop the mesh for the "
+                "single-host packed path")
+    elif placed and (mesh is None or stage_axis not in mesh.shape):
+        have = "no mesh" if mesh is None else \
+            f"mesh axes {tuple(mesh.shape)}"
+        raise ValueError(
+            "per-stage weight placement (stage_params=...) requires a "
+            f"mesh with a {stage_axis!r} axis to place each stage's "
+            f"weights onto, got {have}; pass mesh=jax.make_mesh"
+            f"(({n_stages},), ({stage_axis!r},)), drop stage_params "
+            "to run with replicated params, or pass "
+            "PlacedParams.pack_ragged() rows for single-host packed "
+            "params")
+    return placed, ragged
+
+
+def _run_hetero_stages(stage_fns, state, stage_params, *, replicated):
+    """Run every stage program on its own state slot. ``state`` is
+    (S, mb, W), or (S, R, mb, W) with ``replicated`` — each replica
+    slot gets its OWN trace of the stage program (no vmap), so the
+    per-sample computation graph is identical to the 1-replica path
+    and replicated output is bitwise-equal to single-replica output."""
+    placed = stage_params is not None
+
+    def one(k, st_k):
+        fn = stage_fns[k]
+        args = (stage_params[k],) if placed else ()
+        if replicated:
+            return jnp.stack([fn(*args, st_k[r])
+                              for r in range(st_k.shape[0])])
+        return fn(*args, st_k)
+
+    return jnp.stack([one(k, state[k]) for k in range(len(stage_fns))])
+
 
 def pipeline_apply_hetero(stage_fns: list, x_wire, *, mesh,
                           stage_axis: str, n_stages: int,
-                          stage_params=None):
+                          stage_params=None, n_replicas: int = 1,
+                          data_axis: str = "data"):
     """shard_map layer pipeline over HETEROGENEOUS per-stage programs.
 
     stage_fns[s]: (mb, W) f32 wire -> (mb, W) f32 wire — stage s's whole
@@ -434,12 +568,39 @@ def pipeline_apply_hetero(stage_fns: list, x_wire, *, mesh,
     program is shared, the selected branch differs per stage index, and
     activations (including residual skips captured in the wire) hop
     stage->stage with ppermute exactly as in ``pipeline_apply``.
+
+    2-D scale-out (``n_replicas`` > 1): the mesh carries a
+    ``(data_axis, stage_axis)`` grid, ``x_wire`` grows a leading
+    replica dim (R, M, mb, W) sharded over ``data_axis`` (use
+    ``microbatch(..., n_replicas=R)``), and every data-replica runs the
+    FULL stage pipeline on its own stage column — ppermute hops stay
+    within each replica. The placed buffer keeps its ``P(stage_axis)``
+    spec, so stage weights replicate ONLY across the data axis:
+    per-device bytes are unchanged from the 1-replica placed mode.
+    Returns (R, M, mb, W).
     """
-    if len(stage_fns) != n_stages:
-        raise ValueError(f"{len(stage_fns)} stage programs for "
-                         f"{n_stages} stages")
-    m = x_wire.shape[0]
-    placed = stage_params is not None
+    placed, ragged = _check_hetero_params(stage_fns, n_stages,
+                                          stage_params, mesh, stage_axis)
+    if ragged:
+        raise ValueError(
+            "the shard_map executor threads the placed buffer through "
+            "lax.switch as one (S, width) array; ragged rows only run "
+            "on the gspmd single-host path")
+    rep = n_replicas > 1
+    if rep:
+        if x_wire.shape[0] != n_replicas:
+            raise ValueError(
+                f"x_wire leading dim {x_wire.shape[0]} != n_replicas "
+                f"{n_replicas}; build it with microbatch(x, M, "
+                "n_replicas=R)")
+        if mesh is None or mesh.shape.get(data_axis) != n_replicas:
+            have = "no mesh" if mesh is None else \
+                f"mesh axes {dict(mesh.shape)}"
+            raise ValueError(
+                f"n_replicas={n_replicas} needs a mesh with a "
+                f"{data_axis!r} axis of that size (one stage column "
+                f"per replica), got {have}")
+    m = x_wire.shape[1] if rep else x_wire.shape[0]
 
     def per_device(*args):
         if placed:
@@ -447,6 +608,8 @@ def pipeline_apply_hetero(stage_fns: list, x_wire, *, mesh,
             p1 = pbuf[0]                      # drop stage dim: own row only
         else:
             (xs,) = args
+        if rep:
+            xs = xs[0]                        # drop local replica dim
         sidx = lax.axis_index(stage_axis)
         act = jnp.zeros_like(xs[0])
         outs = jnp.zeros_like(xs)
@@ -468,22 +631,60 @@ def pipeline_apply_hetero(stage_fns: list, x_wire, *, mesh,
 
         (act, outs), _ = lax.scan(step, (act, outs),
                                   jnp.arange(m + n_stages - 1))
-        return outs[None]                                 # add stage dim back
+        if rep:
+            return outs[None, None]           # add (replica, stage) dims
+        return outs[None]                     # add stage dim back
 
-    if placed:
-        f = _shard_map_stage(per_device, mesh, (P(stage_axis), P()),
-                             P(stage_axis), stage_axis)
-        outs_all = f(stage_params, x_wire)                # (S, M, mb, W)
+    if rep:
+        x_spec = P(data_axis)
+        out_spec = P(data_axis, stage_axis)
+        extra = (data_axis,)
     else:
-        f = _shard_map_stage(per_device, mesh, (P(),), P(stage_axis),
-                             stage_axis)
-        outs_all = f(x_wire)                              # (S, M, mb, W)
-    return outs_all[-1]                                   # last stage's slice
+        x_spec = P()
+        out_spec = P(stage_axis)
+        extra = ()
+    if placed:
+        f = _shard_map_stage(per_device, mesh, (P(stage_axis), x_spec),
+                             out_spec, stage_axis, extra)
+        outs_all = f(stage_params, x_wire)    # ([R,] S, M, mb, W)
+    else:
+        f = _shard_map_stage(per_device, mesh, (x_spec,), out_spec,
+                             stage_axis, extra)
+        outs_all = f(x_wire)                  # ([R,] S, M, mb, W)
+    if rep:
+        return outs_all[:, -1]                # (R, M, mb, W)
+    return outs_all[-1]                       # last stage's slice
+
+
+def _hetero_constrainers(mesh, stage_axis, data_axis, rep):
+    """(state_constrain, out_constrain) for the gspmd executors: state
+    leads with (S[, R], ...) — stage then replica — and outputs lead
+    with ([R,] M, ...). No-ops for axes the mesh doesn't carry."""
+    def state_c(st):
+        if mesh is None:
+            return st
+        spec = [None] * st.ndim
+        if stage_axis in mesh.shape:
+            spec[0] = stage_axis
+        if rep and data_axis in mesh.shape:
+            spec[1] = data_axis
+        if not any(spec):
+            return st
+        return jax.lax.with_sharding_constraint(st, P(*spec))
+
+    def out_c(o):
+        if not rep or mesh is None or data_axis not in mesh.shape:
+            return o
+        return jax.lax.with_sharding_constraint(
+            o, P(data_axis, *([None] * (o.ndim - 1))))
+
+    return state_c, out_c
 
 
 def pipeline_apply_gspmd_hetero(stage_fns: list, x_wire, *, n_stages: int,
                                 stage_axis: str = "pod", mesh=None,
-                                stage_params=None):
+                                stage_params=None, n_replicas: int = 1,
+                                data_axis: str = "data"):
     """Pure-GSPMD heterogeneous pipeline (no shard_map).
 
     The wire state lives on a leading (S, mb, W) axis; each scan step
@@ -494,62 +695,129 @@ def pipeline_apply_gspmd_hetero(stage_fns: list, x_wire, *, n_stages: int,
     at S-fold step cost. Functionally identical to
     ``pipeline_apply_hetero``.
 
-    ``stage_params``: optional ``(S, P)`` uint8 buffer from
-    :meth:`PlacedParams.pack` — per-stage weight placement. Shard it
-    ``P(stage_axis)`` (``jax.device_put`` with
-    ``launch/shardings.stage_param_shardings``) so stage k's row lives
-    only on stage k's devices; ``stage_fns[k]`` then takes
-    ``(param_buf, wire)``. Placement REQUIRES a mesh carrying
-    ``stage_axis``: with ``mesh=None`` there are no stage devices to
-    place onto — the buffer would silently replicate, defeating the
-    point — so that combination raises.
+    ``stage_params``: optional per-stage weight payloads —
+
+    - the ``(S, P)`` uint8 buffer from :meth:`PlacedParams.pack`:
+      per-stage weight PLACEMENT. Shard it ``P(stage_axis)``
+      (``jax.device_put`` with
+      ``launch/shardings.stage_param_shardings``) so stage k's row
+      lives only on stage k's devices; ``stage_fns[k]`` then takes
+      ``(param_buf, wire)``. Placement REQUIRES a mesh carrying
+      ``stage_axis``: with ``mesh=None`` there are no stage devices to
+      place onto — the buffer would silently replicate, defeating the
+      point — so that combination raises.
+    - the tuple of ragged rows from :meth:`PlacedParams.pack_ragged`:
+      single-host PACKED params — each row is exactly its stage's live
+      bytes, so the one device pays no even-width padding. Valid only
+      WITHOUT a stage axis to place onto (unequal widths cannot shard);
+      a mesh carrying ``stage_axis`` raises.
+
+    2-D scale-out (``n_replicas`` > 1): ``x_wire`` grows a leading
+    replica dim (R, M, mb, W) (``microbatch(..., n_replicas=R)``), the
+    state becomes (S, R, mb, W) constrained ``P(stage_axis,
+    data_axis)`` on a ``(data, stage)`` mesh, and each replica slot
+    runs its own trace of every stage program — batch sharded across
+    replicas, placed rows replicated only across the data axis.
+    Returns (R, M, mb, W). Mesh-less replication is bitwise-identical
+    to the 1-replica path; on a 2-D MESH the GSPMD partitioner may
+    re-layout ops (~1e-10 logit drift observed on XLA:CPU) — when
+    replication must be bit-reproducible, use the shard_map executor
+    (``pipeline_apply_hetero``), whose per-device program is literally
+    the single-pipeline program.
     """
-    if len(stage_fns) != n_stages:
-        raise ValueError(f"{len(stage_fns)} stage programs for "
-                         f"{n_stages} stages")
-    placed = stage_params is not None
-    if placed and (mesh is None or stage_axis not in mesh.shape):
-        have = "no mesh" if mesh is None else \
-            f"mesh axes {tuple(mesh.shape)}"
+    placed, ragged = _check_hetero_params(stage_fns, n_stages,
+                                          stage_params, mesh, stage_axis)
+    rep = n_replicas > 1
+    if rep and x_wire.shape[0] != n_replicas:
         raise ValueError(
-            "per-stage weight placement (stage_params=...) requires a "
-            f"mesh with a {stage_axis!r} axis to place each stage's "
-            f"weights onto, got {have}; pass mesh=jax.make_mesh"
-            f"(({n_stages},), ({stage_axis!r},)) or drop stage_params "
-            "to run with replicated params")
-    m = x_wire.shape[0]
+            f"x_wire leading dim {x_wire.shape[0]} != n_replicas "
+            f"{n_replicas}; build it with microbatch(x, M, n_replicas=R)")
+    m = x_wire.shape[1] if rep else x_wire.shape[0]
     s = n_stages
+    state_c, out_c = _hetero_constrainers(mesh, stage_axis, data_axis, rep)
 
-    def constrain(st):
-        if mesh is None or stage_axis not in mesh.shape:
-            return st
-        return jax.lax.with_sharding_constraint(
-            st, P(stage_axis, *([None] * (st.ndim - 1))))
-
-    if placed:
-        stage_params = constrain(stage_params)
-    state = jnp.zeros((s,) + x_wire.shape[1:], x_wire.dtype)
+    if placed and not ragged:
+        stage_params = jax.lax.with_sharding_constraint(
+            stage_params, P(stage_axis, None)) \
+            if mesh is not None and stage_axis in mesh.shape else stage_params
+    mb_shape = x_wire.shape[2:] if rep else x_wire.shape[1:]
+    lead = (s, n_replicas) if rep else (s,)
+    state = jnp.zeros(lead + mb_shape, x_wire.dtype)
     outs = jnp.zeros_like(x_wire)
 
     def step(carry, i):
         state, outs = carry
-        inject = x_wire[jnp.clip(i, 0, m - 1)]
+        inject = x_wire[:, jnp.clip(i, 0, m - 1)] if rep else \
+            x_wire[jnp.clip(i, 0, m - 1)]
         state = state.at[0].set(
             jnp.where(i < m, inject, state[0]).astype(state.dtype))
-        state = constrain(state)
-        if placed:
-            ys = jnp.stack([fn(stage_params[k], state[k])
-                            for k, fn in enumerate(stage_fns)])
-        else:
-            ys = jnp.stack([fn(state[k]) for k, fn in enumerate(stage_fns)])
-        ys = constrain(ys)
+        state = state_c(state)
+        ys = _run_hetero_stages(stage_fns, state, stage_params,
+                                replicated=rep)
+        ys = state_c(ys)
         j = i - (s - 1)
-        upd = lax.dynamic_update_index_in_dim(outs, ys[-1],
-                                              jnp.clip(j, 0, m - 1), 0)
+        upd = lax.dynamic_update_index_in_dim(
+            outs, ys[-1], jnp.clip(j, 0, m - 1), 1 if rep else 0)
         outs = jnp.where(j >= 0, upd, outs)
+        outs = out_c(outs)
         state = jnp.roll(ys, 1, axis=0)                   # stage s -> s+1
         return (state, outs), None
 
     (state, outs), _ = lax.scan(step, (state, outs),
                                 jnp.arange(m + s - 1))
     return outs
+
+
+def concat_hetero_outputs(out_wires, unpack_out, n_microbatches: int,
+                          n_replicas: int = 1):
+    """Reassemble a hetero executor's output wires into one batch:
+    unpack each microbatch wire and concatenate replica-major —
+    ``microbatch(..., n_replicas=R)``'s C-order reshape means replica
+    r owns the contiguous batch slice r*B/R:(r+1)*B/R, so this restores
+    the original sample order. Shared by serve/dryrun so the ordering
+    rule lives in one place."""
+    if n_replicas > 1:
+        mbs = [unpack_out(out_wires[r][i]) for r in range(n_replicas)
+               for i in range(n_microbatches)]
+    else:
+        mbs = [unpack_out(out_wires[i]) for i in range(n_microbatches)]
+    return jnp.concatenate(mbs, axis=0)
+
+
+def pipeline_step_hetero(stage_fns: list, state, in_wire, *,
+                         n_stages: int, stage_axis: str = "stage",
+                         mesh=None, stage_params=None,
+                         n_replicas: int = 1, data_axis: str = "data"):
+    """ONE pipeline tick — the continuous-batching primitive.
+
+    Instead of scanning a whole batch through fill+drain
+    (``pipeline_apply_gspmd_hetero``), a serving loop holds the
+    pipeline state across calls and ticks it once per microbatch:
+    inject ``in_wire`` at stage 0, run every stage on its current slot,
+    emit stage S-1's output (the microbatch injected S-1 ticks
+    earlier), shift. Back-to-back requests keep injecting — the
+    pipeline NEVER drains between them, so the fill bubble amortizes
+    over the whole request stream (``steady_bubble_fraction``).
+
+    state: (S, mb, W) wires, or (S, R, mb, W) with ``n_replicas`` > 1
+    (zeros before the first tick; the caller threads it through —
+    ``jax.jit(..., donate_argnums=(0,))`` reuses the buffer so the
+    steady-state loop allocates nothing). in_wire: (mb, W) / (R, mb, W)
+    — zeros when the queue is empty (an idle slot, not a hazard: slots
+    never mix). Same param flavours and mesh rules as the batch
+    executor. Returns ``(next_state, out_wire)``.
+    """
+    placed, ragged = _check_hetero_params(stage_fns, n_stages,
+                                          stage_params, mesh, stage_axis)
+    rep = n_replicas > 1
+    want = (n_stages, n_replicas) if rep else (n_stages,)
+    if state.shape[:len(want)] != want:
+        raise ValueError(f"state leading dims {state.shape[:len(want)]} "
+                         f"!= (n_stages{', n_replicas' if rep else ''}) "
+                         f"= {want}")
+    state_c, out_c = _hetero_constrainers(mesh, stage_axis, data_axis, rep)
+    state = state.at[0].set(in_wire.astype(state.dtype))
+    state = state_c(state)
+    ys = _run_hetero_stages(stage_fns, state, stage_params, replicated=rep)
+    ys = state_c(ys)
+    return jnp.roll(ys, 1, axis=0), out_c(ys[-1])

@@ -332,3 +332,97 @@ def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None, *,
         # kwarg, which is echoed back as param_budget_bytes above
         "placed_bytes_per_device": float(stage_bytes.max()),
     }
+
+
+# --- stage x data co-planner (2-D pipeline replication) ---------------------
+
+def pipeline_throughput_rel(stage_cost, n_replicas: int,
+                            n_microbatches: int) -> float:
+    """Latency-bounded relative throughput of one (stages, replicas)
+    split: images/cycle across R replicas of an S-stage pipeline fed M
+    microbatches each. The bottleneck stage sets the tick rate
+    (1/max stage cost), every replica delivers one microbatch per tick
+    in steady state, and the fill/drain bubble scales it by
+    M/(M + S - 1) (``pipeline.bubble_fraction``'s complement —
+    "latency-bounded" because a single batch pays the fill; a
+    continuous server amortizes it toward 1)."""
+    stage_cost = np.asarray(stage_cost, dtype=np.float64)
+    s = len(stage_cost)
+    fill = n_microbatches / (n_microbatches + s - 1)
+    return float(n_replicas * fill / max(stage_cost.max(), 1e-30))
+
+
+def plan_cnn_pipeline_2d(cfg, params, n_devices: int, *,
+                         n_microbatches: int = 8, graph=None,
+                         max_stage_param_bytes: Optional[int] = None) -> dict:
+    """Co-plan the (n_stages, n_replicas) split of ``n_devices`` —
+    HPIPE's resource-partitioning tradeoff (Shen et al.): deeper cuts
+    shrink per-stage work but inherit the graph's imbalance (the max
+    stage cost stops shrinking once a single hot node dominates a
+    stage), while replicating a shallower pipeline scales throughput
+    linearly at the cost of pipeline depth. For every divisor split
+    S x R = n_devices this plans the S-stage cut with the existing cost
+    model and scores ``pipeline_throughput_rel``; replicating a 4-stage
+    pipeline 2x beats an unbalanced 8-stage cut exactly when the
+    8-stage ``imbalance`` exceeds the replication overhead (the
+    fill-bubble and bottleneck ratios).
+
+    Budget-infeasible splits (``max_stage_param_bytes`` with too few
+    stages) are skipped, not fatal — unless NO split fits, which
+    raises. When a divisor depth exceeds the graph's node count,
+    ``assign_stages`` clamps it (one node per stage): the candidate
+    keeps its clamped depth, and ``n_devices_used = n_stages *
+    n_replicas`` records that such a split idles ``n_devices -
+    n_devices_used`` devices (it still competes on throughput — an
+    idle device costs nothing but itself). Returns the winning
+    split's plan (as ``plan``) plus the scored candidate table."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    candidates, errors = [], []
+    for s in range(1, n_devices + 1):
+        if n_devices % s != 0:
+            continue
+        try:
+            plan = plan_cnn_pipeline(
+                cfg, params, s, graph=graph,
+                max_stage_param_bytes=max_stage_param_bytes)
+        except ValueError as e:        # budget-infeasible at this depth
+            errors.append((s, str(e)))
+            continue
+        s_used = plan["n_stages"]      # assign_stages clamps (see contract)
+        r = n_devices // s_used
+        candidates.append({
+            "n_stages": s_used,
+            "n_replicas": r,
+            "n_devices_used": s_used * r,   # < n_devices iff clamped
+            "throughput_rel": pipeline_throughput_rel(
+                plan["stage_cost"], r, n_microbatches),
+            "imbalance": plan["imbalance"],
+            "bottleneck_cycles": float(np.max(plan["stage_cost"])),
+            "placed_bytes_per_device": plan["placed_bytes_per_device"],
+            "plan": plan,
+        })
+    if not candidates:
+        raise ValueError(
+            f"no (stages, replicas) split of {n_devices} devices fits "
+            f"the per-stage weight budget {max_stage_param_bytes}; "
+            f"tried: {errors}")
+    # dedup clamped splits (s > n_nodes all collapse to the same cut)
+    seen, uniq = set(), []
+    for c in candidates:
+        key = (c["n_stages"], c["n_replicas"])
+        if key not in seen:
+            seen.add(key)
+            uniq.append(c)
+    best = max(uniq, key=lambda c: c["throughput_rel"])
+    return {
+        "n_stages": best["n_stages"],
+        "n_replicas": best["n_replicas"],
+        "n_devices": n_devices,
+        "n_devices_used": best["n_devices_used"],
+        "n_microbatches": n_microbatches,
+        "throughput_rel": best["throughput_rel"],
+        "plan": best["plan"],
+        "candidates": [{k: v for k, v in c.items() if k != "plan"}
+                       for c in uniq],
+    }

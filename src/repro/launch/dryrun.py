@@ -314,7 +314,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
                           n_microbatches: int = 8, batch: int = 16,
                           image_size: int = 64, placed: bool = True,
-                          param_budget_frac=None,
+                          param_budget_frac=None, n_replicas: int = 1,
                           verbose: bool = True) -> dict:
     """``pipeline_cnn`` mode: lower + compile the heterogeneous CNN
     layer pipeline (shard_map over a stage axis) and extract what the
@@ -331,7 +331,12 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
     holds) vs ``param_bytes_replicated_per_device`` (what the
     replicated executor would hold everywhere). ``param_budget_frac``
     bounds any stage to that fraction of the model's bytes and lets
-    the memory-aware planner rebalance cuts."""
+    the memory-aware planner rebalance cuts.
+
+    ``n_replicas`` > 1 compiles the stage x data 2-D pipeline (R full
+    pipelines on a (data, stage) mesh, batch sharded over replicas,
+    placed rows replicated only across data) — the collective-permute
+    bytes then cover R in-replica wire streams."""
     from repro.core import pipeline as pp, planner
     from repro.core.costmodel import pytree_param_bytes
     from repro.launch.shardings import placed_stage_setup
@@ -340,10 +345,11 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
     if cfg.family != "cnn":
         return {"arch": arch, "shape": "pipeline_cnn", "status": "skipped",
                 "reason": "not a CNN arch"}
-    if batch % n_microbatches != 0:
+    if batch % (n_microbatches * n_replicas) != 0:
         raise ValueError(
-            f"batch {batch} must be divisible by n_microbatches "
-            f"{n_microbatches} for the dry-run cell (serve pads instead)")
+            f"batch {batch} must be divisible by n_replicas "
+            f"{n_replicas} * n_microbatches {n_microbatches} for the "
+            "dry-run cell (serve pads instead)")
     t0 = time.time()
     params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
     total_bytes = pytree_param_bytes(params)
@@ -352,15 +358,18 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
     plan = planner.plan_cnn_pipeline(cfg, params, n_stages,
                                      max_stage_param_bytes=budget)
     s = plan["n_stages"]
+    r = n_replicas
     imgs = jax.ShapeDtypeStruct((batch, image_size, image_size, 3),
                                 jnp.float32)
-    mb_shape = jax.eval_shape(
-        lambda x: pp.microbatch(x, n_microbatches), imgs).shape
+    mb_full = jax.eval_shape(
+        lambda x: pp.microbatch(x, n_microbatches, n_replicas=r),
+        imgs).shape
+    mb_shape = mb_full[2:] if r > 1 else mb_full[1:]
 
-    xmb_spec = jax.ShapeDtypeStruct(mb_shape, jnp.float32)
+    xmb_spec = jax.ShapeDtypeStruct(mb_full, jnp.float32)
     if placed:
         stage_fns, pack_in, unpack_out, width, pparams, mesh, sps = \
-            placed_stage_setup(cfg, params, plan, mb_shape[1:])
+            placed_stage_setup(cfg, params, plan, mb_shape, n_replicas=r)
         placed_bytes = pparams.width
         lower_args = (xmb_spec, jax.ShapeDtypeStruct(
             (s, pparams.width), jnp.uint8, sharding=sps["buffer"]))
@@ -368,26 +377,27 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
         def pipeline(wires, pbuf):
             return pp.pipeline_apply_hetero(
                 stage_fns, wires, mesh=mesh, stage_axis="stage",
-                n_stages=s, stage_params=pbuf)
+                n_stages=s, stage_params=pbuf, n_replicas=r)
     else:
         stage_fns, pack_in, unpack_out, width = cnn.stage_programs(
-            cfg, params, plan["stage_of"], mb_shape[1:])
-        mesh = jax.make_mesh((s,), ("stage",))
+            cfg, params, plan["stage_of"], mb_shape)
+        from repro.launch.mesh import make_stage_mesh
+        mesh = make_stage_mesh(s, r)
         placed_bytes = int(plan["placed_bytes_per_device"])
         lower_args = (xmb_spec,)
 
         def pipeline(wires):
             return pp.pipeline_apply_hetero(stage_fns, wires, mesh=mesh,
-                                            stage_axis="stage", n_stages=s)
-    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
-
+                                            stage_axis="stage", n_stages=s,
+                                            n_replicas=r)
     def step(xmb, *pbuf):
-        wires = jax.vmap(pack_in)(xmb)
-        out = pipeline(wires, *pbuf)
-        return jnp.concatenate(
-            [unpack_out(out[i]) for i in range(n_microbatches)], axis=0)
+        pack = jax.vmap(jax.vmap(pack_in)) if r > 1 else jax.vmap(pack_in)
+        out = pipeline(pack(xmb), *pbuf)
+        return pp.concat_hetero_outputs(out, unpack_out, n_microbatches,
+                                        n_replicas=r)
 
-    with mesh_ctx:
+    from repro.launch.mesh import mesh_context
+    with mesh_context(mesh):
         compiled = jax.jit(step).lower(*lower_args).compile()
     t1 = time.time()
     coll = collective_bytes(compiled.as_text())
@@ -396,9 +406,11 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
         cost = cost[0] if cost else {}
     res = {
         "arch": arch, "shape": "pipeline_cnn", "status": "ok",
-        "mesh": f"{s}x1(stage)", "pipeline": True,
+        "mesh": (f"{r}x{s}(data,stage)" if r > 1 else f"{s}x1(stage)"),
+        "pipeline": True,
         "compile_s": round(t1 - t0, 1),
         "n_stages": int(s),
+        "n_replicas": int(r),
         "n_microbatches": int(n_microbatches),
         "image_size": int(image_size),
         "wire_width": int(width),
@@ -439,6 +451,9 @@ def main(argv=None):
                     help="pipeline-cnn: bound any stage's weight bytes "
                          "to this fraction of the model (memory-aware "
                          "planner rebalances cuts)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="pipeline-cnn: replicate the whole pipeline "
+                         "across a data mesh axis (stage x data 2-D)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
@@ -469,7 +484,8 @@ def main(argv=None):
             n_microbatches=args.microbatches, batch=args.batch,
             image_size=args.image_size,
             placed=not args.replicated_params,
-            param_budget_frac=args.param_budget_frac))
+            param_budget_frac=args.param_budget_frac,
+            n_replicas=args.replicas))
     else:
         results.append(run_cell(args.arch, args.shape,
                                 multi_pod=args.multi_pod,

@@ -20,6 +20,30 @@ def make_test_mesh(*, n_data: int = 2, n_model: int = 2, n_pod: int = 0):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def mesh_context(mesh):
+    """Fresh mesh context per use: ``jax.set_mesh`` on 0.5+, the Mesh
+    itself as context on 0.4.x, a no-op without a mesh. One helper so
+    the version-compat rule lives in one place (serve + dryrun)."""
+    import contextlib
+    if mesh is None:
+        return contextlib.nullcontext()
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
+def make_stage_mesh(n_stages: int, n_replicas: int = 1, *,
+                    stage_axis: str = "stage", data_axis: str = "data"):
+    """Mesh for the heterogeneous CNN layer pipeline: one device slot
+    per stage, optionally replicated along a leading data axis (the
+    stage x data 2-D pipeline — each data row is a full pipeline, the
+    batch shards across rows, stage weights replicate only across
+    rows). With ``n_replicas == 1`` the mesh stays 1-D so existing
+    single-pipeline specs/paths are unchanged."""
+    if n_replicas > 1:
+        return jax.make_mesh((n_replicas, n_stages),
+                             (data_axis, stage_axis))
+    return jax.make_mesh((n_stages,), (stage_axis,))
+
+
 # TPU v5e hardware constants for the roofline analysis
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

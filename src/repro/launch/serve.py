@@ -12,18 +12,31 @@ hardware.
 
     PYTHONPATH=src python -m repro.launch.serve --arch resnet50 \
         --batch 16 --microbatches 4 --stages 4 --image-size 64
+
+Scale-out past one pipeline: ``--replicas R`` runs R full pipelines on
+a (data, stage) 2-D mesh (batch sharded across replicas, stage weights
+replicated only across data), ``--auto-split`` lets the co-planner
+pick (stages, replicas) for the host, and ``--continuous`` serves
+back-to-back requests through a never-draining pipeline
+(``CNNPipelineServer``): one microbatch injected per tick, H2D of the
+next microbatch overlapped with the current step, fill bubble
+amortized over the whole request stream.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch resnet50 \
+        --continuous --requests 8 --batch 8 --mb-size 2 --replicas 2
 """
 from __future__ import annotations
 
 import argparse
-import contextlib
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.launch.mesh import mesh_context as _mesh_ctx
 from repro.models import lm
 
 
@@ -79,10 +92,40 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
             "decode_s": decode_s, "tokens_per_s": toks_per_s}
 
 
+def _plan_cnn_serving(arch: str, *, n_stages: int, n_replicas: int,
+                      n_microbatches: int, param_budget_frac,
+                      auto_split: bool, seed: int):
+    """Shared serving preamble (serve_cnn + CNNPipelineServer): init
+    params, resolve the weight budget, and pick the (stages, replicas)
+    split — the co-planner's when ``auto_split``, the caller's
+    otherwise. One copy so the two entry points cannot drift.
+    Returns ``(cfg, params, plan, n_replicas, total_bytes)``."""
+    from repro.core import planner
+    from repro.core.costmodel import pytree_param_bytes
+    from repro.models import cnn
+    cfg = get_config(arch)
+    if cfg.family != "cnn":
+        raise ValueError(f"{arch} is not a CNN arch")
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
+    total_bytes = pytree_param_bytes(params)
+    budget = (int(param_budget_frac * total_bytes)
+              if param_budget_frac else None)
+    if auto_split:
+        plan2d = planner.plan_cnn_pipeline_2d(
+            cfg, params, len(jax.devices()),
+            n_microbatches=n_microbatches, max_stage_param_bytes=budget)
+        plan, n_replicas = plan2d["plan"], plan2d["n_replicas"]
+    else:
+        plan = planner.plan_cnn_pipeline(cfg, params, n_stages,
+                                         max_stage_param_bytes=budget)
+    return cfg, params, plan, n_replicas, total_bytes
+
+
 def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
               n_stages: int = 4, image_size: int = 64, iters: int = 3,
               seed: int = 0, verbose: bool = True, placed=None,
-              param_budget_frac=None):
+              param_budget_frac=None, n_replicas: int = 1,
+              auto_split: bool = False):
     """Batched image serving through the heterogeneous layer pipeline
     (``pipeline_cnn`` mode).
 
@@ -101,63 +144,78 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
     that fraction of the model and lets the planner rebalance cuts
     (memory-aware planning). Batches that don't divide the microbatch
     count are zero-padded and the padded outputs dropped.
-    """
-    from repro.core import pipeline as pp, planner
+
+    2-D scale-out: ``n_replicas`` > 1 runs R full pipelines side by
+    side on a ``(data, stage)`` mesh — the batch shards across
+    replicas, each replica's stage column holds its own stage's
+    weights (replicated ONLY across data: per-device bytes unchanged),
+    and throughput scales toward Rx the single pipeline's.
+    ``auto_split=True`` lets the (stages, replicas) co-planner
+    (``planner.plan_cnn_pipeline_2d``) pick the split for the host's
+    device count instead of taking ``n_stages``/``n_replicas``
+    literally."""
+    from repro.core import pipeline as pp
+    cfg, params, plan, n_replicas, total_bytes = _plan_cnn_serving(
+        arch, n_stages=n_stages, n_replicas=n_replicas,
+        n_microbatches=n_microbatches,
+        param_budget_frac=param_budget_frac, auto_split=auto_split,
+        seed=seed)
     from repro.models import cnn
-    cfg = get_config(arch)
-    if cfg.family != "cnn":
-        raise ValueError(f"{arch} is not a CNN arch")
-    key = jax.random.PRNGKey(seed)
-    params = cnn.init_cnn(cfg, key)
-    from repro.core.costmodel import pytree_param_bytes
-    total_bytes = pytree_param_bytes(params)
-    budget = (int(param_budget_frac * total_bytes)
-              if param_budget_frac else None)
-    plan = planner.plan_cnn_pipeline(cfg, params, n_stages,
-                                     max_stage_param_bytes=budget)
     s = plan["n_stages"]
-    use_placed = (len(jax.devices()) >= s) if placed is None else placed
-    images = jax.random.normal(key, (batch, image_size, image_size, 3))
-    x_mb = pp.microbatch(images, n_microbatches, pad=True)
+    r = n_replicas
+    use_placed = (len(jax.devices()) >= s * r) if placed is None else placed
+    images = jax.random.normal(jax.random.PRNGKey(seed),
+                               (batch, image_size, image_size, 3))
+    x_mb = pp.microbatch(images, n_microbatches, pad=True, n_replicas=r)
+    mb_shape = x_mb.shape[2:] if r > 1 else x_mb.shape[1:]
 
     if use_placed:
-        if len(jax.devices()) < s:
+        if len(jax.devices()) < s * r:
             raise ValueError(
-                f"placed=True needs >= {s} devices (one per stage), "
-                f"have {len(jax.devices())}; run under "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count={s} "
-                "or drop placement")
+                f"placed=True needs >= {s * r} devices ({s} stages x "
+                f"{r} replicas), have {len(jax.devices())}; run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={s * r} "
+                "or drop placement/replication")
         from repro.launch.shardings import placed_stage_setup
         stage_fns, pack_in, unpack_out, width, pparams, mesh, sps = \
-            placed_stage_setup(cfg, params, plan, x_mb.shape[1:])
+            placed_stage_setup(cfg, params, plan, mb_shape, n_replicas=r)
         placed_bytes = pparams.width
         run_args = (x_mb, jax.device_put(pparams.pack(), sps["buffer"]))
-        mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
 
         def pipeline(wires, pb):
+            if r > 1:
+                # shard_map: every device runs literally the
+                # single-pipeline program (lax.switch + in-replica
+                # ppermute), so replicated logits are BITWISE equal to
+                # the 1-replica placed path; the gspmd executor's 2-D
+                # partition can re-layout ops (~1e-10 drift)
+                return pp.pipeline_apply_hetero(
+                    stage_fns, wires, mesh=mesh, stage_axis="stage",
+                    n_stages=s, stage_params=pb, n_replicas=r)
             return pp.pipeline_apply_gspmd_hetero(
                 stage_fns, wires, n_stages=s, stage_axis="stage",
                 mesh=mesh, stage_params=pb)
     else:
         stage_fns, pack_in, unpack_out, width = cnn.stage_programs(
-            cfg, params, plan["stage_of"], x_mb.shape[1:])
+            cfg, params, plan["stage_of"], mb_shape)
         placed_bytes = int(plan["placed_bytes_per_device"])  # what
         #                                     placement WOULD hold
+        mesh = None
         run_args = (x_mb,)
-        mesh_ctx = contextlib.nullcontext()
 
         def pipeline(wires):
             return pp.pipeline_apply_gspmd_hetero(stage_fns, wires,
-                                                  n_stages=s)
+                                                  n_stages=s, n_replicas=r)
+
+    pack = jax.vmap(jax.vmap(pack_in)) if r > 1 else jax.vmap(pack_in)
 
     @jax.jit
     def run(xmb, *pb):
-        wires = jax.vmap(pack_in)(xmb)
-        out = pipeline(wires, *pb)
-        return jnp.concatenate(
-            [unpack_out(out[i]) for i in range(xmb.shape[0])], axis=0)
+        out = pipeline(pack(xmb), *pb)
+        return pp.concat_hetero_outputs(out, unpack_out, n_microbatches,
+                                        n_replicas=r)
 
-    with mesh_ctx:
+    with _mesh_ctx(mesh):
         t0 = time.time()
         logits = jax.block_until_ready(run(*run_args))
         compile_s = time.time() - t0
@@ -170,8 +228,9 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
     ims_per_s = batch / max(run_s, 1e-9)
     bub = pp.bubble_fraction(n_microbatches, s)
     if verbose:
-        print(f"{arch}: {batch} imgs @{image_size}px through {s} stages "
-              f"(M={n_microbatches}): {ims_per_s:.1f} im/s "
+        rep = f" x{r} replicas" if r > 1 else ""
+        print(f"{arch}: {batch} imgs @{image_size}px through {s} stages"
+              f"{rep} (M={n_microbatches}): {ims_per_s:.1f} im/s "
               f"(compile {compile_s:.1f}s, bubble {bub:.2f}, "
               f"imbalance {plan['imbalance']:.2f})")
         x = total_bytes / max(placed_bytes, 1)
@@ -186,11 +245,310 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
     return {"logits": np.asarray(logits), "images_per_s": ims_per_s,
             "compile_s": compile_s, "run_s": run_s,
             "bubble_fraction": bub, "n_stages": s,
+            "n_replicas": r,
             "imbalance": plan["imbalance"],
             "placed": use_placed,
             "param_bytes_replicated_per_device": int(total_bytes),
             "param_bytes_placed_per_device": int(placed_bytes),
             "param_placement_ratio": placed_bytes / max(total_bytes, 1)}
+
+
+class CNNPipelineServer:
+    """Continuous-batching image server over the heterogeneous layer
+    pipeline — the steady-state deployment HPIPE's throughput numbers
+    describe (a pipeline that is always full, not one that fills and
+    drains per batch).
+
+    The wire protocol: ``submit()`` packs each request's images into
+    fixed-size microbatches (the last one zero-padded, the pad rows
+    tracked and dropped on output) and appends them to one queue;
+    ``run()`` ticks the pipeline (``pipeline.pipeline_step_hetero``)
+    once per queued microbatch — injecting request K+1's first
+    microbatch on the tick right after request K's last, so the
+    pipeline NEVER drains between requests and the S-1-tick fill
+    amortizes over the whole stream (``steady_bubble_fraction``), plus
+    S-1 trailing zero-wire ticks to flush the tail. The pipeline state
+    is threaded through a ``donate_argnums=(0,)`` jit, so the
+    steady-state loop reuses one state buffer; the NEXT tick's wire is
+    packed and ``jax.device_put`` right after the current tick is
+    dispatched — host->device transfer overlaps the step instead of
+    serializing in front of it.
+
+    Params: with one device per (replica, stage) grid cell the packed
+    ``(S, P)`` buffer places each stage's weights on its stage column
+    (replicated only across data); on a single host the ragged
+    ``PlacedParams.pack_ragged()`` rows are used instead — same
+    bit-exact packed execution, none of the even-width padding.
+
+    Bitwise contract: continuous serving is bit-identical to isolated
+    requests and to the sequential interpreter WITHIN a configuration
+    (slots never mix). The placed R>1 tick runs the gspmd-style
+    ``pipeline_step_hetero`` — like batch-mode gspmd it may drift
+    ~1e-10 from the 1-replica program under the 2-D GSPMD partition
+    (see ``pipeline_apply_gspmd_hetero``); the batch path's shard_map
+    routing is the one that guarantees cross-replica-count bitwise
+    equality.
+    """
+
+    def __init__(self, arch: str, *, mb_size: int = 2, n_stages: int = 4,
+                 n_replicas: int = 1, image_size: int = 64, seed: int = 0,
+                 placed=None, param_budget_frac=None,
+                 auto_split: bool = False, verbose: bool = False):
+        from repro.core import pipeline as pp
+        from repro.models import cnn
+        cfg, params, plan, n_replicas, _ = _plan_cnn_serving(
+            arch, n_stages=n_stages, n_replicas=n_replicas,
+            # the co-planner's fill-bubble term wants the microbatches
+            # one REQUEST contributes; continuous injection amortizes
+            # the fill across the stream, so score with a generous
+            # stream length rather than a single batch
+            n_microbatches=32,
+            param_budget_frac=param_budget_frac, auto_split=auto_split,
+            seed=seed)
+        self.cfg = cfg
+        self.n_stages = s = plan["n_stages"]
+        self.n_replicas = r = n_replicas
+        self.mb_size = mb_size
+        self.image_size = image_size
+        self.plan = plan
+        mb_shape = (mb_size, image_size, image_size, 3)
+        use_placed = (len(jax.devices()) >= s * r) if placed is None \
+            else placed
+        if use_placed:
+            from repro.launch.shardings import placed_stage_setup
+            stage_fns, pack_in, unpack_out, width, pparams, mesh, sps = \
+                placed_stage_setup(cfg, params, plan, mb_shape,
+                                   n_replicas=r)
+            self._params_arg = (jax.device_put(pparams.pack(),
+                                               sps["buffer"]),)
+            self.mesh = mesh
+        else:
+            # single host: ragged packed rows — bit-exact packed
+            # execution without the (S, P) buffer's even-width padding
+            stage_fns, pack_in, unpack_out, width, pparams = \
+                cnn.stage_programs(cfg, params, plan["stage_of"],
+                                   mb_shape, placed=True)
+            self._params_arg = (pparams.pack_ragged(),)
+            self.mesh = None
+        self.placed = use_placed
+        self.pparams = pparams
+        self.width = width
+        # jit both wire codecs once: the serving loop calls them every
+        # tick, and op-by-op dispatch would land in the timed region
+        self._unpack_out = jax.jit(unpack_out)
+        self._pack = jax.jit(jax.vmap(pack_in) if r > 1 else pack_in)
+        wire_shape = (r, mb_size, width) if r > 1 else (mb_size, width)
+        self._zero_wire = jnp.zeros(wire_shape, jnp.float32)
+        state_shape = (s, r, mb_size, width) if r > 1 \
+            else (s, mb_size, width)
+        self._state = jnp.zeros(state_shape, jnp.float32)
+
+        def tick(state, wire, pparams_arg):
+            return pp.pipeline_step_hetero(
+                stage_fns, state, wire, n_stages=s, stage_axis="stage",
+                mesh=self.mesh, stage_params=pparams_arg, n_replicas=r)
+
+        self._step = jax.jit(tick, donate_argnums=(0,))
+        # FIFO of (req_id, mb_index, n_valid, images) microbatch slots
+        # (deque: the steady-state loop front-pops once per tick)
+        self._queue = deque()
+        self._results = {}
+        self._pending = {}
+        self._next_req = 0
+        self.ticks = 0
+        self.injected_slots = 0
+        self.verbose = verbose
+
+    @property
+    def idle_slots(self) -> int:
+        """Pipeline slots that ran empty over the server's lifetime
+        (fill/flush ticks + unfilled replica slots) — derived from the
+        tick counters, so it always agrees with the reported bubble."""
+        return self.ticks * self.n_replicas - self.injected_slots
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, images) -> int:
+        """Queue one request (B, H, W, 3). Returns a request id whose
+        logits ``results()`` yields after ``run()``."""
+        images = np.asarray(images, np.float32)
+        b = images.shape[0]
+        if b == 0:
+            raise ValueError("empty request (batch 0)")
+        if images.shape[1:] != (self.image_size, self.image_size, 3):
+            raise ValueError(f"request shape {images.shape[1:]} != "
+                             f"({self.image_size}, {self.image_size}, 3)")
+        req = self._next_req
+        self._next_req += 1
+        n_mb = -(-b // self.mb_size)
+        self._pending[req] = n_mb
+        self._results[req] = [None] * n_mb
+        for i in range(n_mb):
+            chunk = images[i * self.mb_size:(i + 1) * self.mb_size]
+            n_valid = chunk.shape[0]
+            if n_valid < self.mb_size:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((self.mb_size - n_valid,)
+                                     + chunk.shape[1:], np.float32)])
+            self._queue.append((req, i, n_valid, chunk))
+        return req
+
+    # -- the serving loop --------------------------------------------------
+
+    def _stage_next(self):
+        """Pop the next tick's worth of slots (R microbatches) and pack
+        + device_put their wire — called right after the CURRENT tick
+        is dispatched, so the H2D transfer overlaps the step."""
+        if not self._queue:
+            return None
+        r = self.n_replicas
+        slots = [self._queue.popleft() if self._queue else None
+                 for _ in range(r)] if r > 1 else [self._queue.popleft()]
+        imgs = np.stack([s[3] if s is not None else
+                         np.zeros((self.mb_size, self.image_size,
+                                   self.image_size, 3), np.float32)
+                         for s in slots])
+        wire = self._pack(jnp.asarray(imgs) if r > 1
+                          else jnp.asarray(imgs[0]))
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            spec = P("data") if r > 1 else P()
+            wire = jax.device_put(wire, NamedSharding(self.mesh, spec))
+        return slots, wire
+
+    def _collect(self, slots, out_wire):
+        """Record one tick's emitted microbatch(es). Blocks on the
+        device value — run() defers this one tick, so the NEXT tick is
+        already dispatched and the D2H readback overlaps its compute."""
+        if slots is None:
+            return
+        r = self.n_replicas
+        for k, slot in enumerate(slots):
+            if slot is None:
+                continue
+            req, i, n_valid, _ = slot
+            logits = np.asarray(self._unpack_out(
+                out_wire[k] if r > 1 else out_wire))[:n_valid]
+            self._results[req][i] = logits
+            self._pending[req] -= 1
+
+    def run(self) -> dict:
+        """Drain the queue: one pipeline tick per queued microbatch
+        (continuous injection — no drain between requests) plus S-1
+        flush ticks. Returns throughput/bubble metrics for the run."""
+        t0 = time.time()
+        n_imgs = sum(s[2] for s in self._queue)
+        ticks_before = self.ticks
+        injected_before = self.injected_slots
+        inflight = deque()
+        emitted = None                        # last tick's (slots, out)
+        staged = self._stage_next()
+        with _mesh_ctx(self.mesh):
+            while staged is not None or any(s is not None
+                                            for s in inflight):
+                slots, wire = staged if staged is not None \
+                    else (None, self._zero_wire)
+                self._state, out = self._step(self._state, wire,
+                                              *self._params_arg)
+                self.ticks += 1
+                if slots is not None:
+                    self.injected_slots += sum(
+                        1 for s in slots if s is not None)
+                inflight.append(slots)
+                staged = self._stage_next()   # H2D overlaps the step
+                # collect the PREVIOUS tick's output only now, after
+                # this tick is dispatched: its D2H readback overlaps
+                # the in-flight compute instead of serializing it
+                if emitted is not None:
+                    self._collect(*emitted)
+                emitted = (inflight.popleft(), out) \
+                    if len(inflight) >= self.n_stages else None
+            if emitted is not None:
+                self._collect(*emitted)
+        elapsed = time.time() - t0
+        ticks = self.ticks - ticks_before
+        injected = self.injected_slots - injected_before
+        # measured SCHEDULE bubble: the fraction of pipeline slots this
+        # run left empty (fill + drain + any idle replica slots). For
+        # K*M microbatches on one replica this is exactly
+        # steady_bubble_fraction(K*M, S); it is tick-count-derived, so
+        # deterministic (benchmarks gate on it, unlike wall-clock)
+        slot_ticks = ticks * self.n_replicas
+        bubble = 1.0 - injected / max(slot_ticks, 1)
+        metrics = {
+            "images": int(n_imgs),
+            "ticks": int(ticks),
+            "injected_microbatches": int(injected),
+            "images_per_s": n_imgs / max(elapsed, 1e-9),
+            "elapsed_s": elapsed,
+            "steady_bubble": bubble,
+            "fill_bubble_single_batch": None,
+            "n_stages": self.n_stages,
+            "n_replicas": self.n_replicas,
+        }
+        if self.verbose:
+            print(f"{self.cfg.name}: served {n_imgs} imgs in {ticks} "
+                  f"ticks ({metrics['images_per_s']:.1f} im/s, steady "
+                  f"bubble {bubble:.3f})")
+        return metrics
+
+    def results(self, req: int) -> np.ndarray:
+        """(B, 1000) logits of a completed request. One-shot: the
+        entry is evicted on delivery, so a long-running server's
+        memory stays bounded by in-flight requests, not its history
+        (a second call raises the unknown-request error)."""
+        if req not in self._pending:
+            raise KeyError(f"unknown request id {req}")
+        if self._pending[req] != 0:
+            raise ValueError(f"request {req} incomplete "
+                             f"({self._pending[req]} microbatches "
+                             "outstanding); call run() first")
+        del self._pending[req]
+        return np.concatenate(self._results.pop(req), axis=0)
+
+
+def serve_cnn_continuous(arch: str, *, n_requests: int = 4,
+                         batch: int = 8, mb_size: int = 2,
+                         n_stages: int = 4, n_replicas: int = 1,
+                         image_size: int = 64, seed: int = 0,
+                         placed=None, param_budget_frac=None,
+                         auto_split: bool = False,
+                         verbose: bool = True) -> dict:
+    """Continuous-batching serving run: K back-to-back requests through
+    one CNNPipelineServer (the pipeline never drains between them),
+    returning the per-request logits plus throughput and the
+    steady-state bubble — which beats the single-batch fill bubble
+    (S-1)/(M+S-1) for K > 1 because one fill amortizes over the whole
+    stream."""
+    from repro.core import pipeline as pp
+    srv = CNNPipelineServer(arch, mb_size=mb_size, n_stages=n_stages,
+                            n_replicas=n_replicas, image_size=image_size,
+                            seed=seed, placed=placed,
+                            param_budget_frac=param_budget_frac,
+                            auto_split=auto_split, verbose=False)
+    # warm the jitted tick before the timed stream (compile would
+    # otherwise swamp the measured im/s)
+    warm = srv.submit(np.zeros((mb_size, image_size, image_size, 3),
+                               np.float32))
+    srv.run()
+    srv.results(warm)
+    key = jax.random.PRNGKey(seed + 1)
+    reqs = []
+    for _ in range(n_requests):
+        key, sub = jax.random.split(key)
+        imgs = jax.random.normal(sub, (batch, image_size, image_size, 3))
+        reqs.append(srv.submit(np.asarray(imgs)))
+    metrics = srv.run()
+    m_per_req = -(-batch // mb_size)
+    metrics["fill_bubble_single_batch"] = pp.bubble_fraction(
+        m_per_req, srv.n_stages)
+    metrics["logits"] = [srv.results(rq) for rq in reqs]
+    if verbose:
+        print(f"{arch}: continuous {n_requests} x {batch} imgs: "
+              f"{metrics['images_per_s']:.1f} im/s, steady bubble "
+              f"{metrics['steady_bubble']:.3f} vs single-batch fill "
+              f"{metrics['fill_bubble_single_batch']:.3f}")
+    return metrics
 
 
 def main(argv=None):
@@ -212,12 +570,38 @@ def main(argv=None):
     ap.add_argument("--param-budget-frac", type=float, default=None,
                     help="bound any stage's weight bytes to this "
                          "fraction of the model (memory-aware planner)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replicate the whole pipeline across a data "
+                         "mesh axis (stage x data 2-D scale-out; needs "
+                         "stages*replicas devices for placement)")
+    ap.add_argument("--auto-split", action="store_true",
+                    help="let the (stages, replicas) co-planner pick "
+                         "the split for the host's device count")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching serving loop: requests "
+                         "stream through a never-draining pipeline")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="continuous mode: back-to-back request count")
+    ap.add_argument("--mb-size", type=int, default=2,
+                    help="continuous mode: images per microbatch")
     args = ap.parse_args(argv)
     if get_config(args.arch).family == "cnn":
-        serve_cnn(args.arch, batch=args.batch,
-                  n_microbatches=args.microbatches, n_stages=args.stages,
-                  image_size=args.image_size, placed=args.placed,
-                  param_budget_frac=args.param_budget_frac)
+        if args.continuous:
+            serve_cnn_continuous(
+                args.arch, n_requests=args.requests, batch=args.batch,
+                mb_size=args.mb_size, n_stages=args.stages,
+                n_replicas=args.replicas, image_size=args.image_size,
+                placed=args.placed,
+                param_budget_frac=args.param_budget_frac,
+                auto_split=args.auto_split)
+        else:
+            serve_cnn(args.arch, batch=args.batch,
+                      n_microbatches=args.microbatches,
+                      n_stages=args.stages, image_size=args.image_size,
+                      placed=args.placed,
+                      param_budget_frac=args.param_budget_frac,
+                      n_replicas=args.replicas,
+                      auto_split=args.auto_split)
     else:
         serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
               gen_tokens=args.gen, use_reduced=args.reduced)

@@ -209,7 +209,11 @@ def stage_param_shardings(graph, plan, mesh: Mesh, *, params=None,
 
     graph: the (fused) LayerGraph the plan partitions. plan: the dict
     from ``planner.plan_cnn_pipeline`` (or any dict with "stage_of").
-    mesh: must carry ``stage_axis`` with one device slot per stage.
+    mesh: must carry ``stage_axis`` with one device slot per stage —
+    extra axes (the ``data`` axis of a stage x data 2-D pipeline) are
+    fine: the ``P(stage_axis)`` spec replicates the buffer across them,
+    which is exactly the 2-D contract (each replica's stage column
+    holds its own stage's weights; per-device bytes unchanged).
     Returns::
 
         buffer      NamedSharding(mesh, P(stage_axis)) — device_put the
@@ -249,20 +253,24 @@ def stage_param_shardings(graph, plan, mesh: Mesh, *, params=None,
 
 
 def placed_stage_setup(cfg, params, plan, mb_shape, *,
-                       stage_axis: str = "stage"):
+                       stage_axis: str = "stage", n_replicas: int = 1,
+                       data_axis: str = "data"):
     """Placed-pipeline scaffolding shared by serve/dryrun: compile the
-    placed stage programs, build the one-device-per-stage mesh and the
-    buffer sharding that pins each stage's packed params to its device.
+    placed stage programs, build the one-device-per-stage mesh (a 2-D
+    ``(data, stage)`` grid when ``n_replicas`` > 1 — each data row is a
+    full pipeline) and the buffer sharding that pins each stage's
+    packed params to its stage column (replicated only across data).
     Returns ``(stage_fns, pack_in, unpack_out, width, pparams, mesh,
     sps)`` where sps is :func:`stage_param_shardings`'s dict (with the
     byte accounting, since params are given)."""
-    import jax as _jax
     from repro.core.fusion import fused_graph_for
+    from repro.launch.mesh import make_stage_mesh
     from repro.models import cnn
     s = plan["n_stages"]
     stage_fns, pack_in, unpack_out, width, pparams = cnn.stage_programs(
         cfg, params, plan["stage_of"], mb_shape, placed=True)
-    mesh = _jax.make_mesh((s,), (stage_axis,))
+    mesh = make_stage_mesh(s, n_replicas, stage_axis=stage_axis,
+                           data_axis=data_axis)
     sps = stage_param_shardings(fused_graph_for(cfg.name), plan, mesh,
                                 params=params, stage_axis=stage_axis)
     return stage_fns, pack_in, unpack_out, width, pparams, mesh, sps

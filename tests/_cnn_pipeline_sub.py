@@ -1,8 +1,9 @@
 """Subprocess body for the multi-device CNN-pipeline tests.
 
-Run as:  python _cnn_pipeline_sub.py <arch> [placed]
+Run as:  python _cnn_pipeline_sub.py <arch> [placed|stagedata]
 with XLA_FLAGS=--xla_force_host_platform_device_count=N set by the
-caller (N=4 for the replicated checks, N=8 for the placed checks).
+caller (N=4 for the replicated checks, N=8 for the placed and
+stage x data checks).
 
 Default mode checks BOTH sparse and dense params: pipelined logits
 through ``pipeline_apply_hetero`` (4-stage mesh) must exactly match
@@ -20,6 +21,17 @@ the sequential graph interpreter.
   acceptance bar);
 - placed pipelined logits == sequential interpreter BITWISE on the
   shard_map path (and the gspmd path for resnet50).
+
+``stagedata`` mode checks the 2-D stage x data pipeline on an
+8-device host = 4 stages x 2 replicas:
+
+- replicated pipelined logits (R=2, placed, shard_map executor) are
+  BITWISE identical to the single-replica placed path at the same
+  microbatch size;
+- the placed buffer lands per stage COLUMN: all 2 data replicas of
+  stage k hold exactly stage k's packed row (params replicated only
+  across the data axis — per-device bytes unchanged from 1-replica
+  placement).
 
 Prints SUBPROCESS_OK on success.
 """
@@ -149,10 +161,76 @@ def check_placed(arch: str, sparse: bool, *, n_stages=8, img=32, batch=4,
             assert exact_g, f"{arch} {tag}: placed gspmd != sequential"
 
 
+def check_stage_data(arch: str, sparse: bool, *, n_stages=4, n_replicas=2,
+                     img=32, batch=8, mb=2):
+    """2-D stage x data pipeline (shard_map executor) vs the
+    single-replica placed path, bitwise, at the same microbatch size
+    (the acceptance bar for PR 5's replication)."""
+    from repro.launch.shardings import placed_stage_setup
+    cfg = _cfg(arch, sparse)
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+    plan = planner.plan_cnn_pipeline(cfg, params, n_stages)
+    s = plan["n_stages"]
+    assert s == n_stages, (s, n_stages)
+    r = n_replicas
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (batch, img, img, 3))
+    tag = "sparse" if sparse else "dense"
+
+    # -- single-replica placed reference: M = batch/mb microbatches --
+    x1 = pp.microbatch(imgs, batch // mb)
+    fns1, pin1, pout1, _, pp1, mesh1, sps1 = placed_stage_setup(
+        cfg, params, plan, x1.shape[1:])
+    buf1 = jax.device_put(pp1.pack(), sps1["buffer"])
+    xw1 = jax.vmap(pin1)(x1)
+    ctx1 = jax.set_mesh(mesh1) if hasattr(jax, "set_mesh") else mesh1
+    with ctx1:
+        o1 = jax.jit(lambda xw, pb: pp.pipeline_apply_hetero(
+            fns1, xw, mesh=mesh1, stage_axis="stage", n_stages=s,
+            stage_params=pb))(xw1, buf1)
+    ref = np.concatenate([np.asarray(pout1(o1[i]))
+                          for i in range(batch // mb)], 0)
+
+    # -- R=2 placed: same mb, M/R microbatches per replica --
+    x2 = pp.microbatch(imgs, batch // mb // r, n_replicas=r)
+    assert x2.shape[2:] == x1.shape[1:], (x2.shape, x1.shape)
+    fns2, pin2, pout2, _, pp2, mesh2, sps2 = placed_stage_setup(
+        cfg, params, plan, x2.shape[2:], n_replicas=r)
+    assert tuple(mesh2.shape.values()) == (r, s), dict(mesh2.shape)
+
+    # params replicate ONLY across data: every device in stage k's
+    # column holds exactly stage k's packed row, so per-device bytes
+    # match the 1-replica placed mode
+    buf2 = jax.device_put(pp2.pack(), sps2["buffer"])
+    host_rows = np.asarray(pp2.pack())
+    shards = list(buf2.addressable_shards)
+    assert len(shards) == r * s, len(shards)
+    for sh in shards:
+        k = sh.index[0].start or 0
+        row = np.asarray(sh.data)
+        assert row.shape == (1, pp2.width), row.shape
+        np.testing.assert_array_equal(row[0], host_rows[k])
+
+    xw2 = jax.vmap(jax.vmap(pin2))(x2)
+    ctx2 = jax.set_mesh(mesh2) if hasattr(jax, "set_mesh") else mesh2
+    with ctx2:
+        o2 = jax.jit(lambda xw, pb: pp.pipeline_apply_hetero(
+            fns2, xw, mesh=mesh2, stage_axis="stage", n_stages=s,
+            stage_params=pb, n_replicas=r))(xw2, buf2)
+    got = np.concatenate([np.asarray(pout2(o2[rr][i])) for rr in range(r)
+                          for i in range(batch // mb // r)], 0)
+    exact = bool((got == ref).all())
+    print(f"{arch} {tag} stage x data {s}x{r}: exact={exact}", flush=True)
+    assert exact, f"{arch} {tag}: R={r} replicated != single-replica placed"
+
+
 if __name__ == "__main__":
     arch = sys.argv[1]
     mode = sys.argv[2] if len(sys.argv) > 2 else "replicated"
-    if mode == "placed":
+    if mode == "stagedata":
+        # the paper's sparse net plus the dense MobileNets, each on a
+        # 4-stage x 2-replica grid of the 8 host devices
+        check_stage_data(arch, sparse=(arch == "resnet50"))
+    elif mode == "placed":
         if arch == "resnet50":
             # the paper's sparse net, under the 1/4 memory budget, on
             # both executor paths — the acceptance configuration

@@ -98,6 +98,33 @@ def test_microbatch_contract():
     assert ok.shape == (3, 2, 2)
 
 
+def test_microbatch_replication_contract():
+    """Satellite fix: a batch that divides the microbatch count but not
+    n_replicas * n_microbatches used to fail later with an error naming
+    only the microbatch divisor; the contract now names BOTH knobs (or
+    pads), and the replicated form carries a leading replica dim."""
+    x = jnp.arange(12.0).reshape(6, 2)
+    with pytest.raises(ValueError) as e:
+        pp.microbatch(x, 2, n_replicas=2)       # 6 % 2 == 0, 6 % 4 != 0
+    assert "n_replicas 2" in str(e.value)
+    assert "n_microbatches 2" in str(e.value)
+    with pytest.raises(ValueError, match=">= 1"):
+        pp.microbatch(x, 3, n_replicas=0)
+    padded = pp.microbatch(x, 2, n_replicas=2, pad=True)
+    assert padded.shape == (2, 2, 2, 2)         # (R, M, mb, ...)
+    flat = np.asarray(padded.reshape(8, 2))
+    np.testing.assert_array_equal(flat[:6], np.asarray(x))
+    assert float(np.abs(flat[6:]).sum()) == 0.0
+    ok = pp.microbatch(x, 3, n_replicas=1)      # R=1: legacy shape
+    assert ok.shape == (3, 2, 2)
+    ok2 = pp.microbatch(jnp.arange(16.0).reshape(8, 2), 2, n_replicas=2)
+    assert ok2.shape == (2, 2, 2, 2)
+    # replica r owns the contiguous batch slice r*B/R:(r+1)*B/R
+    np.testing.assert_array_equal(
+        np.asarray(ok2[1].reshape(4, 2)),
+        np.arange(16.0).reshape(8, 2)[4:])
+
+
 # -- pipelined == sequential: GSPMD path (in-process, single device) --------
 
 @pytest.mark.parametrize("arch", CNN_ARCHS)
@@ -151,6 +178,19 @@ def test_shardmap_pipeline_matches_sequential(arch):
 @pytest.mark.parametrize("arch", CNN_ARCHS)
 def test_placed_pipeline_8dev(arch):
     _run_sub(arch, mode="placed", devices=8)
+
+
+# -- stage x data 2-D replication (subprocess, 8 devices = 4 x 2) -----------
+#
+# Replicated pipelined logits (R=2, placed, shard_map executor) must be
+# BITWISE identical to the single-replica placed path at the same
+# microbatch size, and every device in stage k's column must hold
+# exactly stage k's packed param row (weights replicate only across
+# the data axis). See _cnn_pipeline_sub.check_stage_data.
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_stage_data_pipeline_8dev(arch):
+    _run_sub(arch, mode="stagedata", devices=8)
 
 
 @pytest.mark.skipif(
@@ -219,6 +259,145 @@ def test_param_format_roundtrip_bitexact():
     assert out["fc"]["w"].d_in == 24
     with pytest.raises(ValueError, match="width"):
         fmt.pack(tree, nb - 1)
+
+
+def test_placed_params_ragged_accounting():
+    """Satellite: PlacedParams tracks per-stage (ragged) widths next to
+    the even (S, P) buffer, so unbalanced nets can stop paying the
+    padding on paths that carry rows individually — and the reclaimed
+    bytes are visible."""
+    trees = [
+        {"a": {"w": jnp.ones((4, 8), jnp.bfloat16),
+               "b": jnp.zeros((8,), jnp.float32)}},       # 64+32 = 96 B
+        {"c": {"w": jnp.ones((32, 32), jnp.bfloat16)}},   # 2048 B
+    ]
+    fmts = [pp.ParamFormat.for_tree(t) for t in trees]
+    width = max(f.nbytes for f in fmts)
+    pparams = pp.PlacedParams(formats=tuple(fmts), trees=tuple(trees),
+                              width=width)
+    assert pparams.stage_widths == (96, 2048)
+    assert pparams.padded_buffer_bytes == 2 * 2048
+    assert pparams.padding_bytes == 2 * 2048 - (96 + 2048)
+    buf = np.asarray(pparams.pack())
+    rows = [np.asarray(r) for r in pparams.pack_ragged()]
+    assert [r.shape[0] for r in rows] == [96, 2048]
+    for s, row in enumerate(rows):
+        # ragged row s == the padded row's live prefix
+        np.testing.assert_array_equal(row, buf[s, :row.shape[0]])
+        assert not buf[s, row.shape[0]:].any()
+        # unpack round-trips bit-exactly from the ragged row too
+        out = fmts[s].unpack(jnp.asarray(row))
+        for a, b in zip(jax.tree_util.tree_leaves(out),
+                        jax.tree_util.tree_leaves(trees[s])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ragged_stage_params_executor_contract():
+    """Ragged rows run the single-host packed path; placement on a
+    stage mesh still demands the even buffer (unequal widths cannot
+    shard), and row-count mismatches fail loudly."""
+    fns = [lambda pb, w: w + 1.0]
+    xw = jnp.zeros((2, 1, 4))
+    rows = (jnp.zeros((8,), jnp.uint8),)
+    # mesh-less ragged: allowed (packed, not placed)
+    out = pp.pipeline_apply_gspmd_hetero(fns, xw, n_stages=1,
+                                         stage_params=rows)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(xw + 1.0))
+    mesh = jax.make_mesh((1,), ("stage",))
+    with pytest.raises(ValueError, match="unequal widths"):
+        pp.pipeline_apply_gspmd_hetero(fns, xw, n_stages=1, mesh=mesh,
+                                       stage_axis="stage",
+                                       stage_params=rows)
+    with pytest.raises(ValueError, match="ragged param rows"):
+        pp.pipeline_apply_gspmd_hetero(fns, xw, n_stages=1,
+                                       stage_params=(rows[0], rows[0]))
+    with pytest.raises(ValueError, match="ragged|unequal widths"):
+        pp.pipeline_apply_hetero(fns, xw, mesh=mesh, stage_axis="stage",
+                                 n_stages=1, stage_params=rows)
+
+
+# -- the (stages, replicas) co-planner ---------------------------------------
+
+def test_pipeline_throughput_rel_tradeoff():
+    """The ISSUE's co-planner rule: replicating a shallow pipeline Rx
+    beats a deeper cut exactly when the deep cut's imbalance exceeds
+    the replication overhead (bottleneck + fill-bubble ratios)."""
+    m = 8
+    # balanced 4-stage halves vs badly imbalanced 8-stage cut of the
+    # same total work: 2 x 4-stage wins
+    thr_4x2 = planner.pipeline_throughput_rel([25, 25, 25, 25], 2, m)
+    thr_8x1 = planner.pipeline_throughput_rel([40, 10, 10, 10, 10, 10,
+                                               5, 15], 1, m)
+    assert thr_4x2 > thr_8x1
+    # at EQUAL balance the deep cut still loses the fill bubble (its
+    # bottleneck halves, but so does the replica count's multiplier):
+    # under this model deep cuts only win back through the per-stage
+    # weight budget (placement), which the 2-D planner passes through
+    thr_8x1_bal = planner.pipeline_throughput_rel([12.5] * 8, 1, m)
+    assert thr_4x2 > thr_8x1_bal
+    assert thr_8x1_bal > thr_8x1          # balance still helps depth 8
+    # more microbatches shrink the deep cut's fill penalty
+    assert planner.pipeline_throughput_rel([12.5] * 8, 1, 64) > \
+        planner.pipeline_throughput_rel([12.5] * 8, 1, 4)
+
+
+@pytest.mark.parametrize("arch", ["resnet50", "mobilenet_v1"])
+def test_plan_cnn_pipeline_2d(arch):
+    """plan_cnn_pipeline_2d enumerates the divisor splits of the device
+    count and returns the throughput argmax (with the per-stage plan
+    for the winning depth)."""
+    cfg = _cfg(arch, sparse=(arch == "resnet50"))
+    params = cnn.init_cnn(cfg, KEY)
+    pl = planner.plan_cnn_pipeline_2d(cfg, params, 8, n_microbatches=8)
+    assert pl["n_stages"] * pl["n_replicas"] == 8
+    assert pl["n_devices_used"] == 8
+    splits = {(c["n_stages"], c["n_replicas"]) for c in pl["candidates"]}
+    assert splits == {(1, 8), (2, 4), (4, 2), (8, 1)}
+    best = max(pl["candidates"], key=lambda c: c["throughput_rel"])
+    assert pl["n_stages"] == best["n_stages"]
+    assert pl["n_replicas"] == best["n_replicas"]
+    assert pl["throughput_rel"] == best["throughput_rel"]
+    assert pl["plan"]["n_stages"] == pl["n_stages"]
+    # every candidate's score matches the formula re-applied to its plan
+    for c in pl["candidates"]:
+        assert c["throughput_rel"] == pytest.approx(
+            c["n_replicas"] * (8 / (8 + c["n_stages"] - 1))
+            / c["bottleneck_cycles"])
+
+
+def test_plan_cnn_pipeline_2d_clamped_depth_reports_idle_devices():
+    """A divisor depth beyond the graph's node count clamps (one node
+    per stage); the candidate keeps the clamped depth and
+    n_devices_used records the idled remainder instead of silently
+    breaking the S*R == devices invariant."""
+    from repro.core.fusion import fused_graph_for
+    cfg = _cfg("mobilenet_v1", sparse=False)
+    params = cnn.init_cnn(cfg, KEY)
+    n_nodes = len(fused_graph_for("mobilenet_v1").nodes)
+    pl = planner.plan_cnn_pipeline_2d(cfg, params, 2 * n_nodes + 2)
+    for c in pl["candidates"]:
+        assert c["n_stages"] <= n_nodes
+        assert c["n_devices_used"] == c["n_stages"] * c["n_replicas"]
+        assert c["n_devices_used"] <= 2 * n_nodes + 2
+    assert pl["n_devices_used"] == pl["n_stages"] * pl["n_replicas"]
+
+
+def test_plan_cnn_pipeline_2d_budget_skips_infeasible():
+    """Budget-infeasible depths are skipped, not fatal; an impossible
+    budget raises naming the tried splits."""
+    from repro.core.costmodel import pytree_param_bytes
+    cfg = _cfg("resnet50", sparse=True)
+    params = cnn.init_cnn(cfg, KEY)
+    total = pytree_param_bytes(params)
+    pl = planner.plan_cnn_pipeline_2d(cfg, params, 8,
+                                      max_stage_param_bytes=total // 4)
+    # S=1 (whole model on one stage) cannot fit 1/4 of the model
+    assert all(c["n_stages"] > 1 for c in pl["candidates"])
+    assert all(c["placed_bytes_per_device"] <= total // 4
+               for c in pl["candidates"])
+    with pytest.raises(ValueError, match="no .stages, replicas. split"):
+        planner.plan_cnn_pipeline_2d(cfg, params, 2,
+                                     max_stage_param_bytes=1)
 
 
 def test_gspmd_placement_requires_mesh():
