@@ -61,6 +61,11 @@ GATE = {
     # tick-count-derived — deterministic, tight
     "serving_throughput_imgs_per_s": ("higher", 0.90),
     "serving_steady_bubble": ("lower", 0.05),
+    # request-latency tail: wall-clock (queueing + compute) on shared
+    # runners — direction-only, very loose (a 2x p99 blowup still
+    # fails; scheduler jitter does not)
+    "serving_latency_p50_s": ("lower", 1.00),
+    "serving_latency_p99_s": ("lower", 1.00),
 }
 
 
@@ -94,6 +99,8 @@ def _headline(modules: dict) -> dict:
         out["serving_throughput_imgs_per_s"] = \
             srv["serving_throughput_imgs_per_s"]
         out["serving_steady_bubble"] = srv["serving_steady_bubble"]
+        out["serving_latency_p50_s"] = srv.get("serving_latency_p50_s")
+        out["serving_latency_p99_s"] = srv.get("serving_latency_p99_s")
     return out
 
 

@@ -13,6 +13,11 @@ Two headline numbers feed the CI gate:
   gated. The run asserts it beats the single-batch fill bubble
   (S-1)/(M + S-1) — the whole point of continuous injection.
 
+Plus the request-latency tail (``serving_latency_p50_s`` /
+``serving_latency_p99_s``, submit -> last microbatch collected): the
+metric the serving tier's deadline routing is judged by. Wall-clock on
+shared runners -> loose, regression-direction-only gate.
+
 Runs sparse ResNet-50 (the paper's headline net) on whatever devices
 the host has; single-device smoke uses the ragged packed-params path.
 """
@@ -46,6 +51,8 @@ def main(smoke: bool = False, out: str = None):
         "serving_throughput_imgs_per_s": m["images_per_s"],
         "serving_steady_bubble": m["steady_bubble"],
         "fill_bubble_single_batch": m["fill_bubble_single_batch"],
+        "serving_latency_p50_s": m["latency_p50_s"],
+        "serving_latency_p99_s": m["latency_p99_s"],
     }
     assert m["steady_bubble"] < m["fill_bubble_single_batch"], (
         "continuous injection must amortize the fill bubble across "

@@ -426,3 +426,48 @@ def plan_cnn_pipeline_2d(cfg, params, n_devices: int, *,
         "candidates": [{k: v for k, v in c.items() if k != "plan"}
                        for c in uniq],
     }
+
+
+def replan_cnn_pipeline_2d(cfg, params, n_devices: int, *, prev=None,
+                           n_microbatches: int = 8, graph=None,
+                           max_stage_param_bytes: Optional[int] = None
+                           ) -> dict:
+    """Degradation re-plan: pick a (stages, replicas) split for a
+    REDUCED device pool, preferring stability over optimality.
+
+    When the previous plan's stage cut still fits — its depth divides
+    ``n_devices`` and its per-stage bytes respect the budget — the cut
+    is REUSED (``reused: True``) with ``n_replicas = n_devices //
+    n_stages``: surviving replica workers keep their compiled pipeline
+    programs, and respawned ones can re-place the existing packed
+    ``(S, P)`` param buffer with :func:`repro.runtime.fault.remesh`
+    instead of repacking from the host. Only when the old depth is
+    infeasible does this fall back to the full
+    :func:`plan_cnn_pipeline_2d` co-planner (``reused: False`` — every
+    pipeline recompiles and the buffer is repacked at the new depth).
+    Either way the stage cut never changes the NUMERICS: pipelined
+    execution is bitwise equal to sequential at any depth, so a
+    degraded tier still replays requests bit-exactly."""
+    if prev is not None:
+        s = prev["n_stages"]
+        bytes_ok = (max_stage_param_bytes is None or
+                    max(prev["stage_param_bytes"]) <=
+                    max_stage_param_bytes)
+        if n_devices >= s and n_devices % s == 0 and bytes_ok:
+            r = n_devices // s
+            return {
+                "n_stages": s,
+                "n_replicas": r,
+                "n_devices": n_devices,
+                "n_devices_used": s * r,
+                "n_microbatches": n_microbatches,
+                "throughput_rel": pipeline_throughput_rel(
+                    prev["stage_cost"], r, n_microbatches),
+                "plan": prev,
+                "reused": True,
+            }
+    out = plan_cnn_pipeline_2d(
+        cfg, params, n_devices, n_microbatches=n_microbatches,
+        graph=graph, max_stage_param_bytes=max_stage_param_bytes)
+    out["reused"] = False
+    return out

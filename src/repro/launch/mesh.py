@@ -31,17 +31,32 @@ def mesh_context(mesh):
 
 
 def make_stage_mesh(n_stages: int, n_replicas: int = 1, *,
-                    stage_axis: str = "stage", data_axis: str = "data"):
+                    stage_axis: str = "stage", data_axis: str = "data",
+                    devices=None):
     """Mesh for the heterogeneous CNN layer pipeline: one device slot
     per stage, optionally replicated along a leading data axis (the
     stage x data 2-D pipeline — each data row is a full pipeline, the
     batch shards across rows, stage weights replicate only across
     rows). With ``n_replicas == 1`` the mesh stays 1-D so existing
-    single-pipeline specs/paths are unchanged."""
-    if n_replicas > 1:
-        return jax.make_mesh((n_replicas, n_stages),
-                             (data_axis, stage_axis))
-    return jax.make_mesh((n_stages,), (stage_axis,))
+    single-pipeline specs/paths are unchanged.
+
+    ``devices``: explicit device list for the mesh (the serving tier
+    carves one disjoint S-device slice per replica worker out of the
+    host pool, so two workers never share a stage slot). Must hold
+    exactly ``n_stages * n_replicas`` devices; default: the first
+    ``n_stages * n_replicas`` of ``jax.devices()``."""
+    import numpy as np
+    from jax.sharding import Mesh
+    shape = (n_replicas, n_stages) if n_replicas > 1 else (n_stages,)
+    axes = (data_axis, stage_axis) if n_replicas > 1 else (stage_axis,)
+    if devices is not None:
+        need = n_stages * n_replicas
+        if len(devices) != need:
+            raise ValueError(f"stage mesh needs exactly {need} devices "
+                             f"({n_stages} stages x {n_replicas} "
+                             f"replicas), got {len(devices)}")
+        return Mesh(np.asarray(devices).reshape(shape), axes)
+    return jax.make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants for the roofline analysis

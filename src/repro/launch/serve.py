@@ -253,6 +253,11 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
             "param_placement_ratio": placed_bytes / max(total_bytes, 1)}
 
 
+# marks a microbatch slot owned by the serving tier rather than a
+# local submit(): its logits go to ``on_result`` instead of results()
+_EXTERNAL = object()
+
+
 class CNNPipelineServer:
     """Continuous-batching image server over the heterogeneous layer
     pipeline — the steady-state deployment HPIPE's throughput numbers
@@ -293,34 +298,52 @@ class CNNPipelineServer:
     def __init__(self, arch: str, *, mb_size: int = 2, n_stages: int = 4,
                  n_replicas: int = 1, image_size: int = 64, seed: int = 0,
                  placed=None, param_budget_frac=None,
-                 auto_split: bool = False, verbose: bool = False):
+                 auto_split: bool = False, verbose: bool = False,
+                 devices=None, injector=None, cfg=None, params=None,
+                 plan=None, param_buffer=None):
         from repro.core import pipeline as pp
         from repro.models import cnn
-        cfg, params, plan, n_replicas, _ = _plan_cnn_serving(
-            arch, n_stages=n_stages, n_replicas=n_replicas,
-            # the co-planner's fill-bubble term wants the microbatches
-            # one REQUEST contributes; continuous injection amortizes
-            # the fill across the stream, so score with a generous
-            # stream length rather than a single batch
-            n_microbatches=32,
-            param_budget_frac=param_budget_frac, auto_split=auto_split,
-            seed=seed)
+        if plan is not None:
+            # the serving tier plans ONCE and hands every replica the
+            # same (cfg, params, plan): identical weights + identical
+            # stage cuts are what make failure replay bitwise-equal
+            if cfg is None or params is None:
+                raise ValueError("plan= requires cfg= and params=")
+        else:
+            cfg, params, plan, n_replicas, _ = _plan_cnn_serving(
+                arch, n_stages=n_stages, n_replicas=n_replicas,
+                # the co-planner's fill-bubble term wants the
+                # microbatches one REQUEST contributes; continuous
+                # injection amortizes the fill across the stream, so
+                # score with a generous stream length, not one batch
+                n_microbatches=32,
+                param_budget_frac=param_budget_frac,
+                auto_split=auto_split, seed=seed)
         self.cfg = cfg
         self.n_stages = s = plan["n_stages"]
         self.n_replicas = r = n_replicas
         self.mb_size = mb_size
         self.image_size = image_size
         self.plan = plan
+        self.devices = list(devices) if devices is not None else None
+        n_dev = len(self.devices) if self.devices is not None \
+            else len(jax.devices())
         mb_shape = (mb_size, image_size, image_size, 3)
-        use_placed = (len(jax.devices()) >= s * r) if placed is None \
-            else placed
+        use_placed = (n_dev >= s * r) if placed is None else placed
+        self.param_buffer = None
         if use_placed:
             from repro.launch.shardings import placed_stage_setup
             stage_fns, pack_in, unpack_out, width, pparams, mesh, sps = \
                 placed_stage_setup(cfg, params, plan, mb_shape,
-                                   n_replicas=r)
-            self._params_arg = (jax.device_put(pparams.pack(),
-                                               sps["buffer"]),)
+                                   n_replicas=r, devices=self.devices)
+            if param_buffer is not None:
+                # a pre-placed (S, P) buffer (the tier's remesh path on
+                # degraded respawn) — skip the host-side repack
+                self.param_buffer = param_buffer
+            else:
+                self.param_buffer = jax.device_put(pparams.pack(),
+                                                   sps["buffer"])
+            self._params_arg = (self.param_buffer,)
             self.mesh = mesh
         else:
             # single host: ragged packed rows — bit-exact packed
@@ -339,9 +362,9 @@ class CNNPipelineServer:
         self._pack = jax.jit(jax.vmap(pack_in) if r > 1 else pack_in)
         wire_shape = (r, mb_size, width) if r > 1 else (mb_size, width)
         self._zero_wire = jnp.zeros(wire_shape, jnp.float32)
-        state_shape = (s, r, mb_size, width) if r > 1 \
+        self._state_shape = (s, r, mb_size, width) if r > 1 \
             else (s, mb_size, width)
-        self._state = jnp.zeros(state_shape, jnp.float32)
+        self._state = jnp.zeros(self._state_shape, jnp.float32)
 
         def tick(state, wire, pparams_arg):
             return pp.pipeline_step_hetero(
@@ -358,6 +381,23 @@ class CNNPipelineServer:
         self.ticks = 0
         self.injected_slots = 0
         self.verbose = verbose
+        # incremental-tick pipeline tracking (the tier drives
+        # _tick_once directly; run() loops it): _staged is the next
+        # packed (slots, wire), _inflight the per-tick slot lists still
+        # inside the pipe, _emitted the last tick's (slots, out) whose
+        # D2H readback is deferred one tick
+        self._staged = None
+        self._inflight = deque()
+        self._emitted = None
+        # failure injection fires in the tick path (maybe_fail(ticks)),
+        # so an injected fault surfaces exactly as a mid-stream crash
+        self.injector = injector
+        # tier hook: externally-keyed slots (enqueue()) deliver through
+        # on_result(key, logits) instead of the results() store
+        self.on_result = None
+        # request-latency accounting (submit -> last microbatch out)
+        self._req_submit = {}
+        self._req_done = {}
 
     @property
     def idle_slots(self) -> int:
@@ -383,6 +423,7 @@ class CNNPipelineServer:
         n_mb = -(-b // self.mb_size)
         self._pending[req] = n_mb
         self._results[req] = [None] * n_mb
+        self._req_submit[req] = time.time()
         for i in range(n_mb):
             chunk = images[i * self.mb_size:(i + 1) * self.mb_size]
             n_valid = chunk.shape[0]
@@ -392,6 +433,35 @@ class CNNPipelineServer:
                                      + chunk.shape[1:], np.float32)])
             self._queue.append((req, i, n_valid, chunk))
         return req
+
+    def enqueue(self, key, images, *, n_valid=None):
+        """Tier hook: queue ONE microbatch whose logits are delivered
+        to ``on_result(key, logits)`` instead of the results() store.
+        ``images`` may be short (padded here) or already the padded
+        ``(mb_size, H, W, 3)`` chunk with ``n_valid`` real rows."""
+        if self.on_result is None:
+            raise ValueError("enqueue() needs on_result set")
+        images = np.asarray(images, np.float32)
+        if images.shape[0] > self.mb_size:
+            raise ValueError(f"enqueue() takes one microbatch "
+                             f"(<= {self.mb_size} rows), got "
+                             f"{images.shape[0]}")
+        if n_valid is None:
+            n_valid = images.shape[0]
+        if images.shape[0] < self.mb_size:
+            images = np.concatenate(
+                [images, np.zeros((self.mb_size - images.shape[0],)
+                                  + images.shape[1:], np.float32)])
+        self._queue.append((_EXTERNAL, key, n_valid, images))
+
+    @property
+    def busy(self) -> bool:
+        """True while any microbatch is queued, staged, in flight, or
+        emitted-but-uncollected — the tier ticks a replica only while
+        this holds."""
+        return bool(self._queue) or self._staged is not None or \
+            any(s is not None for s in self._inflight) or \
+            self._emitted is not None
 
     # -- the serving loop --------------------------------------------------
 
@@ -429,8 +499,53 @@ class CNNPipelineServer:
             req, i, n_valid, _ = slot
             logits = np.asarray(self._unpack_out(
                 out_wire[k] if r > 1 else out_wire))[:n_valid]
+            if req is _EXTERNAL:
+                self.on_result(i, logits)      # i is the tier's key
+                continue
             self._results[req][i] = logits
             self._pending[req] -= 1
+            if self._pending[req] == 0:
+                self._req_done[req] = time.time()
+
+    def _tick_once(self) -> bool:
+        """One pipeline tick, instance-state edition: the serving tier
+        drives this directly (inside ``mesh_context(self.mesh)``);
+        run() loops it. Returns True if a device tick was dispatched,
+        False when the pipe was idle and only the trailing emitted
+        output remained to collect. The FailureInjector hook fires
+        FIRST — the tick path — so an injected replica failure
+        surfaces exactly where a real mid-stream crash would."""
+        if self.injector is not None:
+            self.injector.maybe_fail(self.ticks)
+        if self._staged is None:
+            self._staged = self._stage_next()
+        if self._staged is None and not any(
+                s is not None for s in self._inflight):
+            # nothing queued or in flight: just flush the deferred
+            # readback (run()'s trailing collect), no zero-wire tick
+            if self._emitted is not None:
+                self._collect(*self._emitted)
+                self._emitted = None
+            return False
+        slots, wire = self._staged if self._staged is not None \
+            else (None, self._zero_wire)
+        self._state, out = self._step(self._state, wire,
+                                      *self._params_arg)
+        self.ticks += 1
+        if slots is not None:
+            self.injected_slots += sum(1 for s in slots
+                                       if s is not None)
+        self._inflight.append(slots)
+        self._staged = self._stage_next()     # H2D overlaps the step
+        # collect the PREVIOUS tick's output only now, after this tick
+        # is dispatched: its D2H readback overlaps the in-flight
+        # compute instead of serializing it
+        if self._emitted is not None:
+            self._collect(*self._emitted)
+            self._emitted = None
+        if len(self._inflight) >= self.n_stages:
+            self._emitted = (self._inflight.popleft(), out)
+        return True
 
     def run(self) -> dict:
         """Drain the queue: one pipeline tick per queued microbatch
@@ -440,31 +555,16 @@ class CNNPipelineServer:
         n_imgs = sum(s[2] for s in self._queue)
         ticks_before = self.ticks
         injected_before = self.injected_slots
-        inflight = deque()
-        emitted = None                        # last tick's (slots, out)
-        staged = self._stage_next()
+        done_before = set(self._req_done)
         with _mesh_ctx(self.mesh):
-            while staged is not None or any(s is not None
-                                            for s in inflight):
-                slots, wire = staged if staged is not None \
-                    else (None, self._zero_wire)
-                self._state, out = self._step(self._state, wire,
-                                              *self._params_arg)
-                self.ticks += 1
-                if slots is not None:
-                    self.injected_slots += sum(
-                        1 for s in slots if s is not None)
-                inflight.append(slots)
-                staged = self._stage_next()   # H2D overlaps the step
-                # collect the PREVIOUS tick's output only now, after
-                # this tick is dispatched: its D2H readback overlaps
-                # the in-flight compute instead of serializing it
-                if emitted is not None:
-                    self._collect(*emitted)
-                emitted = (inflight.popleft(), out) \
-                    if len(inflight) >= self.n_stages else None
-            if emitted is not None:
-                self._collect(*emitted)
+            if self._staged is None:
+                self._staged = self._stage_next()
+            while self._staged is not None or any(
+                    s is not None for s in self._inflight):
+                self._tick_once()
+            if self._emitted is not None:
+                self._collect(*self._emitted)
+                self._emitted = None
         elapsed = time.time() - t0
         ticks = self.ticks - ticks_before
         injected = self.injected_slots - injected_before
@@ -475,7 +575,13 @@ class CNNPipelineServer:
         # deterministic (benchmarks gate on it, unlike wall-clock)
         slot_ticks = ticks * self.n_replicas
         bubble = 1.0 - injected / max(slot_ticks, 1)
+        # per-request latency (submit -> last microbatch collected) for
+        # the requests that COMPLETED during this run — the tail the
+        # benchmark's p50/p99 gate watches
+        lat = [self._req_done[r] - self._req_submit[r]
+               for r in self._req_done if r not in done_before]
         metrics = {
+            "request_latencies_s": lat,
             "images": int(n_imgs),
             "ticks": int(ticks),
             "injected_microbatches": int(injected),
@@ -504,7 +610,69 @@ class CNNPipelineServer:
                              f"({self._pending[req]} microbatches "
                              "outstanding); call run() first")
         del self._pending[req]
+        self._req_submit.pop(req, None)
+        self._req_done.pop(req, None)
         return np.concatenate(self._results.pop(req), axis=0)
+
+    # -- failure recovery (the tier's drain-and-respawn contract) ----------
+
+    def recover_work(self):
+        """Drain every undelivered microbatch after a failure, in
+        submission order: emitted-but-uncollected first (its device
+        value may be poisoned — recompute, don't trust it), then
+        in-flight, staged, and queued. Internal (submit()) slots are
+        re-queued here; external (enqueue()) slots are RETURNED as
+        ``[(key, n_valid, padded_chunk)]`` for the tier to re-route
+        onto a healthy replica. Pipeline tracking is cleared either
+        way — after this the server is drained and ``respawn()`` makes
+        it serve again."""
+        drained = []
+        if self._emitted is not None:
+            slots, _ = self._emitted          # never read the output
+            if slots is not None:
+                drained.extend(s for s in slots if s is not None)
+            self._emitted = None
+        for slots in self._inflight:
+            if slots is not None:
+                drained.extend(s for s in slots if s is not None)
+        self._inflight.clear()
+        if self._staged is not None:
+            slots, _ = self._staged
+            drained.extend(s for s in slots if s is not None)
+            self._staged = None
+        drained.extend(self._queue)
+        self._queue.clear()
+        external = []
+        for req, i, n_valid, chunk in drained:
+            if req is _EXTERNAL:
+                external.append((i, n_valid, chunk))
+            else:
+                self._queue.append((req, i, n_valid, chunk))
+        return external
+
+    def respawn(self) -> None:
+        """Reset the pipeline after a failure: fresh zero state buffer
+        (the donated one may hold poisoned partials), empty tracking.
+        Queued work (anything recover_work() re-queued) survives; the
+        compiled tick and placed params are reused as-is."""
+        self._state = jnp.zeros(self._state_shape, jnp.float32)
+        self._staged = None
+        self._inflight.clear()
+        self._emitted = None
+
+    def purge(self, pred) -> int:
+        """Drop queued EXTERNAL microbatches whose key matches
+        ``pred`` (tier-side request shedding: timeout/deadline).
+        Returns the number removed; in-flight slots are left to finish
+        and dropped at delivery."""
+        kept, n = deque(), 0
+        for slot in self._queue:
+            if slot[0] is _EXTERNAL and pred(slot[1]):
+                n += 1
+            else:
+                kept.append(slot)
+        self._queue = kept
+        return n
 
 
 def serve_cnn_continuous(arch: str, *, n_requests: int = 4,
@@ -543,11 +711,47 @@ def serve_cnn_continuous(arch: str, *, n_requests: int = 4,
     metrics["fill_bubble_single_batch"] = pp.bubble_fraction(
         m_per_req, srv.n_stages)
     metrics["logits"] = [srv.results(rq) for rq in reqs]
+    lat = metrics.get("request_latencies_s") or []
+    metrics["latency_p50_s"] = float(np.percentile(lat, 50)) if lat \
+        else None
+    metrics["latency_p99_s"] = float(np.percentile(lat, 99)) if lat \
+        else None
     if verbose:
         print(f"{arch}: continuous {n_requests} x {batch} imgs: "
               f"{metrics['images_per_s']:.1f} im/s, steady bubble "
               f"{metrics['steady_bubble']:.3f} vs single-batch fill "
-              f"{metrics['fill_bubble_single_batch']:.3f}")
+              f"{metrics['fill_bubble_single_batch']:.3f}, latency "
+              f"p50 {metrics['latency_p50_s']:.3f}s / p99 "
+              f"{metrics['latency_p99_s']:.3f}s")
+    return metrics
+
+
+def serve_cnn_tier(arch: str, *, n_requests: int = 8, batch: int = 8,
+                   mb_size: int = 2, n_stages: int = 4,
+                   n_replicas: int = 2, image_size: int = 64,
+                   seed: int = 0, fail_replica=None, fail_at_tick=None,
+                   verbose: bool = True) -> dict:
+    """Fault-tolerant serving demo: K requests through a ServingTier
+    of R pipeline replicas, optionally killing one mid-stream with a
+    FailureInjector (``--fail-replica R --fail-at-tick T``) to watch
+    drain-and-respawn keep every request's logits intact."""
+    from repro.runtime.fault import FailureInjector
+    from repro.runtime.tier import ServingTier
+    injectors = {}
+    if fail_replica is not None and fail_at_tick is not None:
+        injectors[fail_replica] = FailureInjector(
+            fail_at_steps=(fail_at_tick,))
+    tier = ServingTier(arch, n_replicas=n_replicas, n_stages=n_stages,
+                       mb_size=mb_size, image_size=image_size,
+                       seed=seed, injectors=injectors, verbose=verbose)
+    key = jax.random.PRNGKey(seed + 1)
+    rids = []
+    for _ in range(n_requests):
+        key, sub = jax.random.split(key)
+        imgs = jax.random.normal(sub, (batch, image_size, image_size, 3))
+        rids.append(tier.submit(np.asarray(imgs)))
+    metrics = tier.run()
+    metrics["logits"] = [tier.results(r) for r in rids]
     return metrics
 
 
@@ -584,9 +788,27 @@ def main(argv=None):
                     help="continuous mode: back-to-back request count")
     ap.add_argument("--mb-size", type=int, default=2,
                     help="continuous mode: images per microbatch")
+    ap.add_argument("--tier", action="store_true",
+                    help="fault-tolerant serving tier: route requests "
+                         "across --replicas pipeline replica workers "
+                         "with drain-and-respawn recovery")
+    ap.add_argument("--fail-replica", type=int, default=None,
+                    help="tier mode: replica index to kill via "
+                         "FailureInjector")
+    ap.add_argument("--fail-at-tick", type=int, default=None,
+                    help="tier mode: tick at which the injected "
+                         "replica failure fires")
     args = ap.parse_args(argv)
     if get_config(args.arch).family == "cnn":
-        if args.continuous:
+        if args.tier:
+            serve_cnn_tier(
+                args.arch, n_requests=args.requests, batch=args.batch,
+                mb_size=args.mb_size, n_stages=args.stages,
+                n_replicas=max(args.replicas, 2),
+                image_size=args.image_size,
+                fail_replica=args.fail_replica,
+                fail_at_tick=args.fail_at_tick)
+        elif args.continuous:
             serve_cnn_continuous(
                 args.arch, n_requests=args.requests, batch=args.batch,
                 mb_size=args.mb_size, n_stages=args.stages,

@@ -254,7 +254,7 @@ def stage_param_shardings(graph, plan, mesh: Mesh, *, params=None,
 
 def placed_stage_setup(cfg, params, plan, mb_shape, *,
                        stage_axis: str = "stage", n_replicas: int = 1,
-                       data_axis: str = "data"):
+                       data_axis: str = "data", devices=None):
     """Placed-pipeline scaffolding shared by serve/dryrun: compile the
     placed stage programs, build the one-device-per-stage mesh (a 2-D
     ``(data, stage)`` grid when ``n_replicas`` > 1 — each data row is a
@@ -270,7 +270,7 @@ def placed_stage_setup(cfg, params, plan, mb_shape, *,
     stage_fns, pack_in, unpack_out, width, pparams = cnn.stage_programs(
         cfg, params, plan["stage_of"], mb_shape, placed=True)
     mesh = make_stage_mesh(s, n_replicas, stage_axis=stage_axis,
-                           data_axis=data_axis)
+                           data_axis=data_axis, devices=devices)
     sps = stage_param_shardings(fused_graph_for(cfg.name), plan, mesh,
                                 params=params, stage_axis=stage_axis)
     return stage_fns, pack_in, unpack_out, width, pparams, mesh, sps

@@ -84,17 +84,36 @@ def run_with_restarts(make_state: Callable[[], Any],
 @dataclass
 class StragglerDetector:
     """Flags slow steps/hosts. At fleet scale the per-host step times
-    arrive via the coordinator heartbeat; here we feed them directly."""
-    threshold: float = 2.0          # x median
+    arrive via the coordinator heartbeat; here we feed them directly.
+
+    Windows are PER HOST and each sample is judged against the fleet
+    median — the median of the OTHER hosts' window medians. Pooling
+    every host into one window (the original implementation) let a
+    persistently slow host drag the shared median up and mask itself:
+    a host at a steady 10x fills the pool with its own samples until
+    10x IS the median. With per-host windows its samples never pollute
+    its reference. A lone host (single-process training loops) falls
+    back to its own window median, preserving the self-relative
+    slow-step detection those loops rely on."""
+    threshold: float = 2.0          # x fleet median
     window: int = 32
-    _times: list = field(default_factory=list)
+    _times: dict = field(default_factory=dict)   # host -> recent dts
     flagged: list = field(default_factory=list)
 
+    def _fleet_median(self, host: int) -> float:
+        others = [float(np.median(v)) for h, v in self._times.items()
+                  if h != host and v]
+        if others:
+            return float(np.median(others))
+        return float(np.median(self._times[host]))
+
     def record(self, host: int, step: int, dt: float) -> bool:
-        self._times.append(dt)
-        self._times = self._times[-self.window:]
-        med = float(np.median(self._times))
-        slow = len(self._times) >= 4 and dt > self.threshold * med
+        w = self._times.setdefault(host, [])
+        w.append(dt)
+        del w[:-self.window]
+        med = self._fleet_median(host)
+        n_total = sum(len(v) for v in self._times.values())
+        slow = n_total >= 4 and dt > self.threshold * med
         if slow:
             self.flagged.append((host, step, dt, med))
         return slow

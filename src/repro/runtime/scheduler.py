@@ -19,18 +19,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.tier import Request as _TierRequest
+
 
 @dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                  # (Tp,) int32
-    max_new_tokens: int
+class Request(_TierRequest):
+    """LM decode request: the tier's generic admission/accounting
+    :class:`repro.runtime.tier.Request` (tenant, priority, deadline,
+    timestamps, retries) plus the decode-specific payload. Subclass
+    fields carry defaults because the base's do; ``prompt`` and
+    ``max_new_tokens`` are required in practice."""
+    prompt: np.ndarray = None           # (Tp,) int32
+    max_new_tokens: int = 0
     eos_id: int = -1                    # -1: never stops early
     # filled by the scheduler
     tokens: list = field(default_factory=list)
-    submitted_at: float = 0.0
     first_token_at: Optional[float] = None
-    done_at: Optional[float] = None
 
 
 @dataclass
@@ -121,6 +125,12 @@ class ContinuousBatcher:
                 self.finished.append(req)
                 del self.active[st.rid]
                 self.state[i] = SlotState()    # slot free next step
+                # zero the freed slot's token feed: a free slot still
+                # runs through decode_fn every tick (static shapes),
+                # and a stale token would make freed-slot buffers
+                # depend on retired requests — failure-recovery replay
+                # asserts they are inert instead
+                self._next_tok[i, 0] = 0
 
     def run(self, *, max_steps: int = 100_000):
         while self.busy and self.steps < max_steps:

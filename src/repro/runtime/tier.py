@@ -1,0 +1,698 @@
+"""Fault-tolerant multi-replica serving tier.
+
+HPIPE's throughput story assumes a pipeline that is *always full*: the
+paper's images/second hold only while every stage keeps ticking. The
+production analogue above one pipeline is a tier of N replica pipelines
+(:class:`~repro.launch.serve.CNNPipelineServer` workers) behind one
+front-end that must survive a replica dying mid-stream without draining
+the fleet or dropping requests — the multi-partition concurrency of
+Shen et al. (resource partitioning) is what makes per-replica failure
+domains possible at all.
+
+The tier is a single-process cooperative scheduler (the same
+simulation stance as the forced-host-device meshes elsewhere in the
+repo: real sharded pipelines, simulated fleet):
+
+- **Admission** (:class:`AdmissionQueue`): priority/deadline-aware
+  per-tenant queues over microbatch :class:`WorkItem`\\ s, bounded depth
+  with typed load shedding (:class:`QueueFullError`). The generic
+  :class:`Request` here is the admission/accounting core that
+  ``runtime/scheduler.py``'s LM decode request now subclasses.
+- **Health**: per-replica heartbeats (every tick stamps
+  ``last_heartbeat`` and feeds the per-host
+  :class:`~repro.runtime.fault.StragglerDetector`); a stale heartbeat
+  or a raised tick is a replica failure.
+- **Drain-and-respawn**: on a replica failure the tier recovers every
+  microbatch the dead replica had queued or in flight
+  (``CNNPipelineServer.recover_work``) and re-enqueues it at the front
+  of the dispatch queue; healthy replicas absorb the work. Because a
+  microbatch's logits are a pure function of its content (slots never
+  mix; all replicas share one ``(cfg, params, plan)``), the replayed
+  stream is **bitwise identical** to a no-failure run. The replica then
+  respawns (state buffer zeroed) behind an exponential backoff;
+  ``max_respawns`` consecutive failures retire it permanently.
+- **Degradation**: on *permanent device loss*
+  (:meth:`ServingTier.lose_devices`) the tier re-plans the reduced pool
+  through :func:`repro.core.planner.replan_cnn_pipeline_2d` and
+  respawns workers on the surviving devices — re-placing the packed
+  ``(S, P)`` stage-param buffer with :func:`repro.runtime.fault.remesh`
+  when the stage cut is unchanged, repacking only when the depth had to
+  change.
+
+Correctness under failure — not speed — is this subsystem's headline:
+the no-failure path must stay benchmark-neutral (the injector hook is
+one Python ``if`` per tick), and every recovery path must reproduce the
+exact logits of the undisturbed stream.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.runtime.fault import StragglerDetector
+
+
+# --- typed serving errors ----------------------------------------------------
+
+class TierError(RuntimeError):
+    """Base of the serving tier's typed request failures."""
+
+
+class QueueFullError(TierError):
+    """Bounded-queue load shedding: the tenant's queue cannot admit the
+    request (raised synchronously at submit — backpressure, not a
+    silent drop)."""
+
+
+class DeadlineExceededError(TierError):
+    """The request's own deadline passed before its results were
+    complete; remaining work was shed."""
+
+
+class RequestTimeoutError(TierError):
+    """The tier-wide per-request timeout elapsed before completion."""
+
+
+class ReplicaFailedError(TierError):
+    """The request's work exhausted its retries across replica
+    failures (or its replica's devices were permanently lost with no
+    healthy capacity left to replay onto)."""
+
+
+class NoHealthyReplicaError(TierError):
+    """Every replica is permanently dead while work is still pending —
+    a tier-level outage, raised from ``run()`` rather than recorded
+    per-request."""
+
+
+# --- generalized request + admission (refactored out of scheduler.py) -------
+
+@dataclass
+class Request:
+    """Payload-agnostic serving request: the admission/accounting core
+    shared by every workload the tier fronts.
+
+    ``runtime/scheduler.py``'s LM decode ``Request`` subclasses this
+    (prompt/token fields ride on top); the CNN tier wraps it as
+    :class:`ImageRequest`. ``deadline_s`` is a relative budget from
+    ``submitted_at`` (the tier's clock, monotonic by default)."""
+    rid: int
+    tenant: str = "default"
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    submitted_at: float = 0.0
+    done_at: Optional[float] = None
+    retries: int = 0
+
+
+@dataclass
+class ImageRequest(Request):
+    """One CNN serving request: ``n_images`` rows split into ``n_mb``
+    fixed-size microbatch :class:`WorkItem` slots."""
+    n_images: int = 0
+    n_mb: int = 0
+
+
+@dataclass
+class WorkItem:
+    """One routable microbatch: the tier's unit of dispatch, retry and
+    recovery. ``images`` is the zero-padded ``(mb_size, H, W, 3)``
+    chunk; ``n_valid`` rows of its logits are real. ``deadline_at`` is
+    absolute (tier clock); ``seq`` preserves global FIFO order among
+    equal (priority, deadline) items."""
+    rid: int
+    mb_index: int
+    n_valid: int
+    images: np.ndarray
+    tenant: str = "default"
+    priority: int = 0
+    deadline_at: Optional[float] = None
+    seq: int = 0
+    retries: int = 0
+
+    @property
+    def key(self) -> tuple:
+        return (self.rid, self.mb_index)
+
+    def order(self) -> tuple:
+        """Dispatch order: higher priority first, then earliest
+        deadline (None sorts last), then submission order."""
+        dl = self.deadline_at if self.deadline_at is not None else \
+            float("inf")
+        return (-self.priority, dl, self.seq)
+
+
+class AdmissionQueue:
+    """Priority/deadline-aware per-tenant microbatch queues.
+
+    ``push`` bounds each tenant's queued depth (``max_per_tenant``
+    items) and raises :class:`QueueFullError` past it — except for
+    ``front=True`` re-enqueues of RECOVERED work, which was already
+    admitted once and must not be shed by its own replica's death.
+    ``pop`` picks the globally best item by (priority desc, deadline
+    asc, least-recently-served tenant, seq): at equal urgency tenants
+    ROTATE — one tenant's backlog cannot starve the rest — while a
+    single tenant's items stay strictly FIFO."""
+
+    def __init__(self, max_per_tenant: Optional[int] = None):
+        self.max_per_tenant = max_per_tenant
+        self._q: dict[str, deque[WorkItem]] = {}
+        self._served: dict[str, int] = {}
+        self._serve_seq = 0
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._q.values())
+
+    def depth(self, tenant: str) -> int:
+        return len(self._q.get(tenant, ()))
+
+    def admit_check(self, tenant: str, n_items: int):
+        """Raise QueueFullError unless ``n_items`` more fit — checked
+        request-atomically BEFORE pushing, so a shed request never
+        half-enters the queue."""
+        if self.max_per_tenant is not None and \
+                self.depth(tenant) + n_items > self.max_per_tenant:
+            raise QueueFullError(
+                f"tenant {tenant!r} queue full: {self.depth(tenant)} "
+                f"queued + {n_items} requested > bound "
+                f"{self.max_per_tenant}; retry later or raise "
+                "max_queue_per_tenant")
+
+    def push(self, item: WorkItem, *, front: bool = False):
+        q = self._q.setdefault(item.tenant, deque())
+        if front:
+            q.appendleft(item)
+        else:
+            q.append(item)
+
+    def pop(self) -> Optional[WorkItem]:
+        best_t, best_i, best_key = None, None, None
+        for tenant, q in self._q.items():
+            if not q:
+                continue
+            for idx, item in enumerate(q):
+                pr, dl, seq = item.order()
+                key = (pr, dl, self._served.get(tenant, -1), seq)
+                if best_key is None or key < best_key:
+                    best_t, best_i, best_key = tenant, idx, key
+        if best_t is None:
+            return None
+        q = self._q[best_t]
+        item = q[best_i]
+        del q[best_i]
+        self._serve_seq += 1
+        self._served[best_t] = self._serve_seq
+        return item
+
+    def purge(self, rid: int) -> int:
+        """Drop every queued item of one request (timeout/deadline
+        shedding). Returns the number removed."""
+        n = 0
+        for tenant, q in self._q.items():
+            kept = deque(i for i in q if i.rid != rid)
+            n += len(q) - len(kept)
+            self._q[tenant] = kept
+        return n
+
+
+# --- replica workers ---------------------------------------------------------
+
+@dataclass
+class ReplicaWorker:
+    """One pipeline replica: the failure domain the tier tracks."""
+    idx: int
+    server: Any
+    devices: Optional[list] = None
+    permanent_dead: bool = False
+    straggler: bool = False
+    failures: int = 0
+    consecutive_failures: int = 0
+    unavailable_until: float = 0.0
+    last_heartbeat: float = 0.0
+    last_error: Optional[BaseException] = None
+    outstanding: dict = field(default_factory=dict)   # key -> WorkItem
+
+    @property
+    def alive(self) -> bool:
+        return not self.permanent_dead
+
+    def available(self, now: float) -> bool:
+        return self.alive and now >= self.unavailable_until
+
+
+class ServingTier:
+    """Front-end over N :class:`~repro.launch.serve.CNNPipelineServer`
+    replica workers: deadline-aware routing, health tracking, and
+    drain-and-respawn recovery. See the module docstring for the fault
+    model; DESIGN.md §7 records the wire contract."""
+
+    def __init__(self, arch: str, *, n_replicas: int = 2,
+                 n_stages: int = 4, mb_size: int = 2,
+                 image_size: int = 64, seed: int = 0,
+                 placed: Optional[bool] = None, devices=None,
+                 auto_split: bool = False,
+                 param_budget_frac: Optional[float] = None,
+                 max_queue_per_tenant: Optional[int] = None,
+                 request_timeout_s: Optional[float] = None,
+                 max_retries: int = 2, max_respawns: int = 3,
+                 backoff_base_s: float = 0.05,
+                 max_worker_queue: int = 2,
+                 straggler_threshold: float = 2.0,
+                 heartbeat_timeout_s: float = 30.0,
+                 injectors: Optional[dict] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 verbose: bool = False):
+        import jax
+        from repro.configs import get_config
+        from repro.core import planner
+        from repro.core.costmodel import pytree_param_bytes
+        from repro.models import cnn
+        cfg = get_config(arch)
+        if cfg.family != "cnn":
+            raise ValueError(f"{arch} is not a CNN arch")
+        self.arch = arch
+        self.cfg = cfg
+        self.params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
+        self._budget = (int(param_budget_frac *
+                            pytree_param_bytes(self.params))
+                        if param_budget_frac else None)
+        self._pool = list(devices) if devices is not None \
+            else list(jax.devices())
+        if auto_split:
+            plan2d = planner.plan_cnn_pipeline_2d(
+                cfg, self.params, len(self._pool), n_microbatches=32,
+                max_stage_param_bytes=self._budget)
+            self.plan, n_replicas = plan2d["plan"], plan2d["n_replicas"]
+        else:
+            self.plan = planner.plan_cnn_pipeline(
+                cfg, self.params, n_stages,
+                max_stage_param_bytes=self._budget)
+        s = self.plan["n_stages"]
+        self.mb_size = mb_size
+        self.image_size = image_size
+        self.seed = seed
+        self.placed = (len(self._pool) >= s * n_replicas) \
+            if placed is None else placed
+        self.max_queue_per_tenant = max_queue_per_tenant
+        self.request_timeout_s = request_timeout_s
+        self.max_retries = max_retries
+        self.max_respawns = max_respawns
+        self.backoff_base_s = backoff_base_s
+        self.max_worker_queue = max_worker_queue
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.verbose = verbose
+        self._clock = clock
+        self._sleep = sleep
+        self.detector = StragglerDetector(threshold=straggler_threshold)
+        self.queue = AdmissionQueue(max_per_tenant=max_queue_per_tenant)
+        self.workers: list[ReplicaWorker] = []
+        injectors = injectors or {}
+        for r in range(n_replicas):
+            devs = (self._pool[r * s:(r + 1) * s] if self.placed
+                    else None)
+            self._spawn_worker(devs, injector=injectors.get(r))
+        # request bookkeeping
+        self._requests: dict[int, ImageRequest] = {}
+        self._results: dict[int, list] = {}
+        self._pending: dict[int, int] = {}
+        self._errors: dict[int, TierError] = {}
+        self._completed: list[int] = []
+        self._next_rid = 0
+        self._next_seq = 0
+        # fleet counters
+        self.respawns = 0
+        self.recovered_microbatches = 0
+        self.retried_microbatches = 0
+
+    # -- worker construction -------------------------------------------------
+
+    def _spawn_worker(self, devs, *, injector=None,
+                      param_buffer=None) -> ReplicaWorker:
+        from repro.launch.serve import CNNPipelineServer
+        idx = len(self.workers)
+        server = CNNPipelineServer(
+            self.arch, mb_size=self.mb_size,
+            image_size=self.image_size, seed=self.seed,
+            placed=self.placed, devices=devs, cfg=self.cfg,
+            params=self.params, plan=self.plan, injector=injector,
+            param_buffer=param_buffer)
+        w = ReplicaWorker(idx=idx, server=server,
+                          devices=list(devs) if devs else None,
+                          last_heartbeat=self._clock())
+        server.on_result = lambda key, logits, _w=w: \
+            self._deliver(_w, key, logits)
+        self.workers.append(w)
+        return w
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, images, *, tenant: str = "default",
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
+        """Admit one request (B, H, W, 3). Raises
+        :class:`QueueFullError` when the tenant's queue cannot hold the
+        request's microbatches (request-atomic: nothing is enqueued on
+        a shed). Returns the request id ``results()`` serves."""
+        images = np.asarray(images, np.float32)
+        if images.ndim != 4 or images.shape[0] == 0:
+            raise ValueError(f"request must be (B>0, H, W, 3), got "
+                             f"{images.shape}")
+        if images.shape[1:] != (self.image_size, self.image_size, 3):
+            raise ValueError(f"request shape {images.shape[1:]} != "
+                             f"({self.image_size}, {self.image_size}, 3)")
+        b = images.shape[0]
+        n_mb = -(-b // self.mb_size)
+        self.queue.admit_check(tenant, n_mb)
+        now = self._clock()
+        rid = self._next_rid
+        self._next_rid += 1
+        req = ImageRequest(rid=rid, tenant=tenant, priority=priority,
+                           deadline_s=deadline_s, submitted_at=now,
+                           n_images=b, n_mb=n_mb)
+        deadline_at = now + deadline_s if deadline_s is not None else None
+        self._requests[rid] = req
+        self._results[rid] = [None] * n_mb
+        self._pending[rid] = n_mb
+        for i in range(n_mb):
+            chunk = images[i * self.mb_size:(i + 1) * self.mb_size]
+            n_valid = chunk.shape[0]
+            if n_valid < self.mb_size:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((self.mb_size - n_valid,)
+                                     + chunk.shape[1:], np.float32)])
+            self._next_seq += 1
+            self.queue.push(WorkItem(
+                rid=rid, mb_index=i, n_valid=n_valid, images=chunk,
+                tenant=tenant, priority=priority,
+                deadline_at=deadline_at, seq=self._next_seq))
+        return rid
+
+    # -- delivery + request failure ------------------------------------------
+
+    def _deliver(self, w: ReplicaWorker, key, logits):
+        w.outstanding.pop(key, None)
+        rid, mb = key
+        if rid in self._errors or rid not in self._pending:
+            return                    # shed/cancelled: drop late result
+        self._results[rid][mb] = logits
+        self._pending[rid] -= 1
+        if self._pending[rid] == 0:
+            self._requests[rid].done_at = self._clock()
+            self._completed.append(rid)
+
+    def _fail_request(self, rid: int, err: TierError):
+        if rid in self._errors or rid not in self._pending:
+            return
+        self._errors[rid] = err
+        self.queue.purge(rid)
+        for w in self.workers:
+            w.server.purge(lambda k, _r=rid: k[0] == _r)
+            for k in [k for k in w.outstanding if k[0] == rid]:
+                del w.outstanding[k]
+
+    # -- health + failure handling -------------------------------------------
+
+    def _check_timeouts(self):
+        now = self._clock()
+        for rid, req in list(self._requests.items()):
+            if rid in self._errors or self._pending.get(rid, 0) == 0:
+                continue
+            age = now - req.submitted_at
+            # the request's OWN deadline outranks the tier-wide
+            # timeout: a missed SLA reports as the SLA error even when
+            # both have elapsed
+            if req.deadline_s is not None and age > req.deadline_s:
+                self._fail_request(rid, DeadlineExceededError(
+                    f"request {rid} missed its {req.deadline_s}s "
+                    f"deadline (waited {age:.3f}s)"))
+            elif self.request_timeout_s is not None and \
+                    age > self.request_timeout_s:
+                self._fail_request(rid, RequestTimeoutError(
+                    f"request {rid} exceeded the tier timeout "
+                    f"{self.request_timeout_s}s (waited {age:.3f}s)"))
+
+    def _check_health(self):
+        now = self._clock()
+        for w in self.workers:
+            if w.alive and (w.outstanding or w.server.busy) and \
+                    now - w.last_heartbeat > self.heartbeat_timeout_s:
+                self._on_failure(w, RequestTimeoutError(
+                    f"replica {w.idx} heartbeat stale "
+                    f"({now - w.last_heartbeat:.1f}s > "
+                    f"{self.heartbeat_timeout_s}s)"))
+
+    def _on_failure(self, w: ReplicaWorker, exc: BaseException,
+                    *, permanent: bool = False):
+        """Drain-and-respawn: recover every undelivered microbatch the
+        replica held, re-enqueue it (front: it was already admitted),
+        and either respawn the replica behind a backoff or retire it."""
+        w.failures += 1
+        w.consecutive_failures += 1
+        w.last_error = exc
+        lost = w.server.recover_work()
+        items = []
+        for key, _n_valid, _imgs in lost:
+            item = w.outstanding.pop(key, None)
+            if item is not None:
+                items.append(item)
+        # anything the server no longer knows about but the tier does
+        # (defensive: recover_work() is the source of truth)
+        items.extend(w.outstanding.values())
+        w.outstanding.clear()
+        self.recovered_microbatches += len(items)
+        for item in reversed(items):      # front-push preserves order
+            if item.rid in self._errors:
+                continue
+            item.retries += 1
+            self.retried_microbatches += 1
+            if item.retries > self.max_retries:
+                self._fail_request(item.rid, ReplicaFailedError(
+                    f"request {item.rid} microbatch {item.mb_index} "
+                    f"failed {item.retries}x across replica failures "
+                    f"(last: {exc!r})"))
+            else:
+                self.queue.push(item, front=True)
+        if permanent or w.consecutive_failures > self.max_respawns:
+            w.permanent_dead = True
+            if self.verbose:
+                print(f"tier: replica {w.idx} retired permanently "
+                      f"({exc!r})")
+            return
+        w.server.respawn()
+        self.respawns += 1
+        backoff = self.backoff_base_s * \
+            (2 ** (w.consecutive_failures - 1))
+        w.unavailable_until = self._clock() + backoff
+        if self.verbose:
+            print(f"tier: replica {w.idx} respawned after {exc!r}, "
+                  f"backoff {backoff:.3f}s")
+
+    # -- routing + the serving loop ------------------------------------------
+
+    def _pick_worker(self) -> Optional[ReplicaWorker]:
+        now = self._clock()
+        avail = [w for w in self.workers if w.available(now) and
+                 len(w.outstanding) <
+                 w.server.n_stages + self.max_worker_queue]
+        if not avail:
+            return None
+        pref = [w for w in avail if not w.straggler] or avail
+        return min(pref, key=lambda w: (len(w.outstanding), w.idx))
+
+    def _dispatch(self):
+        while len(self.queue):
+            w = self._pick_worker()
+            if w is None:
+                return
+            item = self.queue.pop()
+            if item is None:
+                return
+            w.outstanding[item.key] = item
+            w.server.enqueue(item.key, item.images,
+                             n_valid=item.n_valid)
+
+    def _tick_worker(self, w: ReplicaWorker) -> bool:
+        from repro.launch.mesh import mesh_context
+        t0 = time.perf_counter()
+        try:
+            with mesh_context(w.server.mesh):
+                ticked = w.server._tick_once()
+        except Exception as e:            # noqa: BLE001 — fault domain
+            self._on_failure(w, e)
+            return False
+        w.last_heartbeat = self._clock()
+        w.consecutive_failures = 0
+        if ticked:
+            w.straggler = self.detector.record(
+                w.idx, w.server.ticks, time.perf_counter() - t0)
+        return ticked
+
+    def _live_rids(self) -> list[int]:
+        return [r for r, n in self._pending.items()
+                if n > 0 and r not in self._errors]
+
+    def run(self, *, max_rounds: Optional[int] = None) -> dict:
+        """Drive the fleet until every admitted request is delivered or
+        shed (or ``max_rounds`` scheduler rounds elapse — the hook
+        tests use to interrupt a stream mid-flight). Raises
+        :class:`NoHealthyReplicaError` if work remains while every
+        replica is permanently dead."""
+        t0 = self._clock()
+        done_before = len(self._completed)
+        rounds = 0
+        while True:
+            self._check_timeouts()
+            self._check_health()
+            if not self._live_rids():
+                break
+            if not any(w.alive for w in self.workers):
+                raise NoHealthyReplicaError(
+                    f"all {len(self.workers)} replicas permanently "
+                    f"dead with requests {self._live_rids()} pending "
+                    f"(last error: {self.workers[-1].last_error!r})")
+            self._dispatch()
+            now = self._clock()
+            busy = [w for w in self.workers
+                    if w.alive and w.server.busy]
+            ready = [w for w in busy if w.available(now)]
+            if not ready:
+                if busy or len(self.queue):
+                    # every holder of work is backing off — wait out
+                    # the earliest backoff rather than spinning
+                    alive = [w for w in self.workers if w.alive]
+                    wake = min(w.unavailable_until for w in alive)
+                    self._sleep(max(0.0, min(wake - now, 1.0)))
+                    continue
+                break
+            for w in ready:
+                self._tick_worker(w)
+            rounds += 1
+            if max_rounds is not None and rounds >= max_rounds:
+                break
+        elapsed = self._clock() - t0
+        completed = self._completed[done_before:]
+        lats = [self._requests[r].done_at - self._requests[r].submitted_at
+                for r in completed]
+        images = sum(self._requests[r].n_images for r in completed)
+        metrics = {
+            "completed": len(completed),
+            "failed": len(self._errors),
+            "images": images,
+            "elapsed_s": elapsed,
+            "images_per_s": images / max(elapsed, 1e-9),
+            "rounds": rounds,
+            "respawns": self.respawns,
+            "recovered_microbatches": self.recovered_microbatches,
+            "retried_microbatches": self.retried_microbatches,
+            "latency_p50_s": float(np.percentile(lats, 50)) if lats
+            else None,
+            "latency_p99_s": float(np.percentile(lats, 99)) if lats
+            else None,
+            "replica_ticks": [w.server.ticks for w in self.workers],
+            "replicas_alive": sum(w.alive for w in self.workers),
+            "stragglers": list(self.detector.flagged),
+        }
+        if self.verbose:
+            print(f"tier: {metrics['completed']} requests "
+                  f"({images} imgs) in {elapsed:.2f}s, "
+                  f"{metrics['failed']} failed, "
+                  f"{self.respawns} respawns, "
+                  f"{metrics['replicas_alive']} replicas alive")
+        return metrics
+
+    def results(self, rid: int) -> np.ndarray:
+        """(B, 1000) logits of a completed request, or raise its typed
+        failure. One-shot like the server's: the entry is evicted."""
+        if rid in self._errors:
+            err = self._errors.pop(rid)
+            self._pending.pop(rid, None)
+            self._results.pop(rid, None)
+            self._requests.pop(rid, None)
+            raise err
+        if rid not in self._pending:
+            raise KeyError(f"unknown request id {rid}")
+        if self._pending[rid] != 0:
+            raise ValueError(f"request {rid} incomplete "
+                             f"({self._pending[rid]} microbatches "
+                             "outstanding); call run() first")
+        del self._pending[rid]
+        self._requests.pop(rid)
+        return np.concatenate(self._results.pop(rid), axis=0)
+
+    # -- permanent device loss + degradation ---------------------------------
+
+    def lose_devices(self, lost) -> dict:
+        """Permanent device loss: retire every replica whose mesh
+        touches a lost device (their work drains onto the queue),
+        re-plan the reduced pool via
+        :func:`~repro.core.planner.replan_cnn_pipeline_2d`, and respawn
+        replicas on the surviving devices. When the re-plan keeps the
+        previous stage cut (``reused``) the packed ``(S, P)`` param
+        buffer of a prior worker is re-placed with
+        :func:`~repro.runtime.fault.remesh` — no repack, and surviving
+        workers keep their compiled pipelines; a depth change rebuilds
+        (and repacks) everything. Returns the re-plan dict."""
+        from repro.core import planner
+        lost_ids = {getattr(d, "id", d) for d in lost}
+        self._pool = [d for d in self._pool
+                      if getattr(d, "id", d) not in lost_ids]
+        victims = [w for w in self.workers if w.alive and w.devices and
+                   any(getattr(d, "id", d) in lost_ids
+                       for d in w.devices)]
+        for w in victims:
+            self._on_failure(w, ReplicaFailedError(
+                f"replica {w.idx}: device(s) "
+                f"{sorted(lost_ids & {getattr(d, 'id', d) for d in w.devices})} "
+                "permanently lost"), permanent=True)
+        if not self.placed:
+            return {"reused": True, "n_replicas":
+                    sum(w.alive for w in self.workers)}
+        donor = victims[0] if victims else None
+        for w in self.workers:            # prefer a surviving donor
+            if w.alive and w.devices:
+                donor = w
+                break
+        replan = planner.replan_cnn_pipeline_2d(
+            self.cfg, self.params, len(self._pool), prev=self.plan,
+            n_microbatches=32, max_stage_param_bytes=self._budget) \
+            if self._pool else None
+        if replan is None:
+            return {"reused": False, "n_replicas": 0}
+        reused = replan["reused"]
+        if not reused:
+            # the stage cut changed: every compiled pipeline (and the
+            # packed buffer layout) is stale — drain and rebuild all
+            for w in self.workers:
+                if w.alive:
+                    self._on_failure(w, ReplicaFailedError(
+                        "stage re-cut on degradation"), permanent=True)
+            donor = None
+            self.plan = replan["plan"]
+        s = self.plan["n_stages"]
+        used = {getattr(d, "id", d) for w in self.workers
+                if w.alive and w.devices for d in w.devices}
+        free = [d for d in self._pool
+                if getattr(d, "id", d) not in used]
+        while sum(w.alive for w in self.workers) < \
+                replan["n_replicas"] and len(free) >= s:
+            devs, free = free[:s], free[s:]
+            buf = None
+            if reused and donor is not None and \
+                    donor.server.param_buffer is not None:
+                buf = self._remesh_buffer(donor, devs, s)
+            self._spawn_worker(devs, param_buffer=buf)
+        return replan
+
+    def _remesh_buffer(self, donor: ReplicaWorker, devs, s):
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_stage_mesh
+        from repro.runtime.fault import remesh
+        new_mesh = make_stage_mesh(s, 1, devices=devs)
+        return remesh({"buf": donor.server.param_buffer},
+                      donor.server.mesh, new_mesh,
+                      lambda path, leaf: P("stage"))["buf"]

@@ -38,6 +38,31 @@ def test_continuous_batching_completes_all(arch):
     assert cb.steps < seq_steps
 
 
+def test_freed_slots_token_feed_is_inert():
+    """Retired slots must zero their ``_next_tok`` row: a free slot
+    still runs through decode_fn every tick (static shapes), and a
+    stale token would make freed-slot buffers depend on retired
+    requests — the tier's failure-recovery replay asserts they are
+    inert instead."""
+    cfg = reduced(get_config("smollm-360m"))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    cb = ContinuousBatcher(cfg, params, slots=2, max_seq=32,
+                           decode_fn=make_per_slot_decode(cfg),
+                           init_cache_fn=lambda c, s, m: make_slot_cache(c, s, m))
+    # slot 0 retires early (short request); slot 1 keeps decoding
+    cb.submit(Request(rid=0, prompt=np.array([3, 5], np.int32),
+                      max_new_tokens=1))
+    cb.submit(Request(rid=1, prompt=np.array([2, 9, 4], np.int32),
+                      max_new_tokens=8))
+    cb.run(max_steps=5)
+    assert cb.state[0].rid == -1              # slot 0 freed mid-run
+    assert cb.state[1].rid == 1               # slot 1 still active
+    assert cb._next_tok[0, 0] == 0            # freed row is inert
+    cb.run()
+    assert all(s.rid < 0 for s in cb.state)
+    assert (cb._next_tok == 0).all()          # every freed row zeroed
+
+
 def test_scheduler_matches_unbatched_decode():
     """A single request through the scheduler equals plain greedy decode."""
     cfg = reduced(get_config("smollm-360m"))

@@ -135,6 +135,26 @@ def test_straggler_detection():
     assert sd.flagged[0][0] == 3
 
 
+def test_straggler_persistent_slow_host_not_masked():
+    """A host that is ALWAYS slow — and reports more often than its
+    peers — must still be flagged. The old pooled window let such a
+    host fill the shared median with its own samples (3 slow samples
+    per 1 fast one -> pooled median 10.0 -> 10.0 looks normal);
+    per-host windows judged against the OTHER hosts' medians keep the
+    reference clean."""
+    sd = fault.StragglerDetector(threshold=2.0, window=8)
+    flags = []
+    for step in range(6):
+        sd.record(0, step, 1.0)          # one healthy sample...
+        for k in range(3):               # ...vs three slow ones
+            flags.append(sd.record(3, step, 10.0))
+    # every slow sample after warmup (4 total samples) is flagged
+    assert flags[2:] == [True] * len(flags[2:])
+    assert all(f[0] == 3 for f in sd.flagged)
+    # and the healthy host never is
+    assert not sd.record(0, 99, 1.0)
+
+
 @settings(max_examples=20, deadline=None)
 @given(scale=st.floats(1e-3, 1e3))
 def test_compression_roundtrip_error_bounded(scale):
