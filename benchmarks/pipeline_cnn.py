@@ -6,16 +6,20 @@ Single-host measurement through the GSPMD heterogeneous executor: every
 scan step runs all S stage programs, so wall-clock is
 (M + S - 1) x t_step while sequential execution of the same M
 microbatches costs M x t_step — the measured idle fraction
-1 - t_seq/t_pipe traces (S-1)/(M+S-1) directly. The baseline is M
-forwards at the PIPELINE'S microbatch size (one image), not one batched
-M-image forward: batching efficiency would otherwise masquerade as
-pipeline bubble. Emits CSV rows plus one JSON summary line (and
+1 - t_seq/t_pipe traces (S-1)/(M+S-1) directly. The baseline is a
+single jitted lax.scan of M forwards at the PIPELINE'S microbatch size
+(one image), not one batched M-image forward (batching efficiency
+would masquerade as pipeline bubble) and not M separate jitted calls
+(per-call dispatch overhead scales with M and swamps the compute at
+benchmark sizes). Emits CSV rows plus one JSON summary line (and
 optionally a JSON file via ``--out``).
 """
 import json
 
 import jax
 import jax.numpy as jnp
+
+from jax import lax
 
 from repro.configs import get_config
 from repro.core import pipeline as pp, planner
@@ -35,10 +39,6 @@ def main(smoke: bool = False, out: str = None):
     s = plan["n_stages"]
     results = {"arch": ARCH, "n_stages": s, "image_size": img,
                "imbalance": plan["imbalance"], "points": []}
-    one = jax.random.normal(jax.random.PRNGKey(1), (1, img, img, 3))
-    us_seq1, _ = timeit(
-        jax.jit(lambda x: cnn.cnn_forward(cfg, params, x)), one,
-        warmup=1, iters=3)
     for m in mbs:
         imgs = jax.random.normal(jax.random.PRNGKey(1), (m, img, img, 3))
         x_mb = pp.microbatch(imgs, m)                  # microbatch size 1
@@ -51,8 +51,19 @@ def main(smoke: bool = False, out: str = None):
             return jnp.concatenate(
                 [unpack_out(o[i]) for i in range(m)], axis=0)
 
+        # Sequential baseline: the SAME M single-image forwards as ONE
+        # jitted lax.scan, so both sides pay exactly one dispatch. The
+        # old ``m * t(single forward)`` baseline multiplied the
+        # per-call dispatch overhead by M, inflating t_seq past t_pipe
+        # and pinning the measured bubble at the 0.0 clamp.
+        def seq(xmb):
+            def step(carry, x1):
+                return carry, cnn.cnn_forward(cfg, params, x1)
+            _, ys = lax.scan(step, 0, xmb)
+            return ys
+
         us_pipe, _ = timeit(jax.jit(pipe), x_mb, warmup=1, iters=3)
-        us_seq = m * us_seq1                  # M microbatch-sized forwards
+        us_seq, _ = timeit(jax.jit(seq), x_mb, warmup=1, iters=3)
         measured = max(1.0 - us_seq / us_pipe, 0.0)
         analytic = pp.bubble_fraction(m, s)
         results["points"].append({

@@ -32,7 +32,7 @@ import traceback
 
 MODULES = ("balance_fig3", "planner_accuracy", "sparse_speedup",
            "conv_fused", "fusion", "throughput_tab4", "resources_tab2",
-           "pipeline_cnn", "placement", "serving")
+           "pipeline_cnn", "placement", "serving", "calibration")
 
 # headline-key gate spec: direction ("higher"/"lower" is better) and
 # relative tolerance. Wall-clock-derived keys are noisy on shared CI
@@ -46,6 +46,12 @@ GATE = {
     "pipeline_bubble_measured": ("lower", 0.60),
     "pipeline_bubble_analytic": ("lower", 0.01),
     "pipeline_imbalance": ("lower", 0.10),
+    # calibration: both derived from the checked-in tuning-cache FILE
+    # (no wall clock at gate time) -> deterministic, tight. The cache
+    # CONTENTS shift when regenerated on new hardware, so regeneration
+    # re-baselines these.
+    "pipeline_imbalance_measured": ("lower", 0.10),
+    "planner_estimate_err_pct": ("lower", 0.25),
     "fusion_speedup_mbv1": ("higher", 0.50),
     "fusion_hbm_block_ratio_resnet50": ("higher", 0.05),
     "fusion_hbm_block_ratio_mobilenet_v1": ("higher", 0.05),
@@ -94,6 +100,16 @@ def _headline(modules: dict) -> dict:
     for arch, a in ((modules.get("placement") or {}).get("archs")
                     or {}).items():
         out[f"placement_param_ratio_{arch}"] = a["placed_ratio"]
+    cal = modules.get("calibration") or {}
+    if "pipeline_imbalance_measured" in cal:
+        out["pipeline_imbalance_measured"] = \
+            cal["pipeline_imbalance_measured"]
+        out["calibration_gain_pct"] = cal.get("calibration_gain_pct")
+    acc = modules.get("planner_accuracy") or {}
+    if "planner_estimate_err_pct" in acc:
+        out["planner_estimate_err_pct"] = acc["planner_estimate_err_pct"]
+        out["planner_estimate_err_analytic_pct"] = \
+            acc.get("planner_estimate_err_analytic_pct")
     srv = modules.get("serving") or {}
     if "serving_throughput_imgs_per_s" in srv:
         out["serving_throughput_imgs_per_s"] = \

@@ -158,6 +158,29 @@ def node_weight_bytes(node, params) -> int:
                if p.name in params)
 
 
+def fit_scale_factors(measured_us, analytic_cycles, kinds) -> dict:
+    """Calibration fit for the measured cost model (core/tuning.py):
+    per-op-kind scale factors mapping analytic cycles -> measured
+    microseconds, plus a ``"*"`` global fallback.
+
+    Each scale is the GEOMETRIC mean of the measured/analytic ratios of
+    that kind's profiled nodes — the minimizer of mean squared log
+    error, so a single 10x-slow outlier shifts the fit by its log, not
+    its magnitude (an arithmetic mean would let one giant conv drown
+    every small one). Uncached shapes are then priced at
+    ``analytic * scale[kind]`` (falling back to ``scale["*"]``), which
+    preserves the analytic model's RELATIVE ordering within a kind
+    while adopting the device's absolute rates."""
+    ratios: dict[str, list] = {}
+    for t, a, k in zip(measured_us, analytic_cycles, kinds):
+        if t is None or t <= 0 or a <= 0:
+            continue
+        r = float(np.log(t / a))
+        ratios.setdefault(k, []).append(r)
+        ratios.setdefault("*", []).append(r)
+    return {k: float(np.exp(np.mean(v))) for k, v in ratios.items()}
+
+
 def op_cost_unstructured(name: str, mask: np.ndarray, lines: int,
                          width: int) -> OpCost:
     """Unstructured scalar sparsity (the paper's actual format): mask is

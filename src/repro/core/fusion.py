@@ -24,6 +24,10 @@ Rewrite rules (applied to fixpoint, each strictly shrinks the graph):
   block outputs never hit HBM just to be added.
 - **avgpool_fc** — the global average pool folds into the fc head
   (one reduction feeding the classifier matmul).
+- **pooled conv** — a conv whose ONLY consumer is a maxpool gains a
+  pooling epilogue (``pool_k``/``pool_stride`` on the conv node): the
+  ResNet stem's conv1->pool1 runs as one node, so the 112x112x64
+  pre-pool tensor never round-trips HBM between nodes.
 
 Legality: a fusion may only swallow a value with exactly ONE consumer
 (anything read elsewhere — residual sources, multi-consumer taps —
@@ -90,9 +94,13 @@ def _fuse_once(nodes: list, inputs: list, output: str):
             inputs[j] = (inputs[i][0],) + edge[1:]
             del nodes[i], inputs[i]
             return True
-        # R2: linear conv / dw_pw -> add (+relu): residual epilogue
+        # R2: linear conv / dw_pw -> add (+relu): residual epilogue.
+        # A pooled conv (R4) may not take one: the epilogue order is
+        # conv -> residual add -> pool, but the unfused graph pools
+        # BEFORE the add — folding would reorder them.
         if (node.kind == "add" and prod.kind in ("conv", "dw_pw")
                 and not prod.relu and not prod.residual_from
+                and not prod.pool_k
                 and only_consumer(src, j)):
             fused = dataclasses.replace(
                 prod, name=node.name, relu=node.relu,
@@ -112,6 +120,21 @@ def _fuse_once(nodes: list, inputs: list, output: str):
             nodes[j] = fused
             inputs[j] = (inputs[i][0],)
             del nodes[i], inputs[i]
+            return True
+        # R4: conv -> maxpool (the ResNet stem): pooling epilogue on the
+        # conv unit. The fused node keeps the conv's arithmetic fields
+        # plus pool_k/pool_stride; the executor pools after the conv's
+        # own epilogue, which is exactly the unfused sequence, so this
+        # is bitwise-identical while dropping a full-tensor HBM pass.
+        if (node.kind == "maxpool" and prod.kind == "conv"
+                and not prod.pool_k and only_consumer(src, j)):
+            fused = dataclasses.replace(
+                prod, name=node.name, pool_k=node.k,
+                pool_stride=node.stride,
+                parts=(prod.parts or (prod,)) + (node.parts or (node,)))
+            nodes[j] = fused
+            inputs[j] = inputs[i]       # keep the conv's edges (incl. any
+            del nodes[i], inputs[i]     # residual epilogue it already has)
             return True
     return False
 

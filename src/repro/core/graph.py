@@ -50,15 +50,27 @@ class ConvSpec:
     parts: tuple = ()         # fused super-nodes: the original ConvSpecs
                               # in execution order (params stay keyed by
                               # the part names); () = not a fusion
+    pool_k: int = 0           # fused pooling epilogue on a conv node
+    pool_stride: int = 0      # (core/fusion.py R4: conv -> maxpool); 0 = none
+
+    @property
+    def conv_out_hw(self) -> int:
+        """Spatial size the conv unit itself emits (pre-pool-epilogue)."""
+        return -(-self.in_hw // self.stride)
 
     @property
     def out_hw(self) -> int:
-        return -(-self.in_hw // self.stride)
+        ohw = -(-self.in_hw // self.stride)
+        if self.pool_stride:
+            ohw = -(-ohw // self.pool_stride)
+        return ohw
 
     def macs(self) -> int:
         """Dense multiply-accumulates for this op."""
         if self.kind == "conv":
-            return self.out_hw ** 2 * self.k ** 2 * self.cin * self.cout
+            # MACs happen at the conv unit's own resolution — a fused
+            # pooling epilogue shrinks the node OUTPUT, not the conv
+            return self.conv_out_hw ** 2 * self.k ** 2 * self.cin * self.cout
         if self.kind == "dw":
             return self.out_hw ** 2 * self.k ** 2 * self.cin
         if self.kind == "fc":

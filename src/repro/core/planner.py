@@ -228,7 +228,8 @@ def plan_cnn(cfg, params, dsp_target: int = 5000, *, model: str = "aware") -> Pl
 
 # --- CNN layer-graph -> pipeline stages (the TPU layer pipeline) -----------
 
-def cnn_node_costs(cfg, params, graph=None) -> np.ndarray:
+def cnn_node_costs(cfg, params, graph=None, *, model: str = "analytic",
+                   tuning_cache=None, return_report: bool = False):
     """Per-IR-node cycle estimates for stage assignment (defaults to
     the FUSED graph, matching the interpreter).
 
@@ -242,7 +243,23 @@ def cnn_node_costs(cfg, params, graph=None) -> np.ndarray:
     flush); its HBM traffic is already the conv's own — the pre-add
     output never round-trips (fusion.graph_hbm_bytes models exactly
     that). Pools and standalone adds are the FPGA's cheap companion
-    ops: one pass over their output lines."""
+    ops: one pass over their output lines. A fused pooling epilogue
+    (R4) likewise adds one line pass at the conv's own resolution.
+
+    ``model="measured"`` prices nodes from a :class:`repro.core.tuning.
+    TuningCache` of profiled per-node wall times instead (microseconds,
+    not cycles); uncached nodes fall back to the analytic estimate
+    scaled by the cache's calibrated per-op-kind factor, and the
+    coverage report says which. A cold/empty cache degrades to the
+    analytic costs bit-for-bit. ``return_report=True`` returns
+    ``(costs, report)``; report is None for the analytic model."""
+    if model not in ("analytic", "measured"):
+        raise ValueError(f"unknown cost model {model!r}")
+    if model == "measured":
+        from repro.core import tuning
+        costs, report = tuning.measured_node_costs(
+            cfg, params, graph=graph, cache=tuning_cache)
+        return (costs, report) if return_report else costs
     from repro.core.costmodel import op_cost_dw, op_cost_fused_dw_pw
     from repro.core.fusion import conv_part, fused_graph_for
     from repro.models.layers import SparseWeight
@@ -251,12 +268,17 @@ def cnn_node_costs(cfg, params, graph=None) -> np.ndarray:
     for s in g.nodes:
         if s.kind == "conv":
             w = params[conv_part(s).name]["w"]
+            # a pooled conv (fusion R4) computes at its own pre-pool
+            # resolution; the pool epilogue is one extra line pass
+            ohw = s.conv_out_hw
             if isinstance(w, SparseWeight):
                 c = op_cost_conv_sparse(s.name, w, s.k, s.cin,
-                                        s.out_hw, s.out_hw).cycles(1)
+                                        ohw, ohw).cycles(1)
             else:
                 c = op_cost_dense(s.name, max(s.k * s.k * s.cin // 8, 1),
-                                  s.cout, s.out_hw, s.out_hw).cycles(1)
+                                  s.cout, ohw, ohw).cycles(1)
+            if s.pool_k:
+                c += max(ohw, 1)
         elif s.kind == "dw_pw":
             pw_w = params[conv_part(s).name]["w"]
             sw = pw_w if isinstance(pw_w, SparseWeight) else None
@@ -278,11 +300,14 @@ def cnn_node_costs(cfg, params, graph=None) -> np.ndarray:
         if s.residual_from and s.kind != "add":
             c += max(s.out_hw, 1)           # fused residual epilogue
         costs.append(float(c))
-    return np.asarray(costs)
+    costs = np.asarray(costs)
+    return (costs, None) if return_report else costs
 
 
 def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None, *,
-                      max_stage_param_bytes: Optional[int] = None) -> dict:
+                      max_stage_param_bytes: Optional[int] = None,
+                      model: str = "analytic",
+                      tuning_cache=None) -> dict:
     """Cost-balanced stage assignment for a CNN layer graph: contiguous
     partition of the IR minimizing the max per-stage cycle sum (the
     multi-device analogue of HPIPE giving slow layers more DSPs).
@@ -301,11 +326,17 @@ def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None, *,
     residency: the cut DP (``assign_stages``) rebalances — only
     partitions whose every stage fits the budget are considered, so a
     cycle-optimal cut that parks most of ResNet-50's tail weights on
-    one device is rejected in favor of the best cut that fits."""
+    one device is rejected in favor of the best cut that fits.
+
+    ``model="measured"`` + ``tuning_cache`` plans over profiled wall
+    times instead of analytic cycles (see :func:`cnn_node_costs`); the
+    plan records the coverage report under ``measured_coverage``."""
     from repro.core.costmodel import node_weight_bytes
     from repro.core.fusion import fused_graph_for
     g = graph if graph is not None else fused_graph_for(cfg.name)
-    costs = cnn_node_costs(cfg, params, graph=g)
+    costs, coverage = cnn_node_costs(cfg, params, graph=g, model=model,
+                                     tuning_cache=tuning_cache,
+                                     return_report=True)
     wbytes = np.array([node_weight_bytes(node, params) for node in g.nodes],
                       dtype=np.float64)
     stage_of = assign_stages(
@@ -331,6 +362,10 @@ def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None, *,
         # under placement) — deliberately NOT named after the budget
         # kwarg, which is echoed back as param_budget_bytes above
         "placed_bytes_per_device": float(stage_bytes.max()),
+        # cost-model provenance: node_cycles/stage_cost are analytic
+        # cycles or measured microseconds depending on this
+        "cost_model": model,
+        "measured_coverage": coverage,
     }
 
 
@@ -354,7 +389,9 @@ def pipeline_throughput_rel(stage_cost, n_replicas: int,
 
 def plan_cnn_pipeline_2d(cfg, params, n_devices: int, *,
                          n_microbatches: int = 8, graph=None,
-                         max_stage_param_bytes: Optional[int] = None) -> dict:
+                         max_stage_param_bytes: Optional[int] = None,
+                         model: str = "analytic",
+                         tuning_cache=None) -> dict:
     """Co-plan the (n_stages, n_replicas) split of ``n_devices`` —
     HPIPE's resource-partitioning tradeoff (Shen et al.): deeper cuts
     shrink per-stage work but inherit the graph's imbalance (the max
@@ -385,7 +422,8 @@ def plan_cnn_pipeline_2d(cfg, params, n_devices: int, *,
         try:
             plan = plan_cnn_pipeline(
                 cfg, params, s, graph=graph,
-                max_stage_param_bytes=max_stage_param_bytes)
+                max_stage_param_bytes=max_stage_param_bytes,
+                model=model, tuning_cache=tuning_cache)
         except ValueError as e:        # budget-infeasible at this depth
             errors.append((s, str(e)))
             continue
@@ -430,8 +468,9 @@ def plan_cnn_pipeline_2d(cfg, params, n_devices: int, *,
 
 def replan_cnn_pipeline_2d(cfg, params, n_devices: int, *, prev=None,
                            n_microbatches: int = 8, graph=None,
-                           max_stage_param_bytes: Optional[int] = None
-                           ) -> dict:
+                           max_stage_param_bytes: Optional[int] = None,
+                           model: str = "analytic",
+                           tuning_cache=None) -> dict:
     """Degradation re-plan: pick a (stages, replicas) split for a
     REDUCED device pool, preferring stability over optimality.
 
@@ -468,6 +507,7 @@ def replan_cnn_pipeline_2d(cfg, params, n_devices: int, *, prev=None,
             }
     out = plan_cnn_pipeline_2d(
         cfg, params, n_devices, n_microbatches=n_microbatches,
-        graph=graph, max_stage_param_bytes=max_stage_param_bytes)
+        graph=graph, max_stage_param_bytes=max_stage_param_bytes,
+        model=model, tuning_cache=tuning_cache)
     out["reused"] = False
     return out

@@ -68,12 +68,24 @@ def pick_block_c(w: int, c: int, k: int, stride: int, itemsize: int,
                  budget: int = VMEM_BUDGET_BYTES) -> int:
     """Largest channel tile dividing ``c`` whose row working set fits
     the VMEM budget (always >= 1: a single channel's rows are tiny)."""
+    cands = block_c_candidates(w, c, k, stride, itemsize, budget)
+    return cands[0] if cands else 1
+
+
+def block_c_candidates(w: int, c: int, k: int, stride: int, itemsize: int,
+                       budget: int = VMEM_BUDGET_BYTES,
+                       limit: int = 4) -> list[int]:
+    """The autotuner's channel-tile lattice: every divisor of ``c``
+    (<= 128) whose row working set fits the VMEM budget, largest first,
+    capped at ``limit`` entries. ``pick_block_c`` is by construction
+    the head of this list, so ANY choice the autotuner records respects
+    the same budget the heuristic does."""
     wo = -(-w // stride)
     wp = w + max((wo - 1) * stride + k - w, 0) + stride - 1
-    for tc in range(min(c, 128), 0, -1):
-        if c % tc == 0 and _vmem_bytes(wp, wo, tc, k, itemsize) <= budget:
-            return tc
-    return 1
+    cands = [tc for tc in range(min(c, 128), 0, -1)
+             if c % tc == 0 and _vmem_bytes(wp, wo, tc, k, itemsize)
+             <= budget]
+    return cands[:limit] or [1]
 
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, k: int, wo: int, stride: int):

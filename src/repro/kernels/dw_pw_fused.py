@@ -143,17 +143,21 @@ def _row_chunk(ho: int, cap: int = 16) -> int:
 def dw_pw_xla(x: jax.Array, dw_w: jax.Array, dw_b: jax.Array,
               pw_w: jax.Array, pw_b: jax.Array,
               residual: jax.Array = None, *, stride: int = 1,
-              dw_relu: bool = True, relu: bool = True) -> jax.Array:
+              dw_relu: bool = True, relu: bool = True,
+              row_chunk: int = 0) -> jax.Array:
     """Pure-JAX twin: scan over output-row chunks; each chunk runs the
     depthwise on its (rows + halo) input slab and feeds the result
     straight into the pointwise matmul. Working set = one chunk; the
     full-height depthwise intermediate never materializes. Shards
-    cleanly under GSPMD (slices + matmuls only, batch dim untouched)."""
+    cleanly under GSPMD (slices + matmuls only, batch dim untouched).
+    ``row_chunk`` caps the chunk height (0 = the default 16); the
+    autotuner (core/tuning.py) searches it — numerics are identical at
+    any cap, only the working-set/step-count tradeoff moves."""
     n, h, w, c = x.shape
     k = dw_w.shape[0]
     co = pw_w.shape[-1]
     xp, ho, wo = pad_same_hw(x, k, stride)
-    hb = _row_chunk(ho)
+    hb = _row_chunk(ho, cap=row_chunk or 16)
     rows_in = (hb - 1) * stride + k       # input rows per chunk (with halo)
 
     from repro.models.layers import fdot

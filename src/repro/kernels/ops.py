@@ -57,6 +57,26 @@ def set_impl(impl: str) -> _ImplGuard:
     return _ImplGuard(prev)
 
 
+def set_tuning_cache(cache):
+    """Install a :class:`repro.core.tuning.TuningCache` consulted by
+    the dispatchers below for autotuned kernel knobs (block_c, block_k,
+    row_chunk). Knobs are read at TRACE time, so set the cache before
+    compiling. Returns a context-manager guard; ``None`` clears."""
+    from repro.core import tuning
+    return tuning.set_tuning_cache(cache)
+
+
+def _knob(op: str, in_shape, dtype, name: str, default, **fields):
+    """Autotuned-knob lookup against the active tuning cache (identity
+    default when no cache is installed — today's hard-coded behavior)."""
+    from repro.core import tuning
+    cache = tuning.current_tuning_cache()
+    if cache is None:
+        return default
+    key = tuning.kernel_key(op, in_shape, dtype, **fields)
+    return cache.knob(key, name, default)
+
+
 def sparse_matmul(x: jax.Array, sw) -> jax.Array:
     """x: (..., d_in) @ block-balanced SparseWeight -> (..., d_out)."""
     *lead, d_in = x.shape
@@ -132,8 +152,12 @@ def sparse_conv(x, sw, bias, *, k: int, stride: int = 1,
     assert c % bm == 0, (c, bm)
     if _IMPL == "pallas":
         from repro.kernels.sparse_conv import sparse_conv_pallas
+        bk = _knob("sconv", x.shape, x.dtype, "block_k", 1,
+                   k=k, s=stride, b=f"{bm}x{bn}K{n_k}", co=ob * bn)
+        if n_k % max(bk, 1):            # stale cache entry: K changed
+            bk = 1
         return sparse_conv_pallas(x, sw.vals, sw.idx, bias, residual, k=k,
-                                  stride=stride, relu=relu)
+                                  stride=stride, relu=relu, block_k=bk)
 
     # XLA path: lax.scan over the K surviving blocks per output column.
     # Each step gathers one shifted (ky, kx) window slice of the
@@ -196,8 +220,13 @@ def depthwise_conv(x, w, *, stride: int = 1):
     if _IMPL == "pallas":
         from repro.kernels.depthwise_conv import depthwise_conv_pallas
         # block_c=0: the kernel clamps the channel tile to its VMEM
-        # budget (the 112x112 MobileNet layers used to overflow at 128)
-        return depthwise_conv_pallas(x, w, stride=stride, block_c=0)
+        # budget (the 112x112 MobileNet layers used to overflow at 128);
+        # an autotuned cache overrides within the same budget lattice
+        tc = _knob("dw", x.shape, x.dtype, "block_c", 0,
+                   k=w.shape[0], s=stride)
+        if tc and x.shape[-1] % tc:     # stale cache entry: C changed
+            tc = 0
+        return depthwise_conv_pallas(x, w, stride=stride, block_c=tc)
     from repro.kernels.depthwise_conv import depthwise_conv_ref
     return depthwise_conv_ref(x, w, stride=stride)
 
@@ -216,5 +245,8 @@ def dw_pw_conv(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1,
         return dw_pw_pallas(x, dw_w, dw_b, pw_w, pw_b, residual,
                             stride=stride, dw_relu=dw_relu, relu=relu)
     from repro.kernels.dw_pw_fused import dw_pw_xla
+    hb = _knob("dwpw", x.shape, x.dtype, "row_chunk", 0,
+               k=dw_w.shape[1], s=stride, co=pw_w.shape[-1])
     return dw_pw_xla(x, dw_w, dw_b, pw_w, pw_b, residual,
-                     stride=stride, dw_relu=dw_relu, relu=relu)
+                     stride=stride, dw_relu=dw_relu, relu=relu,
+                     row_chunk=hb)

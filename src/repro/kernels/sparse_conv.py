@@ -73,8 +73,12 @@ def pad_same_hw(x, k: int, stride: int, *, overread: bool = False):
     return xp, ho, wo
 
 
-def _kernel(ky_ref, kx_ref, cb_ref, x_ref, vals_ref, b_ref, *rest,
-            n_k: int, wo: int, stride: int, relu: bool, has_res: bool):
+def _kernel(ky_ref, kx_ref, cb_ref, *refs,
+            n_steps: int, wo: int, stride: int, relu: bool,
+            has_res: bool, block_k: int):
+    x_refs = refs[:block_k]
+    vals_ref, b_ref = refs[block_k], refs[block_k + 1]
+    rest = refs[block_k + 2:]
     if has_res:
         res_ref, o_ref, acc_ref = rest
     else:
@@ -88,19 +92,23 @@ def _kernel(ky_ref, kx_ref, cb_ref, x_ref, vals_ref, b_ref, *rest,
 
     # kx shift: strided in-VMEM slice of the resident input row. The
     # ky/cb part of the gather already happened in the index_map (the
-    # DMA fetched the right HBM row/channel block).
-    kx = kx_ref[j, l]
-    row = x_ref[0, 0]                                           # (wp, bm)
-    win = jax.lax.dynamic_slice(row, (kx, 0),
-                                (wo * stride, row.shape[-1]))
-    win = win.reshape(wo, stride, win.shape[-1])[:, 0, :]       # (wo, bm)
-    acc_ref[...] += jnp.dot(
-        win.astype(jnp.float32),
-        vals_ref[0, 0].astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
+    # DMA fetched the right HBM row/channel block). With a K-tile
+    # (block_k > 1, the autotuner's knob) each grid step holds block_k
+    # gathered rows and retires block_k weight blocks into the same
+    # resident accumulator line — fewer grid steps, same arithmetic.
+    for t in range(block_k):
+        kx = kx_ref[j, l * block_k + t]
+        row = x_refs[t][0, 0]                                   # (wp, bm)
+        win = jax.lax.dynamic_slice(row, (kx, 0),
+                                    (wo * stride, row.shape[-1]))
+        win = win.reshape(wo, stride, win.shape[-1])[:, 0, :]   # (wo, bm)
+        acc_ref[...] += jnp.dot(
+            win.astype(jnp.float32),
+            vals_ref[0, t].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
 
-    @pl.when(l == n_k - 1)
+    @pl.when(l == n_steps - 1)
     def _flush():
         y = acc_ref[...] + b_ref[...].astype(jnp.float32)       # (wo, bn)
         if has_res:
@@ -114,46 +122,58 @@ def _kernel(ky_ref, kx_ref, cb_ref, x_ref, vals_ref, b_ref, *rest,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "stride", "relu",
-                                             "interpret"))
+                                             "block_k", "interpret"))
 def sparse_conv_pallas(x: jax.Array, vals: jax.Array, idx: jax.Array,
                        bias: jax.Array, residual: jax.Array = None, *,
-                       k: int, stride: int = 1,
-                       relu: bool = True, interpret: bool = True) -> jax.Array:
+                       k: int, stride: int = 1, relu: bool = True,
+                       block_k: int = 1,
+                       interpret: bool = True) -> jax.Array:
     """y[n, oy, ox, j*bn:+bn] = act(sum_l win(x; ky,kx,cb)[oy,ox] @ vals[j,l] + b).
 
     x: (N, H, W, C) NHWC; vals: (ob, K, bm, bn); idx: (ob, K) int32 flat
     HWIO block ids; bias: (ob*bn,). SAME padding. ``residual``
     (optional, (N, Ho, Wo, ob*bn)) is a fused skip tensor added in the
     K-1 flush epilogue before the activation (core/fusion.py residual
-    rule). ``interpret=True`` runs the kernel body on CPU (this
+    rule). ``block_k`` (autotuned, must divide K) is the K-tile: how
+    many weight blocks each grid step gathers and accumulates —
+    identical numerics at any value, fewer grid steps at larger ones.
+    ``interpret=True`` runs the kernel body on CPU (this
     container); on a real TPU pass interpret=False for the Mosaic path
     (pad Wo/bn to the (8, 128) tile there).
     """
     n, h, w, c = x.shape
     ob, n_k, bm, bn = vals.shape
     assert c % bm == 0, (c, bm)
+    bk = max(block_k, 1)
+    assert n_k % bk == 0, (n_k, bk)
     xp, ho, wo = pad_same_hw(x, k, stride, overread=True)
     wp = xp.shape[2]
     ky, kx, cb = conv_block_coords(idx.astype(jnp.int32), k, c, bm)
 
-    grid = (n, ho, ob, n_k)
+    n_steps = n_k // bk
+    grid = (n, ho, ob, n_steps)
     has_res = residual is not None
-    kernel = functools.partial(_kernel, n_k=n_k, wo=wo, stride=stride,
-                               relu=relu, has_res=has_res)
+    kernel = functools.partial(_kernel, n_steps=n_steps, wo=wo,
+                               stride=stride, relu=relu, has_res=has_res,
+                               block_k=bk)
     in_specs = [
         # H-block size 1 => the index map's H coordinate is an
         # absolute row: oy*stride + ky is the implicit-GEMM
-        # gather, computed from the prefetched stream.
+        # gather, computed from the prefetched stream. One spec per
+        # K-tile entry: step l DMAs the bk rows its weight blocks read.
         pl.BlockSpec(
             (1, 1, wp, bm),
-            lambda i, oy, j, l, ky, kx, cb:
-                (i, oy * stride + ky[j, l], 0, cb[j, l])),
-        pl.BlockSpec((1, 1, bm, bn),
+            lambda i, oy, j, l, ky, kx, cb, _t=t:
+                (i, oy * stride + ky[j, l * bk + _t], 0,
+                 cb[j, l * bk + _t]))
+        for t in range(bk)
+    ] + [
+        pl.BlockSpec((1, bk, bm, bn),
                      lambda i, oy, j, l, ky, kx, cb: (j, l, 0, 0)),
         pl.BlockSpec((1, bn),
                      lambda i, oy, j, l, ky, kx, cb: (0, j)),
     ]
-    operands = [ky, kx, cb, xp, vals, bias.reshape(1, ob * bn)]
+    operands = [ky, kx, cb] + [xp] * bk + [vals, bias.reshape(1, ob * bn)]
     if has_res:
         # skip line DMA'd only for the flush step's output block
         in_specs.append(pl.BlockSpec(

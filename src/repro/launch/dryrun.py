@@ -315,7 +315,8 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
                           n_microbatches: int = 8, batch: int = 16,
                           image_size: int = 64, placed: bool = True,
                           param_budget_frac=None, n_replicas: int = 1,
-                          verbose: bool = True) -> dict:
+                          verbose: bool = True, tuning_cache=None,
+                          calibrate: bool = False) -> dict:
     """``pipeline_cnn`` mode: lower + compile the heterogeneous CNN
     layer pipeline (shard_map over a stage axis) and extract what the
     LM cells extract — compile stats and per-collective HLO bytes. The
@@ -355,8 +356,24 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
     total_bytes = pytree_param_bytes(params)
     budget = (int(param_budget_frac * total_bytes)
               if param_budget_frac else None)
+    cache, model = None, "analytic"
+    if tuning_cache is not None or calibrate:
+        # profile-guided stage cuts: plan from a measured tuning cache
+        # (cold/missing cache = analytic plan bit-for-bit)
+        from repro.core import tuning
+        cache_path = tuning_cache if isinstance(tuning_cache, str) else None
+        cache = (tuning_cache if isinstance(tuning_cache, tuning.TuningCache)
+                 else tuning.TuningCache.load(cache_path)
+                 if cache_path else tuning.TuningCache())
+        if calibrate:
+            cache = tuning.calibrate(
+                cfg, params, (1, image_size, image_size, 3), cache=cache,
+                path=cache_path, verbose=verbose)
+        model = "measured"
+        tuning.set_tuning_cache(cache)
     plan = planner.plan_cnn_pipeline(cfg, params, n_stages,
-                                     max_stage_param_bytes=budget)
+                                     max_stage_param_bytes=budget,
+                                     model=model, tuning_cache=cache)
     s = plan["n_stages"]
     r = n_replicas
     imgs = jax.ShapeDtypeStruct((batch, image_size, image_size, 3),
@@ -454,6 +471,14 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, default=1,
                     help="pipeline-cnn: replicate the whole pipeline "
                          "across a data mesh axis (stage x data 2-D)")
+    ap.add_argument("--tuning-cache", type=str, default=None,
+                    metavar="PATH",
+                    help="pipeline-cnn: plan stages from this profiled "
+                         "tuning cache (model='measured'; missing file "
+                         "= cold cache = analytic plan)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="pipeline-cnn: profile every fused node on the "
+                         "live device and write --tuning-cache first")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
@@ -485,7 +510,8 @@ def main(argv=None):
             image_size=args.image_size,
             placed=not args.replicated_params,
             param_budget_frac=args.param_budget_frac,
-            n_replicas=args.replicas))
+            n_replicas=args.replicas,
+            tuning_cache=args.tuning_cache, calibrate=args.calibrate))
     else:
         results.append(run_cell(args.arch, args.shape,
                                 multi_pod=args.multi_pod,

@@ -94,13 +94,22 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
 
 def _plan_cnn_serving(arch: str, *, n_stages: int, n_replicas: int,
                       n_microbatches: int, param_budget_frac,
-                      auto_split: bool, seed: int):
+                      auto_split: bool, seed: int,
+                      tuning_cache=None, calibrate: bool = False,
+                      image_size: int = 64, verbose: bool = False):
     """Shared serving preamble (serve_cnn + CNNPipelineServer): init
     params, resolve the weight budget, and pick the (stages, replicas)
     split — the co-planner's when ``auto_split``, the caller's
     otherwise. One copy so the two entry points cannot drift.
-    Returns ``(cfg, params, plan, n_replicas, total_bytes)``."""
-    from repro.core import planner
+    Returns ``(cfg, params, plan, n_replicas, total_bytes)``.
+
+    Profile-guided planning: ``tuning_cache`` (a path or a TuningCache)
+    switches the planner to ``model="measured"`` over that cache's
+    profiled node times; ``calibrate=True`` first measures every fused
+    node on the live device at ``image_size`` (and writes the cache
+    back if a path was given). A missing/cold cache degrades to the
+    analytic plan bit-for-bit."""
+    from repro.core import planner, tuning
     from repro.core.costmodel import pytree_param_bytes
     from repro.models import cnn
     cfg = get_config(arch)
@@ -110,14 +119,31 @@ def _plan_cnn_serving(arch: str, *, n_stages: int, n_replicas: int,
     total_bytes = pytree_param_bytes(params)
     budget = (int(param_budget_frac * total_bytes)
               if param_budget_frac else None)
+    cache, model = None, "analytic"
+    if tuning_cache is not None or calibrate:
+        cache_path = tuning_cache if isinstance(tuning_cache, str) else None
+        cache = (tuning_cache if isinstance(tuning_cache, tuning.TuningCache)
+                 else tuning.TuningCache.load(cache_path)
+                 if cache_path else tuning.TuningCache())
+        if calibrate:
+            if verbose:
+                print(f"[serve] calibrating {arch} at {image_size}px "
+                      f"({len(cache)} cached entries)...")
+            cache = tuning.calibrate(
+                cfg, params, (1, image_size, image_size, 3), cache=cache,
+                path=cache_path, verbose=verbose)
+        model = "measured"
+        tuning.set_tuning_cache(cache)  # kernel knobs at trace time
     if auto_split:
         plan2d = planner.plan_cnn_pipeline_2d(
             cfg, params, len(jax.devices()),
-            n_microbatches=n_microbatches, max_stage_param_bytes=budget)
+            n_microbatches=n_microbatches, max_stage_param_bytes=budget,
+            model=model, tuning_cache=cache)
         plan, n_replicas = plan2d["plan"], plan2d["n_replicas"]
     else:
         plan = planner.plan_cnn_pipeline(cfg, params, n_stages,
-                                         max_stage_param_bytes=budget)
+                                         max_stage_param_bytes=budget,
+                                         model=model, tuning_cache=cache)
     return cfg, params, plan, n_replicas, total_bytes
 
 
@@ -125,7 +151,8 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
               n_stages: int = 4, image_size: int = 64, iters: int = 3,
               seed: int = 0, verbose: bool = True, placed=None,
               param_budget_frac=None, n_replicas: int = 1,
-              auto_split: bool = False):
+              auto_split: bool = False, tuning_cache=None,
+              calibrate: bool = False):
     """Batched image serving through the heterogeneous layer pipeline
     (``pipeline_cnn`` mode).
 
@@ -157,12 +184,23 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
     from repro.core import pipeline as pp
     cfg, params, plan, n_replicas, total_bytes = _plan_cnn_serving(
         arch, n_stages=n_stages, n_replicas=n_replicas,
-        n_microbatches=n_microbatches,
+        n_microbatches=n_microbatches or 8,
         param_budget_frac=param_budget_frac, auto_split=auto_split,
-        seed=seed)
+        seed=seed, tuning_cache=tuning_cache, calibrate=calibrate,
+        image_size=image_size, verbose=verbose)
     from repro.models import cnn
     s = plan["n_stages"]
     r = n_replicas
+    if not n_microbatches:
+        # n_microbatches=0: autotune the microbatch width from the
+        # plan's (measured or analytic) stage costs — the knee of the
+        # fill curve (core/tuning.autotune_microbatch)
+        from repro.core import tuning as _tuning
+        n_microbatches = _tuning.autotune_microbatch(
+            plan["stage_cost"], n_replicas=r,
+            cache=_tuning.current_tuning_cache(), arch=arch)
+        if verbose:
+            print(f"[serve] autotuned n_microbatches={n_microbatches}")
     use_placed = (len(jax.devices()) >= s * r) if placed is None else placed
     images = jax.random.normal(jax.random.PRNGKey(seed),
                                (batch, image_size, image_size, 3))
@@ -300,7 +338,8 @@ class CNNPipelineServer:
                  placed=None, param_budget_frac=None,
                  auto_split: bool = False, verbose: bool = False,
                  devices=None, injector=None, cfg=None, params=None,
-                 plan=None, param_buffer=None):
+                 plan=None, param_buffer=None, tuning_cache=None,
+                 calibrate: bool = False):
         from repro.core import pipeline as pp
         from repro.models import cnn
         if plan is not None:
@@ -318,7 +357,9 @@ class CNNPipelineServer:
                 # score with a generous stream length, not one batch
                 n_microbatches=32,
                 param_budget_frac=param_budget_frac,
-                auto_split=auto_split, seed=seed)
+                auto_split=auto_split, seed=seed,
+                tuning_cache=tuning_cache, calibrate=calibrate,
+                image_size=image_size, verbose=verbose)
         self.cfg = cfg
         self.n_stages = s = plan["n_stages"]
         self.n_replicas = r = n_replicas
@@ -681,7 +722,8 @@ def serve_cnn_continuous(arch: str, *, n_requests: int = 4,
                          image_size: int = 64, seed: int = 0,
                          placed=None, param_budget_frac=None,
                          auto_split: bool = False,
-                         verbose: bool = True) -> dict:
+                         verbose: bool = True, tuning_cache=None,
+                         calibrate: bool = False) -> dict:
     """Continuous-batching serving run: K back-to-back requests through
     one CNNPipelineServer (the pipeline never drains between them),
     returning the per-request logits plus throughput and the
@@ -693,7 +735,8 @@ def serve_cnn_continuous(arch: str, *, n_requests: int = 4,
                             n_replicas=n_replicas, image_size=image_size,
                             seed=seed, placed=placed,
                             param_budget_frac=param_budget_frac,
-                            auto_split=auto_split, verbose=False)
+                            auto_split=auto_split, verbose=False,
+                            tuning_cache=tuning_cache, calibrate=calibrate)
     # warm the jitted tick before the timed stream (compile would
     # otherwise swamp the measured im/s)
     warm = srv.submit(np.zeros((mb_size, image_size, image_size, 3),
@@ -762,7 +805,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--microbatches", type=int, default=4,
+                    help="microbatches per batch (0 = autotune the "
+                         "width from the plan's stage costs)")
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--image-size", type=int, default=64)
     ap.add_argument("--placed", action="store_true", default=None,
@@ -798,6 +843,15 @@ def main(argv=None):
     ap.add_argument("--fail-at-tick", type=int, default=None,
                     help="tier mode: tick at which the injected "
                          "replica failure fires")
+    ap.add_argument("--tuning-cache", type=str, default=None,
+                    metavar="PATH",
+                    help="plan stages from this profiled tuning cache "
+                         "(model='measured'); missing file = cold cache "
+                         "= analytic plan")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="profile every fused node on the live device "
+                         "first and write the results to --tuning-cache "
+                         "(then plan from them)")
     args = ap.parse_args(argv)
     if get_config(args.arch).family == "cnn":
         if args.tier:
@@ -815,7 +869,8 @@ def main(argv=None):
                 n_replicas=args.replicas, image_size=args.image_size,
                 placed=args.placed,
                 param_budget_frac=args.param_budget_frac,
-                auto_split=args.auto_split)
+                auto_split=args.auto_split,
+                tuning_cache=args.tuning_cache, calibrate=args.calibrate)
         else:
             serve_cnn(args.arch, batch=args.batch,
                       n_microbatches=args.microbatches,
@@ -823,7 +878,9 @@ def main(argv=None):
                       placed=args.placed,
                       param_budget_frac=args.param_budget_frac,
                       n_replicas=args.replicas,
-                      auto_split=args.auto_split)
+                      auto_split=args.auto_split,
+                      tuning_cache=args.tuning_cache,
+                      calibrate=args.calibrate)
     else:
         serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
               gen_tokens=args.gen, use_reduced=args.reduced)

@@ -271,7 +271,16 @@ def run_node(node: ConvSpec, params, *args):
     res = args[1] if (node.residual_from and node.kind != "add") else None
     if node.kind == "conv":
         p = params[conv_part(node).name]
-        return conv2d(x, p, node, relu=node.relu, residual=res)
+        y = conv2d(x, p, node, relu=node.relu, residual=res)
+        if node.pool_k:
+            # fused pooling epilogue (core/fusion.py R4): same op the
+            # standalone maxpool node runs, applied in-node so the
+            # pre-pool tensor never crosses a node/stage boundary
+            y = lax.reduce_window(y, -jnp.inf, lax.max,
+                                  (1, node.pool_k, node.pool_k, 1),
+                                  (1, node.pool_stride, node.pool_stride, 1),
+                                  "SAME")
+        return y
     if node.kind == "dw_pw":
         return _fused_dw_pw(x, params, node, residual=res)
     if node.kind == "dw":

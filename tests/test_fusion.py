@@ -44,8 +44,16 @@ def test_fused_graph_structure():
     assert len(resid) == 16
     assert all(n.relu for n in resid)            # the add's relu moved in
     assert "add" not in kinds and "avgpool" not in kinds
+    assert "maxpool" not in kinds                # stem pool fused (R4)
     assert kinds.count("avgpool_fc") == 1
-    assert len(g.nodes) == 55                    # 72 - 16 adds - avgpool
+    assert len(g.nodes) == 54        # 72 - 16 adds - avgpool - maxpool
+    # the pooled stem: conv1 + maxpool as ONE conv node with a pool
+    # epilogue, post-pool geometry, pre-pool arithmetic
+    stem = next(n for n in g.nodes if n.pool_k)
+    assert stem.kind == "conv" and stem.name == "pool1"
+    assert (stem.pool_k, stem.pool_stride) == (3, 2)
+    assert stem.out_hw == stem.conv_out_hw // 2  # pool halves the grid
+    assert [p.name for p in stem.parts] == ["conv1", "pool1"]
 
     g = fused_graph_for("mobilenet_v1")
     assert [n.kind for n in g.nodes].count("dw_pw") == 13
@@ -76,6 +84,24 @@ def test_fusion_legality_multi_consumer_blocks_fusion():
     # but b (single-consumed, linear) still folds into the add
     assert [n.kind for n in g.nodes] == ["dw", "conv"]
     assert g.nodes[1].residual_from == "a"
+
+
+def test_fusion_legality_multi_consumer_blocks_pool_fusion():
+    """A conv output read by a second consumer must survive as a node
+    output, so the conv -> maxpool epilogue fusion (R4) is illegal."""
+    from repro.core.graph import ConvSpec, LayerGraph
+    specs = [
+        ConvSpec("a", "conv", 8, 8, 3, 1, 16),
+        ConvSpec("p", "maxpool", 8, 8, 3, 2, 16, input_from="a"),
+        # second consumer of "a": a branch off the PRE-pool value
+        ConvSpec("b", "conv", 8, 8, 1, 1, 16, input_from="a"),
+    ]
+    g = fuse_graph(LayerGraph.from_specs("t", specs))
+    assert "maxpool" in [n.kind for n in g.nodes]
+    # single-consumer case DOES fuse
+    g2 = fuse_graph(LayerGraph.from_specs("t", specs[:2]))
+    assert [n.kind for n in g2.nodes] == ["conv"]
+    assert g2.nodes[0].pool_k == 3 and g2.nodes[0].name == "p"
 
 
 def test_fusion_idempotent_and_valid():
