@@ -72,6 +72,12 @@ GATE = {
     # fails; scheduler jitter does not)
     "serving_latency_p50_s": ("lower", 1.00),
     "serving_latency_p99_s": ("lower", 1.00),
+    # cross-process recovery: kill-to-first-recovered-emit wall clock
+    # (worker respawn + recompile dominate on shared runners) —
+    # direction-only, very loose. Missed-heartbeat count stays
+    # unGated: SIGKILL is usually detected via waitpid/EOF before any
+    # heartbeat is missed, so its baseline is legitimately 0.
+    "serving_recovery_s": ("lower", 1.00),
 }
 
 
@@ -117,6 +123,10 @@ def _headline(modules: dict) -> dict:
         out["serving_steady_bubble"] = srv["serving_steady_bubble"]
         out["serving_latency_p50_s"] = srv.get("serving_latency_p50_s")
         out["serving_latency_p99_s"] = srv.get("serving_latency_p99_s")
+    if "serving_recovery_s" in srv:
+        out["serving_recovery_s"] = srv["serving_recovery_s"]
+        out["serving_recovery_missed_heartbeats"] = \
+            srv.get("serving_recovery_missed_heartbeats")
     return out
 
 

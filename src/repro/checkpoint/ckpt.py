@@ -5,11 +5,23 @@ Layout:  <dir>/step_<n>/shard_<host>.npz + MANIFEST.json
   restarts as long as the config matches);
 - writes go to ``.tmp-step_<n>`` then atomically rename — a failure
   mid-write never corrupts the latest checkpoint;
+- the manifest records each shard's byte count and CRC32; ``restore``
+  verifies them BEFORE parsing, so a torn/truncated shard (host died
+  mid-``os.replace`` storm, disk full, cosmic bit rot) surfaces as a
+  typed :class:`CheckpointCorruptError` instead of garbage weights or
+  a random ``zipfile`` traceback poisoning the restart path;
 - ``save_async`` runs serialization off the training thread (overlap
   with the next step's compute, the standard large-scale trick);
 - restore re-places leaves onto the *current* mesh via device_put with
   the template's shardings, so the same checkpoint restores onto a
   different topology (elastic restart).
+
+The serving tier's supervisor ledger (``save_ledger``/``load_ledger``)
+rides on the same guarantees with a pointer-swap twist: the payload is
+written to a content-addressed file first, then a one-file JSON
+pointer (naming the payload + its checksum) is atomically replaced —
+a crash between the two writes leaves the pointer at the previous
+intact ledger, never at a torn one.
 """
 from __future__ import annotations
 
@@ -18,12 +30,31 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _KEYSEP = "|"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint/ledger file failed validation (truncated, checksum
+    mismatch, or unparseable): the caller must treat it as ABSENT or
+    pick an older step — never load it as state."""
+
+
+def _file_crc(path: str) -> tuple[int, int]:
+    """(crc32, nbytes) of a file, streamed."""
+    crc, n = 0, 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                return crc & 0xFFFFFFFF, n
+            crc = zlib.crc32(chunk, crc)
+            n += len(chunk)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -45,10 +76,14 @@ def save(tree, directory: str, step: int, *, host: int = 0,
     tmp = os.path.join(directory, f".tmp-step_{step:08d}-{host}")
     os.makedirs(tmp, exist_ok=True)
     arrs = _flatten(tree)
-    np.savez(os.path.join(tmp, f"shard_{host}.npz"), **arrs)
+    shard = os.path.join(tmp, f"shard_{host}.npz")
+    np.savez(shard, **arrs)
+    crc, nbytes = _file_crc(shard)
     with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
         json.dump({"step": step, "n_leaves": len(arrs),
-                   "time": time.time()}, f)
+                   "time": time.time(),
+                   "shards": {f"shard_{host}.npz":
+                              {"crc32": crc, "nbytes": nbytes}}}, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
@@ -97,8 +132,17 @@ def restore(template, directory: str, step: Optional[int] = None, *,
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
-    path = os.path.join(directory, f"step_{step:08d}", f"shard_{host}.npz")
-    data = np.load(path)
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    path = os.path.join(step_dir, f"shard_{host}.npz")
+    _verify_shard(step_dir, f"shard_{host}.npz")
+    try:
+        data = np.load(path)
+        data.files                        # force the zip directory read
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint shard {path} is unreadable ({e!r}); the file "
+            "passed its size/CRC check, so the manifest itself is "
+            "stale — treat this step as lost") from e
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in flat:
@@ -112,7 +156,125 @@ def restore(template, directory: str, step: Optional[int] = None, *,
     return jax.tree_util.tree_unflatten(treedef, leaves), step
 
 
+def _verify_shard(step_dir: str, shard_name: str):
+    """Validate one shard against the step's manifest: size first
+    (cheap truncation check), then CRC32. Any mismatch — or a missing
+    or unparseable manifest — raises :class:`CheckpointCorruptError`."""
+    manifest_path = os.path.join(step_dir, "MANIFEST.json")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except FileNotFoundError as e:
+        raise CheckpointCorruptError(
+            f"{step_dir} has no MANIFEST.json — a torn checkpoint "
+            "directory (the atomic rename never completed)") from e
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable MANIFEST.json in {step_dir}: {e!r}") from e
+    expect = (manifest.get("shards") or {}).get(shard_name)
+    if expect is None:
+        # pre-hardening checkpoint (no per-shard checksums recorded):
+        # nothing to verify against — np.load's own failure modes are
+        # wrapped by the caller
+        return
+    path = os.path.join(step_dir, shard_name)
+    try:
+        nbytes = os.path.getsize(path)
+    except OSError as e:
+        raise CheckpointCorruptError(
+            f"missing checkpoint shard {path}") from e
+    if nbytes != expect["nbytes"]:
+        raise CheckpointCorruptError(
+            f"checkpoint shard {path} is {nbytes} bytes, manifest "
+            f"says {expect['nbytes']} — truncated write")
+    crc, _ = _file_crc(path)
+    if crc != expect["crc32"]:
+        raise CheckpointCorruptError(
+            f"checkpoint shard {path} CRC32 0x{crc:08x} != manifest "
+            f"0x{expect['crc32']:08x} — corrupt contents")
+
+
 def _gc(directory: str, keep: int):
     steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
     for d in steps[:-keep]:
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+# --- serving-tier supervisor ledger ------------------------------------------
+
+_LEDGER_PTR = "ledger.json"
+
+
+def save_ledger(directory: str, meta: dict, arrays: dict) -> str:
+    """Atomically persist the serving supervisor's replay ledger:
+    ``meta`` (JSON-able request bookkeeping) + ``arrays`` (the
+    undelivered microbatch chunks / delivered logits).
+
+    Crash-safe by pointer swap: the payload lands in a
+    content-addressed ``ledger-<crc>.npz`` first (temp +
+    ``os.replace``), then the one-file JSON pointer naming it is
+    atomically replaced. A crash at ANY instant leaves the pointer at
+    a complete, checksummed payload — old or new, never torn."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f".tmp-ledger-{os.getpid()}.npz")
+    with open(tmp, "wb") as f:
+        np.savez(f, **{k: np.asarray(v) for k, v in arrays.items()})
+    crc, nbytes = _file_crc(tmp)
+    payload = f"ledger-{crc:08x}-{nbytes}.npz"
+    os.replace(tmp, os.path.join(directory, payload))
+    ptr_tmp = os.path.join(directory, f".tmp-ptr-{os.getpid()}")
+    with open(ptr_tmp, "w") as f:
+        json.dump({"payload": payload, "crc32": crc, "nbytes": nbytes,
+                   "time": time.time(), "meta": meta}, f)
+    ptr = os.path.join(directory, _LEDGER_PTR)
+    os.replace(ptr_tmp, ptr)
+    # GC payloads the pointer no longer references
+    for name in os.listdir(directory):
+        if name.startswith("ledger-") and name.endswith(".npz") \
+                and name != payload:
+            try:
+                os.remove(os.path.join(directory, name))
+            except OSError:
+                pass
+    return ptr
+
+
+def load_ledger(directory: str) -> Optional[tuple[dict, dict]]:
+    """Load the supervisor ledger: ``(meta, arrays)``, or ``None``
+    when no ledger was ever written. Validation failures (torn
+    pointer, missing/truncated/corrupt payload) raise
+    :class:`CheckpointCorruptError` — resuming from a corrupt ledger
+    must be a loud decision, not silent garbage work."""
+    ptr = os.path.join(directory, _LEDGER_PTR)
+    if not os.path.exists(ptr):
+        return None
+    try:
+        with open(ptr) as f:
+            rec = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable ledger pointer {ptr}: {e!r}") from e
+    path = os.path.join(directory, rec["payload"])
+    try:
+        nbytes = os.path.getsize(path)
+    except OSError as e:
+        raise CheckpointCorruptError(
+            f"ledger payload {path} named by the pointer is "
+            "missing") from e
+    if nbytes != rec["nbytes"]:
+        raise CheckpointCorruptError(
+            f"ledger payload {path} is {nbytes} bytes, pointer says "
+            f"{rec['nbytes']} — truncated write")
+    crc, _ = _file_crc(path)
+    if crc != rec["crc32"]:
+        raise CheckpointCorruptError(
+            f"ledger payload {path} CRC32 0x{crc:08x} != pointer "
+            f"0x{rec['crc32']:08x} — corrupt contents")
+    try:
+        with np.load(path) as data:
+            arrays = {k: data[k] for k in data.files}
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"ledger payload {path} unparseable despite a clean "
+            f"checksum: {e!r}") from e
+    return rec["meta"], arrays

@@ -773,28 +773,55 @@ def serve_cnn_tier(arch: str, *, n_requests: int = 8, batch: int = 8,
                    mb_size: int = 2, n_stages: int = 4,
                    n_replicas: int = 2, image_size: int = 64,
                    seed: int = 0, fail_replica=None, fail_at_tick=None,
-                   verbose: bool = True) -> dict:
+                   procs: int = 0, kill_worker=None,
+                   kill_at_tick: int = 1,
+                   heartbeat_interval_s: float = 0.1,
+                   suspect_after_s: float = 0.5,
+                   dead_after_s: float = 10.0,
+                   ledger_dir=None, verbose: bool = True) -> dict:
     """Fault-tolerant serving demo: K requests through a ServingTier
     of R pipeline replicas, optionally killing one mid-stream with a
     FailureInjector (``--fail-replica R --fail-at-tick T``) to watch
-    drain-and-respawn keep every request's logits intact."""
+    drain-and-respawn keep every request's logits intact.
+
+    ``procs > 0`` promotes the tier to OS-process replica workers
+    (:class:`~repro.runtime.tier.ProcessServingTier`): real heartbeat
+    liveness, crash-safe framed transport, and — with ``--kill-worker
+    W`` — a genuine mid-tick ``SIGKILL`` of worker W at serving tick
+    ``--kill-at-tick``, recovered bitwise by supervisor-side replay."""
     from repro.runtime.fault import FailureInjector
-    from repro.runtime.tier import ServingTier
-    injectors = {}
-    if fail_replica is not None and fail_at_tick is not None:
-        injectors[fail_replica] = FailureInjector(
-            fail_at_steps=(fail_at_tick,))
-    tier = ServingTier(arch, n_replicas=n_replicas, n_stages=n_stages,
-                       mb_size=mb_size, image_size=image_size,
-                       seed=seed, injectors=injectors, verbose=verbose)
+    from repro.runtime.tier import ProcessServingTier, ServingTier
+    if procs > 0:
+        hooks = {}
+        if kill_worker is not None:
+            hooks[kill_worker] = {"kill_at_tick": kill_at_tick}
+        tier = ProcessServingTier(
+            arch, n_procs=procs, n_stages=n_stages, mb_size=mb_size,
+            image_size=image_size, seed=seed, worker_hooks=hooks,
+            heartbeat_interval_s=heartbeat_interval_s,
+            suspect_after_s=suspect_after_s, dead_after_s=dead_after_s,
+            ledger_dir=ledger_dir, verbose=verbose)
+    else:
+        injectors = {}
+        if fail_replica is not None and fail_at_tick is not None:
+            injectors[fail_replica] = FailureInjector(
+                fail_at_steps=(fail_at_tick,))
+        tier = ServingTier(arch, n_replicas=n_replicas,
+                           n_stages=n_stages, mb_size=mb_size,
+                           image_size=image_size, seed=seed,
+                           injectors=injectors, verbose=verbose)
     key = jax.random.PRNGKey(seed + 1)
     rids = []
     for _ in range(n_requests):
         key, sub = jax.random.split(key)
         imgs = jax.random.normal(sub, (batch, image_size, image_size, 3))
         rids.append(tier.submit(np.asarray(imgs)))
-    metrics = tier.run()
-    metrics["logits"] = [tier.results(r) for r in rids]
+    try:
+        metrics = tier.run()
+        metrics["logits"] = [tier.results(r) for r in rids]
+    finally:
+        if procs > 0:
+            tier.close()
     return metrics
 
 
@@ -843,6 +870,30 @@ def main(argv=None):
     ap.add_argument("--fail-at-tick", type=int, default=None,
                     help="tier mode: tick at which the injected "
                          "replica failure fires")
+    ap.add_argument("--procs", type=int, default=0,
+                    help="tier mode: serve through THIS many OS-"
+                         "process replica workers (heartbeat "
+                         "liveness + crash-safe transport) instead "
+                         "of in-process replicas")
+    ap.add_argument("--kill-worker", type=int, default=None,
+                    help="procs mode: worker index that SIGKILLs "
+                         "itself mid-tick (drain-and-respawn demo)")
+    ap.add_argument("--kill-at-tick", type=int, default=1,
+                    help="procs mode: serving tick at which "
+                         "--kill-worker fires")
+    ap.add_argument("--heartbeat-interval", type=float, default=0.1,
+                    help="procs mode: worker heartbeat period (s)")
+    ap.add_argument("--suspect-after", type=float, default=0.5,
+                    help="procs mode: silence that flags a worker as "
+                         "a straggler (s)")
+    ap.add_argument("--dead-after", type=float, default=10.0,
+                    help="procs mode: silence/stall that declares a "
+                         "worker dead (s; must exceed 2x the "
+                         "heartbeat interval)")
+    ap.add_argument("--ledger-dir", type=str, default=None,
+                    help="procs mode: persist the supervisor replay "
+                         "ledger here (a restarted supervisor "
+                         "resumes the stream)")
     ap.add_argument("--tuning-cache", type=str, default=None,
                     metavar="PATH",
                     help="plan stages from this profiled tuning cache "
@@ -854,14 +905,20 @@ def main(argv=None):
                          "(then plan from them)")
     args = ap.parse_args(argv)
     if get_config(args.arch).family == "cnn":
-        if args.tier:
+        if args.tier or args.procs:
             serve_cnn_tier(
                 args.arch, n_requests=args.requests, batch=args.batch,
                 mb_size=args.mb_size, n_stages=args.stages,
                 n_replicas=max(args.replicas, 2),
                 image_size=args.image_size,
                 fail_replica=args.fail_replica,
-                fail_at_tick=args.fail_at_tick)
+                fail_at_tick=args.fail_at_tick,
+                procs=args.procs, kill_worker=args.kill_worker,
+                kill_at_tick=args.kill_at_tick,
+                heartbeat_interval_s=args.heartbeat_interval,
+                suspect_after_s=args.suspect_after,
+                dead_after_s=args.dead_after,
+                ledger_dir=args.ledger_dir)
         elif args.continuous:
             serve_cnn_continuous(
                 args.arch, n_requests=args.requests, batch=args.batch,

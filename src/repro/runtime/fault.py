@@ -119,6 +119,111 @@ class StragglerDetector:
         return slow
 
 
+# --- heartbeat failure detection (cross-process serving tier) ---------------
+
+def validate_heartbeat_config(interval_s: float, suspect_after_s: float,
+                              dead_after_s: float) -> None:
+    """Loud construction-time validation of the liveness thresholds.
+
+    The invariants are the ones that keep the detector sound:
+    ``dead_after_s`` must exceed **2x the heartbeat interval** (below
+    that, one scheduling hiccup on a healthy worker reads as death and
+    the tier respawn-storms itself), and the suspect (straggler)
+    threshold must sit strictly between the interval and the death
+    bound — otherwise slow and dead are indistinguishable and a
+    SIGSTOP'd worker would be declared dead instead of flagged."""
+    if interval_s <= 0:
+        raise ValueError(
+            f"heartbeat_interval_s must be > 0, got {interval_s}")
+    if suspect_after_s < interval_s:
+        raise ValueError(
+            f"suspect_after_s ({suspect_after_s}) must be >= the "
+            f"heartbeat interval ({interval_s}): a worker cannot be "
+            "suspected faster than it is required to beat")
+    if dead_after_s <= 2 * interval_s:
+        raise ValueError(
+            f"dead_after_s ({dead_after_s}) must exceed 2x the "
+            f"heartbeat interval (2x{interval_s} = {2 * interval_s}): "
+            "anything tighter declares healthy workers dead on a "
+            "single missed beat")
+    if dead_after_s <= suspect_after_s:
+        raise ValueError(
+            f"dead_after_s ({dead_after_s}) must exceed "
+            f"suspect_after_s ({suspect_after_s}): the straggler band "
+            "must be non-empty, or slow == dead")
+
+
+class FailureDetector:
+    """Timeout-band failure detector over worker heartbeats: the
+    supervisor-side half of the cross-process liveness protocol.
+
+    Workers emit ``(heartbeat, progress)`` on an interval; the
+    supervisor feeds each into :meth:`beat` and classifies via
+    :meth:`state`:
+
+    - ``alive``   — beating, and (when busy) making tick progress;
+    - ``suspect`` — silent for ``suspect_after_s`` (a SIGSTOP'd or
+      overloaded worker: the router deprioritizes it — the straggler
+      path), or beating but tick-stalled that long (wedged-but-alive);
+    - ``dead``    — silent or progress-stalled past ``dead_after_s``
+      (SIGKILL'd, OOM'd, or hard-wedged: drain-and-respawn).
+
+    Distinguishing *slow* from *dead* is the whole point: declaring a
+    straggler dead loses its in-flight work for nothing, while waiting
+    forever on a corpse stalls the stream. The two thresholds bound
+    both mistakes, and :func:`validate_heartbeat_config` keeps them
+    ordered."""
+
+    def __init__(self, *, interval_s: float = 0.1,
+                 suspect_after_s: Optional[float] = None,
+                 dead_after_s: Optional[float] = None):
+        if suspect_after_s is None:
+            suspect_after_s = 4.0 * interval_s
+        if dead_after_s is None:
+            dead_after_s = 25.0 * interval_s
+        validate_heartbeat_config(interval_s, suspect_after_s,
+                                  dead_after_s)
+        self.interval_s = interval_s
+        self.suspect_after_s = suspect_after_s
+        self.dead_after_s = dead_after_s
+        self._last_beat: dict = {}
+        self._last_progress: dict = {}      # key -> (ticks, t)
+
+    def reset(self, key, now: float):
+        """(Re)arm a worker's liveness clock — called when it reports
+        ready (spawn and every respawn)."""
+        self._last_beat[key] = now
+        self._last_progress[key] = (-1, now)
+
+    def beat(self, key, now: float, progress: int):
+        """Record one heartbeat carrying the worker's last completed
+        tick count."""
+        self._last_beat[key] = now
+        last = self._last_progress.get(key)
+        if last is None or progress > last[0]:
+            self._last_progress[key] = (progress, now)
+
+    def silent_for(self, key, now: float) -> float:
+        last = self._last_beat.get(key)
+        return 0.0 if last is None else max(0.0, now - last)
+
+    def missed(self, key, now: float) -> int:
+        """Whole heartbeat intervals elapsed since the last beat."""
+        return int(self.silent_for(key, now) / self.interval_s)
+
+    def state(self, key, now: float, *, busy: bool = True) -> str:
+        silent = self.silent_for(key, now)
+        stalled = 0.0
+        if busy and key in self._last_progress:
+            stalled = max(0.0, now - self._last_progress[key][1])
+        worst = max(silent, stalled)
+        if worst > self.dead_after_s:
+            return "dead"
+        if worst > self.suspect_after_s:
+            return "suspect"
+        return "alive"
+
+
 # --- elastic re-meshing ------------------------------------------------------
 
 def remesh(tree, old_mesh, new_mesh, spec_fn):

@@ -46,6 +46,13 @@ exact logits of the undisturbed stream.
 """
 from __future__ import annotations
 
+import os
+import select
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -53,7 +60,8 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.runtime.fault import StragglerDetector
+from repro.runtime import transport
+from repro.runtime.fault import FailureDetector, StragglerDetector
 
 
 # --- typed serving errors ----------------------------------------------------
@@ -219,104 +227,39 @@ class AdmissionQueue:
         return n
 
 
-# --- replica workers ---------------------------------------------------------
+# --- shared tier core (bookkeeping + recovery, worker-type agnostic) ---------
 
-@dataclass
-class ReplicaWorker:
-    """One pipeline replica: the failure domain the tier tracks."""
-    idx: int
-    server: Any
-    devices: Optional[list] = None
-    permanent_dead: bool = False
-    straggler: bool = False
-    failures: int = 0
-    consecutive_failures: int = 0
-    unavailable_until: float = 0.0
-    last_heartbeat: float = 0.0
-    last_error: Optional[BaseException] = None
-    outstanding: dict = field(default_factory=dict)   # key -> WorkItem
+class _TierBase:
+    """Everything the serving tier does that does NOT depend on how a
+    replica runs: request intake and microbatch splitting, delivery
+    accounting, typed request failure, deadline/timeout sweeps,
+    recovered-work re-enqueue with retry bounds, and full-jitter
+    respawn backoff. :class:`ServingTier` (in-process replicas) and
+    :class:`ProcessServingTier` (OS-process replicas) both inherit
+    this, so the request-facing semantics are one implementation —
+    only the fault domain differs.
 
-    @property
-    def alive(self) -> bool:
-        return not self.permanent_dead
+    Subclass hooks: ``self.workers`` (objects with ``outstanding`` and
+    ``alive``) and ``_purge_worker(w, rid)`` (drop one request's queued
+    work inside the replica)."""
 
-    def available(self, now: float) -> bool:
-        return self.alive and now >= self.unavailable_until
-
-
-class ServingTier:
-    """Front-end over N :class:`~repro.launch.serve.CNNPipelineServer`
-    replica workers: deadline-aware routing, health tracking, and
-    drain-and-respawn recovery. See the module docstring for the fault
-    model; DESIGN.md §7 records the wire contract."""
-
-    def __init__(self, arch: str, *, n_replicas: int = 2,
-                 n_stages: int = 4, mb_size: int = 2,
-                 image_size: int = 64, seed: int = 0,
-                 placed: Optional[bool] = None, devices=None,
-                 auto_split: bool = False,
-                 param_budget_frac: Optional[float] = None,
-                 max_queue_per_tenant: Optional[int] = None,
-                 request_timeout_s: Optional[float] = None,
-                 max_retries: int = 2, max_respawns: int = 3,
-                 backoff_base_s: float = 0.05,
-                 max_worker_queue: int = 2,
-                 straggler_threshold: float = 2.0,
-                 heartbeat_timeout_s: float = 30.0,
-                 injectors: Optional[dict] = None,
-                 clock: Callable[[], float] = time.monotonic,
-                 sleep: Callable[[float], None] = time.sleep,
-                 verbose: bool = False):
-        import jax
-        from repro.configs import get_config
-        from repro.core import planner
-        from repro.core.costmodel import pytree_param_bytes
-        from repro.models import cnn
-        cfg = get_config(arch)
-        if cfg.family != "cnn":
-            raise ValueError(f"{arch} is not a CNN arch")
-        self.arch = arch
-        self.cfg = cfg
-        self.params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
-        self._budget = (int(param_budget_frac *
-                            pytree_param_bytes(self.params))
-                        if param_budget_frac else None)
-        self._pool = list(devices) if devices is not None \
-            else list(jax.devices())
-        if auto_split:
-            plan2d = planner.plan_cnn_pipeline_2d(
-                cfg, self.params, len(self._pool), n_microbatches=32,
-                max_stage_param_bytes=self._budget)
-            self.plan, n_replicas = plan2d["plan"], plan2d["n_replicas"]
-        else:
-            self.plan = planner.plan_cnn_pipeline(
-                cfg, self.params, n_stages,
-                max_stage_param_bytes=self._budget)
-        s = self.plan["n_stages"]
-        self.mb_size = mb_size
-        self.image_size = image_size
-        self.seed = seed
-        self.placed = (len(self._pool) >= s * n_replicas) \
-            if placed is None else placed
+    def _init_bookkeeping(self, *, max_queue_per_tenant,
+                          request_timeout_s, max_retries,
+                          backoff_base_s, backoff_max_s, jitter_seed,
+                          clock, sleep, verbose):
+        if backoff_base_s < 0 or backoff_max_s < 0:
+            raise ValueError("backoff_base_s and backoff_max_s must "
+                             f"be >= 0, got {backoff_base_s}/"
+                             f"{backoff_max_s}")
         self.max_queue_per_tenant = max_queue_per_tenant
         self.request_timeout_s = request_timeout_s
         self.max_retries = max_retries
-        self.max_respawns = max_respawns
         self.backoff_base_s = backoff_base_s
-        self.max_worker_queue = max_worker_queue
-        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.backoff_max_s = backoff_max_s
         self.verbose = verbose
         self._clock = clock
         self._sleep = sleep
-        self.detector = StragglerDetector(threshold=straggler_threshold)
         self.queue = AdmissionQueue(max_per_tenant=max_queue_per_tenant)
-        self.workers: list[ReplicaWorker] = []
-        injectors = injectors or {}
-        for r in range(n_replicas):
-            devs = (self._pool[r * s:(r + 1) * s] if self.placed
-                    else None)
-            self._spawn_worker(devs, injector=injectors.get(r))
-        # request bookkeeping
         self._requests: dict[int, ImageRequest] = {}
         self._results: dict[int, list] = {}
         self._pending: dict[int, int] = {}
@@ -324,30 +267,16 @@ class ServingTier:
         self._completed: list[int] = []
         self._next_rid = 0
         self._next_seq = 0
-        # fleet counters
         self.respawns = 0
         self.recovered_microbatches = 0
         self.retried_microbatches = 0
-
-    # -- worker construction -------------------------------------------------
-
-    def _spawn_worker(self, devs, *, injector=None,
-                      param_buffer=None) -> ReplicaWorker:
-        from repro.launch.serve import CNNPipelineServer
-        idx = len(self.workers)
-        server = CNNPipelineServer(
-            self.arch, mb_size=self.mb_size,
-            image_size=self.image_size, seed=self.seed,
-            placed=self.placed, devices=devs, cfg=self.cfg,
-            params=self.params, plan=self.plan, injector=injector,
-            param_buffer=param_buffer)
-        w = ReplicaWorker(idx=idx, server=server,
-                          devices=list(devs) if devs else None,
-                          last_heartbeat=self._clock())
-        server.on_result = lambda key, logits, _w=w: \
-            self._deliver(_w, key, logits)
-        self.workers.append(w)
-        return w
+        # full-jitter backoff randomness: seeded so a test run is
+        # reproducible, distinct per tier instance via the seed
+        self._rng = np.random.default_rng(jitter_seed)
+        # recovery-latency accounting: key -> clock() at requeue; the
+        # delta to its (re)delivery is the per-microbatch recovery time
+        self._recover_marks: dict = {}
+        self.recovery_times: list[float] = []
 
     # -- request intake ------------------------------------------------------
 
@@ -394,16 +323,25 @@ class ServingTier:
 
     # -- delivery + request failure ------------------------------------------
 
-    def _deliver(self, w: ReplicaWorker, key, logits):
+    def _deliver(self, w, key, logits):
         w.outstanding.pop(key, None)
         rid, mb = key
         if rid in self._errors or rid not in self._pending:
             return                    # shed/cancelled: drop late result
+        if self._results[rid][mb] is not None:
+            return                    # duplicate (drained + replayed —
+            #                           same bits either way)
         self._results[rid][mb] = logits
+        mark = self._recover_marks.pop(key, None)
+        if mark is not None:
+            self.recovery_times.append(self._clock() - mark)
         self._pending[rid] -= 1
         if self._pending[rid] == 0:
             self._requests[rid].done_at = self._clock()
             self._completed.append(rid)
+
+    def _purge_worker(self, w, rid: int):
+        raise NotImplementedError
 
     def _fail_request(self, rid: int, err: TierError):
         if rid in self._errors or rid not in self._pending:
@@ -411,11 +349,11 @@ class ServingTier:
         self._errors[rid] = err
         self.queue.purge(rid)
         for w in self.workers:
-            w.server.purge(lambda k, _r=rid: k[0] == _r)
+            self._purge_worker(w, rid)
             for k in [k for k in w.outstanding if k[0] == rid]:
                 del w.outstanding[k]
 
-    # -- health + failure handling -------------------------------------------
+    # -- deadline / timeout sweeps -------------------------------------------
 
     def _check_timeouts(self):
         now = self._clock()
@@ -435,6 +373,191 @@ class ServingTier:
                 self._fail_request(rid, RequestTimeoutError(
                     f"request {rid} exceeded the tier timeout "
                     f"{self.request_timeout_s}s (waited {age:.3f}s)"))
+
+    def _live_rids(self) -> list[int]:
+        return [r for r, n in self._pending.items()
+                if n > 0 and r not in self._errors]
+
+    # -- recovery + backoff ----------------------------------------------------
+
+    def _requeue_recovered(self, items, exc):
+        """Re-enqueue recovered microbatches at the queue front (they
+        were already admitted), bounding each item's retries; past the
+        bound its request fails typed."""
+        self.recovered_microbatches += len(items)
+        now = self._clock()
+        for item in reversed(list(items)):   # front-push keeps order
+            if item.rid in self._errors:
+                continue
+            item.retries += 1
+            self.retried_microbatches += 1
+            if item.retries > self.max_retries:
+                self._fail_request(item.rid, ReplicaFailedError(
+                    f"request {item.rid} microbatch {item.mb_index} "
+                    f"failed {item.retries}x across replica failures "
+                    f"(last: {exc!r})"))
+            else:
+                self.queue.push(item, front=True)
+                self._recover_marks.setdefault(item.key, now)
+
+    def _backoff_s(self, consecutive: int) -> float:
+        """FULL-JITTER exponential backoff: uniform on [0, min(cap,
+        base * 2^(n-1))]. N replicas felled by one event draw
+        independent delays instead of respawning in lockstep and
+        re-stampeding whatever killed them."""
+        cap = min(self.backoff_max_s,
+                  self.backoff_base_s * (2 ** (consecutive - 1)))
+        if cap <= 0:
+            return 0.0
+        return float(self._rng.uniform(0.0, cap))
+
+    # -- results ---------------------------------------------------------------
+
+    def results(self, rid: int) -> np.ndarray:
+        """(B, 1000) logits of a completed request, or raise its typed
+        failure. One-shot like the server's: the entry is evicted."""
+        if rid in self._errors:
+            err = self._errors.pop(rid)
+            self._pending.pop(rid, None)
+            self._results.pop(rid, None)
+            self._requests.pop(rid, None)
+            raise err
+        if rid not in self._pending:
+            raise KeyError(f"unknown request id {rid}")
+        if self._pending[rid] != 0:
+            raise ValueError(f"request {rid} incomplete "
+                             f"({self._pending[rid]} microbatches "
+                             "outstanding); call run() first")
+        del self._pending[rid]
+        self._requests.pop(rid)
+        return np.concatenate(self._results.pop(rid), axis=0)
+
+
+# --- replica workers ---------------------------------------------------------
+
+@dataclass
+class ReplicaWorker:
+    """One pipeline replica: the failure domain the tier tracks."""
+    idx: int
+    server: Any
+    devices: Optional[list] = None
+    permanent_dead: bool = False
+    straggler: bool = False
+    failures: int = 0
+    consecutive_failures: int = 0
+    unavailable_until: float = 0.0
+    last_heartbeat: float = 0.0
+    last_error: Optional[BaseException] = None
+    outstanding: dict = field(default_factory=dict)   # key -> WorkItem
+
+    @property
+    def alive(self) -> bool:
+        return not self.permanent_dead
+
+    def available(self, now: float) -> bool:
+        return self.alive and now >= self.unavailable_until
+
+
+class ServingTier(_TierBase):
+    """Front-end over N :class:`~repro.launch.serve.CNNPipelineServer`
+    replica workers: deadline-aware routing, health tracking, and
+    drain-and-respawn recovery. See the module docstring for the fault
+    model; DESIGN.md §7 records the wire contract."""
+
+    def __init__(self, arch: str, *, n_replicas: int = 2,
+                 n_stages: int = 4, mb_size: int = 2,
+                 image_size: int = 64, seed: int = 0,
+                 placed: Optional[bool] = None, devices=None,
+                 auto_split: bool = False,
+                 param_budget_frac: Optional[float] = None,
+                 max_queue_per_tenant: Optional[int] = None,
+                 request_timeout_s: Optional[float] = None,
+                 max_retries: int = 2, max_respawns: int = 3,
+                 backoff_base_s: float = 0.05,
+                 backoff_max_s: float = 2.0,
+                 max_worker_queue: int = 2,
+                 straggler_threshold: float = 2.0,
+                 heartbeat_timeout_s: float = 30.0,
+                 injectors: Optional[dict] = None,
+                 jitter_seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 verbose: bool = False):
+        if heartbeat_timeout_s <= 0:
+            raise ValueError(f"heartbeat_timeout_s must be > 0, got "
+                             f"{heartbeat_timeout_s}")
+        import jax
+        from repro.configs import get_config
+        from repro.core import planner
+        from repro.core.costmodel import pytree_param_bytes
+        from repro.models import cnn
+        cfg = get_config(arch)
+        if cfg.family != "cnn":
+            raise ValueError(f"{arch} is not a CNN arch")
+        self.arch = arch
+        self.cfg = cfg
+        self.params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
+        self._budget = (int(param_budget_frac *
+                            pytree_param_bytes(self.params))
+                        if param_budget_frac else None)
+        self._pool = list(devices) if devices is not None \
+            else list(jax.devices())
+        if auto_split:
+            plan2d = planner.plan_cnn_pipeline_2d(
+                cfg, self.params, len(self._pool), n_microbatches=32,
+                max_stage_param_bytes=self._budget)
+            self.plan, n_replicas = plan2d["plan"], plan2d["n_replicas"]
+        else:
+            self.plan = planner.plan_cnn_pipeline(
+                cfg, self.params, n_stages,
+                max_stage_param_bytes=self._budget)
+        s = self.plan["n_stages"]
+        self.mb_size = mb_size
+        self.image_size = image_size
+        self.seed = seed
+        self.placed = (len(self._pool) >= s * n_replicas) \
+            if placed is None else placed
+        self.max_respawns = max_respawns
+        self.max_worker_queue = max_worker_queue
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self._init_bookkeeping(
+            max_queue_per_tenant=max_queue_per_tenant,
+            request_timeout_s=request_timeout_s,
+            max_retries=max_retries, backoff_base_s=backoff_base_s,
+            backoff_max_s=backoff_max_s, jitter_seed=jitter_seed,
+            clock=clock, sleep=sleep, verbose=verbose)
+        self.detector = StragglerDetector(threshold=straggler_threshold)
+        self.workers: list[ReplicaWorker] = []
+        injectors = injectors or {}
+        for r in range(n_replicas):
+            devs = (self._pool[r * s:(r + 1) * s] if self.placed
+                    else None)
+            self._spawn_worker(devs, injector=injectors.get(r))
+
+    # -- worker construction -------------------------------------------------
+
+    def _spawn_worker(self, devs, *, injector=None,
+                      param_buffer=None) -> ReplicaWorker:
+        from repro.launch.serve import CNNPipelineServer
+        idx = len(self.workers)
+        server = CNNPipelineServer(
+            self.arch, mb_size=self.mb_size,
+            image_size=self.image_size, seed=self.seed,
+            placed=self.placed, devices=devs, cfg=self.cfg,
+            params=self.params, plan=self.plan, injector=injector,
+            param_buffer=param_buffer)
+        w = ReplicaWorker(idx=idx, server=server,
+                          devices=list(devs) if devs else None,
+                          last_heartbeat=self._clock())
+        server.on_result = lambda key, logits, _w=w: \
+            self._deliver(_w, key, logits)
+        self.workers.append(w)
+        return w
+
+    def _purge_worker(self, w: ReplicaWorker, rid: int):
+        w.server.purge(lambda k, _r=rid: k[0] == _r)
+
+    # -- health + failure handling -------------------------------------------
 
     def _check_health(self):
         now = self._clock()
@@ -464,19 +587,7 @@ class ServingTier:
         # (defensive: recover_work() is the source of truth)
         items.extend(w.outstanding.values())
         w.outstanding.clear()
-        self.recovered_microbatches += len(items)
-        for item in reversed(items):      # front-push preserves order
-            if item.rid in self._errors:
-                continue
-            item.retries += 1
-            self.retried_microbatches += 1
-            if item.retries > self.max_retries:
-                self._fail_request(item.rid, ReplicaFailedError(
-                    f"request {item.rid} microbatch {item.mb_index} "
-                    f"failed {item.retries}x across replica failures "
-                    f"(last: {exc!r})"))
-            else:
-                self.queue.push(item, front=True)
+        self._requeue_recovered(items, exc)
         if permanent or w.consecutive_failures > self.max_respawns:
             w.permanent_dead = True
             if self.verbose:
@@ -485,8 +596,7 @@ class ServingTier:
             return
         w.server.respawn()
         self.respawns += 1
-        backoff = self.backoff_base_s * \
-            (2 ** (w.consecutive_failures - 1))
+        backoff = self._backoff_s(w.consecutive_failures)
         w.unavailable_until = self._clock() + backoff
         if self.verbose:
             print(f"tier: replica {w.idx} respawned after {exc!r}, "
@@ -531,10 +641,6 @@ class ServingTier:
             w.straggler = self.detector.record(
                 w.idx, w.server.ticks, time.perf_counter() - t0)
         return ticked
-
-    def _live_rids(self) -> list[int]:
-        return [r for r, n in self._pending.items()
-                if n > 0 and r not in self._errors]
 
     def run(self, *, max_rounds: Optional[int] = None) -> dict:
         """Drive the fleet until every admitted request is delivered or
@@ -604,25 +710,6 @@ class ServingTier:
                   f"{self.respawns} respawns, "
                   f"{metrics['replicas_alive']} replicas alive")
         return metrics
-
-    def results(self, rid: int) -> np.ndarray:
-        """(B, 1000) logits of a completed request, or raise its typed
-        failure. One-shot like the server's: the entry is evicted."""
-        if rid in self._errors:
-            err = self._errors.pop(rid)
-            self._pending.pop(rid, None)
-            self._results.pop(rid, None)
-            self._requests.pop(rid, None)
-            raise err
-        if rid not in self._pending:
-            raise KeyError(f"unknown request id {rid}")
-        if self._pending[rid] != 0:
-            raise ValueError(f"request {rid} incomplete "
-                             f"({self._pending[rid]} microbatches "
-                             "outstanding); call run() first")
-        del self._pending[rid]
-        self._requests.pop(rid)
-        return np.concatenate(self._results.pop(rid), axis=0)
 
     # -- permanent device loss + degradation ---------------------------------
 
@@ -696,3 +783,621 @@ class ServingTier:
         return remesh({"buf": donor.server.param_buffer},
                       donor.server.mesh, new_mesh,
                       lambda path, leaf: P("stage"))["buf"]
+
+
+# --- cross-process serving: OS-process replica workers -----------------------
+
+class _WorkerFatal(Exception):
+    """A worker reported an application-level exception before dying
+    (internal: converted to a replica failure by the supervisor)."""
+
+
+@dataclass
+class ProcWorker:
+    """One OS-process pipeline replica: the hard failure domain the
+    cross-process tier supervises. ``generation`` counts respawns (log
+    files and fault hooks are per-generation); ``detected_via``
+    records HOW the last death was noticed — ``"exit"`` (waitpid),
+    ``"transport"`` (channel EOF), ``"heartbeat"`` (liveness
+    timeout — the wedged-process path), or ``"fatal"`` (the worker
+    reported its own exception before dying)."""
+    idx: int
+    proc: Any = None
+    channel: Any = None
+    pid: Optional[int] = None
+    generation: int = 0
+    ready: bool = False
+    spawned_at: float = 0.0
+    permanent_dead: bool = False
+    straggler: bool = False
+    failures: int = 0
+    consecutive_failures: int = 0
+    unavailable_until: float = 0.0
+    last_error: Optional[BaseException] = None
+    exit_code: Optional[int] = None
+    detected_via: Optional[str] = None
+    log_path: Optional[str] = None
+    missed_seen: int = 0
+    outstanding: dict = field(default_factory=dict)   # key -> WorkItem
+
+    @property
+    def alive(self) -> bool:
+        return not self.permanent_dead
+
+    def available(self, now: float) -> bool:
+        return self.alive and self.ready and \
+            now >= self.unavailable_until
+
+
+class ProcessServingTier(_TierBase):
+    """Supervisor over N replica workers running as REAL OS processes
+    (:mod:`repro.runtime.worker` children over the framed transport of
+    :mod:`repro.runtime.transport`) — the cross-process promotion of
+    :class:`ServingTier`, same request API, hard fault domains.
+
+    What changes across the process boundary:
+
+    - **Liveness is observed, not assumed.** Workers heartbeat
+      ``(last completed tick)`` every ``heartbeat_interval_s``; the
+      supervisor's :class:`~repro.runtime.fault.FailureDetector` bands
+      silence/stall into alive / suspect (straggler: deprioritized by
+      the router, never killed) / dead (drain-and-respawn). A SIGKILL
+      is additionally caught immediately via ``waitpid`` or channel
+      EOF; a SIGSTOP'd (wedged) worker is only catchable via the
+      heartbeat band — that path is the tentpole.
+    - **Recovery replays from the supervisor-side ledger.** Every
+      dispatched microbatch stays in ``w.outstanding`` (its padded
+      chunk included) until its logits land, so a worker that dies at
+      ANY instant — even mid-tick, holding half-computed state — loses
+      nothing: the supervisor re-enqueues the chunks and a healthy
+      worker recomputes them. Logits are a pure function of
+      (chunk, cfg, params, plan), and every worker loads the identical
+      param blob and derives the identical plan, so the recovered
+      stream is BITWISE equal to the no-failure run.
+    - **The ledger can outlive the supervisor.** With ``ledger_dir``
+      set, undelivered chunks + delivered logits persist through
+      :func:`repro.checkpoint.ckpt.save_ledger` (crash-safe pointer
+      swap) on every state change; a NEW tier pointed at the same
+      directory resumes the stream where the dead supervisor left it.
+
+    Workers share weights through one memory-mapped packed param blob
+    (written once by the supervisor; the OS page cache shares the
+    physical pages), so N processes cost one model's RAM — the
+    process analogue of the placed ``(S, P)`` buffer."""
+
+    def __init__(self, arch: str, *, n_procs: int = 2,
+                 n_stages: int = 2, mb_size: int = 2,
+                 image_size: int = 32, seed: int = 0,
+                 max_queue_per_tenant: Optional[int] = None,
+                 request_timeout_s: Optional[float] = None,
+                 max_retries: int = 2, max_respawns: int = 3,
+                 backoff_base_s: float = 0.05,
+                 backoff_max_s: float = 2.0,
+                 max_worker_queue: int = 2,
+                 heartbeat_interval_s: float = 0.1,
+                 suspect_after_s: Optional[float] = 0.5,
+                 dead_after_s: Optional[float] = 10.0,
+                 spawn_timeout_s: float = 300.0,
+                 io_deadline_s: float = 60.0,
+                 worker_hooks: Optional[dict] = None,
+                 ledger_dir: Optional[str] = None,
+                 jitter_seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 verbose: bool = False):
+        # liveness config validates FIRST: a bad threshold set must be
+        # a cheap loud ValueError, not a failure after N process spawns
+        self.detector = FailureDetector(
+            interval_s=heartbeat_interval_s,
+            suspect_after_s=suspect_after_s, dead_after_s=dead_after_s)
+        if n_procs < 1:
+            raise ValueError(f"n_procs must be >= 1, got {n_procs}")
+        import jax
+        from repro.configs import get_config
+        from repro.core import planner
+        from repro.models import cnn
+        from repro.runtime import worker as worker_mod
+        cfg = get_config(arch)
+        if cfg.family != "cnn":
+            raise ValueError(f"{arch} is not a CNN arch")
+        self.arch = arch
+        self.cfg = cfg
+        self.seed = seed
+        self.mb_size = mb_size
+        self.image_size = image_size
+        self.params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
+        self.plan = planner.plan_cnn_pipeline(cfg, self.params, n_stages)
+        self.max_respawns = max_respawns
+        self.max_worker_queue = max_worker_queue
+        self.spawn_timeout_s = spawn_timeout_s
+        self.io_deadline_s = io_deadline_s
+        self.ledger_dir = ledger_dir
+        self.worker_hooks = dict(worker_hooks or {})
+        self._init_bookkeeping(
+            max_queue_per_tenant=max_queue_per_tenant,
+            request_timeout_s=request_timeout_s,
+            max_retries=max_retries, backoff_base_s=backoff_base_s,
+            backoff_max_s=backoff_max_s, jitter_seed=jitter_seed,
+            clock=clock, sleep=sleep, verbose=verbose)
+        # supervisor-only counters (the process tier's observability)
+        self.missed_heartbeats = 0
+        self.worker_exits: list[dict] = []
+        self.straggler_events: list[tuple] = []
+        self._dir = tempfile.mkdtemp(prefix="hpipe-proctier-")
+        self._blob = worker_mod.write_param_blob(
+            self.params, os.path.join(self._dir, "params.blob"))
+        self.workers: list[ProcWorker] = []
+        for i in range(n_procs):
+            w = ProcWorker(idx=i)
+            self.workers.append(w)
+            self._spawn_proc(w)
+        try:
+            self._wait_ready()
+        except Exception:
+            self.close()
+            raise
+        if self.ledger_dir is not None:
+            self._resume_from_ledger()
+
+    # -- process lifecycle ---------------------------------------------------
+
+    def _spawn_proc(self, w: ProcWorker):
+        """Fork one replica worker over a fresh socketpair. Fault
+        hooks (--kill-at-tick / --stop-at-tick) arm only on generation
+        0 — a respawned worker must come back healthy."""
+        sup, child = socket.socketpair()
+        cmd = [sys.executable, "-m", "repro.runtime.worker",
+               "--fd", str(child.fileno()),
+               "--arch", self.arch,
+               "--stages", str(self.plan["n_stages"]),
+               "--mb-size", str(self.mb_size),
+               "--image-size", str(self.image_size),
+               "--seed", str(self.seed),
+               "--param-blob", self._blob,
+               "--heartbeat-interval", str(self.detector.interval_s),
+               "--io-deadline", str(self.io_deadline_s)]
+        hook = self.worker_hooks.get(w.idx) \
+            if w.generation == 0 else None
+        if hook:
+            if "kill_at_tick" in hook:
+                cmd += ["--kill-at-tick", str(hook["kill_at_tick"])]
+            if "stop_at_tick" in hook:
+                cmd += ["--stop-at-tick", str(hook["stop_at_tick"])]
+        env = dict(os.environ)
+        import repro
+        pkg = (os.path.dirname(os.path.abspath(repro.__file__))
+               if getattr(repro, "__file__", None)
+               else list(repro.__path__)[0])   # namespace package
+        src = os.path.dirname(pkg)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        w.log_path = os.path.join(
+            self._dir, f"worker-{w.idx}-g{w.generation}.log")
+        with open(w.log_path, "ab") as logf:
+            w.proc = subprocess.Popen(
+                cmd, pass_fds=(child.fileno(),), env=env,
+                stdin=subprocess.DEVNULL, stdout=logf, stderr=logf,
+                close_fds=True)
+        child.close()
+        w.channel = transport.Channel(sup)
+        w.pid = w.proc.pid
+        w.ready = False
+        w.missed_seen = 0
+        w.spawned_at = self._clock()
+        if self.verbose:
+            print(f"tier: spawned worker {w.idx} gen {w.generation} "
+                  f"pid {w.pid}")
+
+    def _log_tail(self, w: ProcWorker, n: int = 12) -> str:
+        try:
+            with open(w.log_path, "rb") as f:
+                return b"\n".join(
+                    f.read().splitlines()[-n:]).decode(errors="replace")
+        except OSError:
+            return "<no worker log>"
+
+    def _wait_ready(self):
+        """Block until every worker has built + warmed its pipeline
+        and reported ready (startup only; respawns re-arm async)."""
+        deadline = self._clock() + self.spawn_timeout_s
+        while True:
+            pend = [w for w in self.workers
+                    if w.alive and not w.ready]
+            if not pend:
+                return
+            for w in pend:
+                rc = w.proc.poll()
+                if rc is not None:
+                    self._pump(w)     # surface a ("fatal", ...) if sent
+                    raise RuntimeError(
+                        f"worker {w.idx} died during startup "
+                        f"(exit {rc}); log tail:\n{self._log_tail(w)}")
+            if self._clock() > deadline:
+                raise RuntimeError(
+                    f"workers {[w.idx for w in pend]} not ready within "
+                    f"spawn_timeout_s={self.spawn_timeout_s}s; log "
+                    f"tail of worker {pend[0].idx}:\n"
+                    f"{self._log_tail(pend[0])}")
+            r, _, _ = select.select([w.channel for w in pend], [], [],
+                                    0.25)
+            for ch in r:
+                self._pump(next(w for w in pend if w.channel is ch))
+
+    def kill_worker(self, idx: int, sig: int = signal.SIGKILL):
+        """Deliver a signal to one worker process (fault injection
+        from outside: ``launch/serve.py --kill-worker``, tests,
+        benchmarks)."""
+        os.kill(self.workers[idx].pid, sig)
+
+    def close(self):
+        """Stop every worker (graceful ``stop``, then SIGKILL) and
+        release the channels + scratch dir. Idempotent."""
+        for w in self.workers:
+            if w.proc is not None and w.proc.poll() is None and \
+                    w.ready and w.channel is not None:
+                try:
+                    w.channel.send(("stop",), deadline_s=1.0)
+                except Exception:            # noqa: BLE001 best effort
+                    pass
+        for w in self.workers:
+            if w.proc is not None:
+                try:
+                    w.proc.wait(timeout=5.0)
+                except Exception:            # noqa: BLE001
+                    try:
+                        w.proc.kill()
+                        w.proc.wait(timeout=5.0)
+                    except Exception:        # noqa: BLE001
+                        pass
+            if w.channel is not None:
+                w.channel.close()
+        import shutil
+        shutil.rmtree(self._dir, ignore_errors=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- supervisor-side message handling ------------------------------------
+
+    def _handle_msg(self, w: ProcWorker, m):
+        tag = m[0]
+        now = self._clock()
+        if tag == "ready":
+            w.ready = True
+            w.pid = m[1]
+            w.missed_seen = 0
+            self.detector.reset(w.idx, now)
+        elif tag == "hb":
+            w.missed_seen = 0
+            self.detector.beat(w.idx, now, m[1])
+        elif tag == "result":
+            w.consecutive_failures = 0
+            self.detector.beat(w.idx, now, -1)   # results ARE liveness
+            self._deliver(w, tuple(m[1]), m[2])
+            self._save_ledger()
+        elif tag == "fatal":
+            raise _WorkerFatal(m[1], m[2] if len(m) > 2 else "")
+        else:
+            raise _WorkerFatal(f"unknown message tag {tag!r}", "")
+
+    def _pump(self, w: ProcWorker):
+        """Deliver every message the worker has sent; convert channel
+        death / a fatal report into a replica failure."""
+        if w.channel is None or not w.alive:
+            return
+        try:
+            for m in w.channel.drain():
+                self._handle_msg(w, m)
+        except _WorkerFatal as e:
+            self._fail_proc(w, "fatal", ReplicaFailedError(
+                f"replica {w.idx} raised in-worker: {e.args[0]}\n"
+                f"{e.args[1]}"))
+        except transport.TransportError as e:
+            self._fail_proc(w, "transport", ReplicaFailedError(
+                f"replica {w.idx} channel failed: {e!r}"))
+
+    # -- failure detection + drain-and-respawn -------------------------------
+
+    def _reap_and_detect(self):
+        """One supervisor health sweep: deliver pending messages, reap
+        exited processes, classify heartbeat silence/stall into the
+        straggler band or death."""
+        now = self._clock()
+        for w in self.workers:
+            if not w.alive:
+                continue
+            # drain FIRST: results a dying worker already emitted must
+            # land before its remaining work is declared lost
+            self._pump(w)
+            if not w.alive or w.proc is None:
+                continue
+            rc = w.proc.poll()
+            if rc is not None:
+                self._fail_proc(w, "exit", ReplicaFailedError(
+                    f"replica {w.idx} (pid {w.pid}) exited with "
+                    f"{rc}"))
+                continue
+            if not w.ready:
+                if now - w.spawned_at > self.spawn_timeout_s:
+                    self._fail_proc(w, "spawn-timeout",
+                                    ReplicaFailedError(
+                                        f"replica {w.idx} never "
+                                        f"reported ready within "
+                                        f"{self.spawn_timeout_s}s"))
+                continue
+            missed = self.detector.missed(w.idx, now)
+            if missed > w.missed_seen:
+                self.missed_heartbeats += missed - w.missed_seen
+                w.missed_seen = missed
+            state = self.detector.state(w.idx, now,
+                                        busy=bool(w.outstanding))
+            if state == "dead":
+                self._fail_proc(w, "heartbeat", ReplicaFailedError(
+                    f"replica {w.idx} (pid {w.pid}) silent/stalled "
+                    f"past dead_after_s="
+                    f"{self.detector.dead_after_s}s "
+                    f"({missed} heartbeats missed) — wedged or dead"))
+            elif state == "suspect":
+                if not w.straggler:
+                    w.straggler = True
+                    self.straggler_events.append(
+                        (w.idx, w.generation, missed))
+                    if self.verbose:
+                        print(f"tier: replica {w.idx} suspected "
+                              f"straggler ({missed} heartbeats "
+                              "missed) — deprioritized, not killed")
+            else:
+                w.straggler = False
+
+    def _fail_proc(self, w: ProcWorker, via: str, exc: TierError,
+                   *, permanent: bool = False):
+        """Terminate + reap one worker process, record how the death
+        was detected, then run drain-and-respawn on its ledger."""
+        rc = w.proc.poll() if w.proc is not None else None
+        if rc is not None:
+            w.exit_code = rc
+            if via == "transport":
+                via = "exit"          # EOF because the process is gone
+        elif w.proc is not None:
+            try:                      # SIGKILL reaps SIGSTOP'd corpses
+                w.proc.kill()         # too (the wedged-worker path)
+                w.exit_code = w.proc.wait(timeout=10.0)
+            except Exception:         # noqa: BLE001
+                pass
+        w.detected_via = via
+        self.worker_exits.append(
+            {"idx": w.idx, "generation": w.generation, "pid": w.pid,
+             "exit_code": w.exit_code, "detected_via": via})
+        if w.channel is not None:
+            w.channel.close()
+            w.channel = None
+        self._on_proc_failure(w, exc, permanent=permanent)
+
+    def _on_proc_failure(self, w: ProcWorker, exc: TierError,
+                         *, permanent: bool = False):
+        w.failures += 1
+        w.consecutive_failures += 1
+        w.last_error = exc
+        w.ready = False
+        w.straggler = False
+        items = sorted(w.outstanding.values(), key=lambda it: it.seq)
+        w.outstanding.clear()
+        self._requeue_recovered(items, exc)
+        if permanent or w.consecutive_failures > self.max_respawns:
+            w.permanent_dead = True
+            if self.verbose:
+                print(f"tier: replica {w.idx} retired permanently "
+                      f"({exc!r})")
+            self._save_ledger()
+            return
+        w.generation += 1
+        self._spawn_proc(w)           # async: usable once "ready" lands
+        self.respawns += 1
+        w.unavailable_until = self._clock() + \
+            self._backoff_s(w.consecutive_failures)
+        self._save_ledger()
+        if self.verbose:
+            print(f"tier: replica {w.idx} respawning (gen "
+                  f"{w.generation}) after {exc!r}")
+
+    def _purge_worker(self, w: ProcWorker, rid: int):
+        if w.alive and w.ready and w.channel is not None:
+            try:
+                w.channel.send(("purge", rid), deadline_s=1.0)
+            except transport.TransportError:
+                pass                  # its death sweep will handle it
+
+    # -- routing + the serving loop ------------------------------------------
+
+    def _pick_worker(self) -> Optional[ProcWorker]:
+        now = self._clock()
+        bound = self.plan["n_stages"] + self.max_worker_queue
+        avail = [w for w in self.workers if w.available(now) and
+                 len(w.outstanding) < bound]
+        if not avail:
+            return None
+        pref = [w for w in avail if not w.straggler] or avail
+        return min(pref, key=lambda w: (len(w.outstanding), w.idx))
+
+    def _dispatch(self):
+        while len(self.queue):
+            w = self._pick_worker()
+            if w is None:
+                return
+            item = self.queue.pop()
+            if item is None:
+                return
+            try:
+                w.channel.send(("work", item.key, item.images,
+                                item.n_valid),
+                               deadline_s=self.io_deadline_s)
+            except transport.TransportError as e:
+                self.queue.push(item, front=True)
+                self._fail_proc(w, "transport", ReplicaFailedError(
+                    f"replica {w.idx} send failed: {e!r}"))
+                continue
+            w.outstanding[item.key] = item
+
+    def _wait_events(self, timeout_s: float):
+        chans = [w.channel for w in self.workers
+                 if w.alive and w.channel is not None]
+        if not chans:
+            self._sleep(timeout_s)
+            return
+        r, _, _ = select.select(chans, [], [], max(timeout_s, 0.0))
+        for ch in r:
+            w = next(w for w in self.workers if w.channel is ch)
+            self._pump(w)
+
+    def run(self, *, max_rounds: Optional[int] = None) -> dict:
+        """Drive the fleet until every admitted request is delivered
+        or shed (or ``max_rounds`` supervisor rounds elapse). Raises
+        :class:`NoHealthyReplicaError` on a tier-wide outage."""
+        t0 = self._clock()
+        done_before = len(self._completed)
+        rounds = 0
+        while True:
+            self._check_timeouts()
+            self._reap_and_detect()
+            if not self._live_rids():
+                break
+            if not any(w.alive for w in self.workers):
+                raise NoHealthyReplicaError(
+                    f"all {len(self.workers)} replica processes "
+                    f"permanently dead with requests "
+                    f"{self._live_rids()} pending (last error: "
+                    f"{self.workers[-1].last_error!r})")
+            self._dispatch()
+            # half the heartbeat interval: fast enough to never be the
+            # detector's bottleneck, slow enough to not busy-spin
+            self._wait_events(self.detector.interval_s / 2.0)
+            rounds += 1
+            if max_rounds is not None and rounds >= max_rounds:
+                break
+        elapsed = self._clock() - t0
+        completed = self._completed[done_before:]
+        lats = [self._requests[r].done_at - self._requests[r].submitted_at
+                for r in completed if r in self._requests]
+        images = sum(self._requests[r].n_images for r in completed
+                     if r in self._requests)
+        metrics = {
+            "completed": len(completed),
+            "failed": len(self._errors),
+            "images": images,
+            "elapsed_s": elapsed,
+            "images_per_s": images / max(elapsed, 1e-9),
+            "rounds": rounds,
+            "respawns": self.respawns,
+            "recovered_microbatches": self.recovered_microbatches,
+            "retried_microbatches": self.retried_microbatches,
+            "missed_heartbeats": self.missed_heartbeats,
+            "worker_exits": list(self.worker_exits),
+            "straggler_events": list(self.straggler_events),
+            "latency_p50_s": float(np.percentile(lats, 50)) if lats
+            else None,
+            "latency_p99_s": float(np.percentile(lats, 99)) if lats
+            else None,
+            # detection-to-first-recovered-emit (the supervisor cannot
+            # observe the kill instant itself; benchmarks measure the
+            # outer kill-to-emit wall clock around this)
+            "recovery_s": self.recovery_times[0]
+            if self.recovery_times else None,
+            "recovery_times_s": list(self.recovery_times),
+            "replicas_alive": sum(w.alive for w in self.workers),
+            "replica_pids": [w.pid for w in self.workers],
+        }
+        if self.verbose:
+            print(f"tier[proc]: {metrics['completed']} requests "
+                  f"({images} imgs) in {elapsed:.2f}s, "
+                  f"{metrics['failed']} failed, "
+                  f"{self.respawns} respawns, "
+                  f"{self.missed_heartbeats} heartbeats missed")
+        return metrics
+
+    # -- supervisor ledger persistence ---------------------------------------
+
+    def _save_ledger(self):
+        """Persist the replay ledger (crash-safe pointer swap): every
+        live request's undelivered padded chunks + delivered logits.
+        A supervisor that dies between any two syscalls leaves a
+        loadable ledger a fresh tier resumes from."""
+        if self.ledger_dir is None:
+            return
+        from repro.checkpoint import ckpt
+        arrays = {}
+        reqs = {}
+        for rid, req in self._requests.items():
+            if rid in self._errors:
+                continue
+            reqs[str(rid)] = {
+                "tenant": req.tenant, "priority": req.priority,
+                "n_images": req.n_images, "n_mb": req.n_mb,
+                "n_valid": {}, "done": self._pending.get(rid) == 0,
+            }
+            for mb, logits in enumerate(self._results.get(rid, [])):
+                if logits is not None:
+                    arrays[f"logits_{rid}_{mb}"] = logits
+        undelivered = []
+        for q in self.queue._q.values():
+            undelivered.extend(q)
+        for w in self.workers:
+            undelivered.extend(w.outstanding.values())
+        for item in undelivered:
+            meta = reqs.get(str(item.rid))
+            if meta is None:
+                continue
+            arrays[f"chunk_{item.rid}_{item.mb_index}"] = item.images
+            meta["n_valid"][str(item.mb_index)] = item.n_valid
+        ckpt.save_ledger(self.ledger_dir,
+                         {"next_rid": self._next_rid,
+                          "next_seq": self._next_seq,
+                          "requests": reqs},
+                         arrays)
+
+    def _resume_from_ledger(self):
+        """Adopt a prior supervisor's ledger: completed microbatches
+        keep their recorded logits, undelivered chunks re-enter the
+        dispatch queue — the resumed stream finishes bitwise equal to
+        an uninterrupted one."""
+        from repro.checkpoint import ckpt
+        rec = ckpt.load_ledger(self.ledger_dir)
+        if rec is None:
+            return
+        meta, arrays = rec
+        self._next_rid = int(meta["next_rid"])
+        self._next_seq = int(meta["next_seq"])
+        now = self._clock()
+        for rid_s, r in meta["requests"].items():
+            rid = int(rid_s)
+            n_mb = int(r["n_mb"])
+            req = ImageRequest(rid=rid, tenant=r["tenant"],
+                               priority=int(r["priority"]),
+                               submitted_at=now,
+                               n_images=int(r["n_images"]), n_mb=n_mb)
+            self._requests[rid] = req
+            self._results[rid] = [None] * n_mb
+            npend = 0
+            for mb in range(n_mb):
+                lk = f"logits_{rid}_{mb}"
+                if lk in arrays:
+                    self._results[rid][mb] = arrays[lk]
+                    continue
+                npend += 1
+                self._next_seq += 1
+                self.queue.push(WorkItem(
+                    rid=rid, mb_index=mb,
+                    n_valid=int(r["n_valid"][str(mb)]),
+                    images=np.asarray(arrays[f"chunk_{rid}_{mb}"],
+                                      np.float32),
+                    tenant=r["tenant"], priority=int(r["priority"]),
+                    seq=self._next_seq))
+            self._pending[rid] = npend
+            if npend == 0:
+                req.done_at = now
+                self._completed.append(rid)
+        if self.verbose:
+            print(f"tier[proc]: resumed {len(meta['requests'])} "
+                  f"request(s) from ledger at {self.ledger_dir}")

@@ -1,0 +1,284 @@
+"""Crash-safe message transport for the cross-process serving tier.
+
+The supervisor (:class:`~repro.runtime.tier.ProcessServingTier`) and
+its replica worker processes (:mod:`repro.runtime.worker`) talk over a
+``socketpair`` with **length-prefixed, CRC-checked frames**: a worker
+that is SIGKILL'd mid-send leaves at worst a truncated frame, and a
+garbled byte stream can never be silently mis-parsed into a wrong
+message — every corruption mode maps to a *distinct typed error* the
+supervisor turns into a replica-failure event instead of a crash or,
+worse, wrong logits.
+
+Frame layout (all big-endian)::
+
+    +---------+-----------+-----------+--------------------+
+    | magic   | length    | crc32     | payload            |
+    | 4 bytes | 4 bytes   | 4 bytes   | ``length`` bytes   |
+    +---------+-----------+-----------+--------------------+
+
+- zero-length payloads are legal (heartbeat-sized frames stay tiny);
+- ``length`` above the channel's ``max_frame`` raises
+  :class:`FrameTooLargeError` on the send side before any byte moves,
+  and on the recv side before the payload is buffered (a garbled
+  length cannot make the reader allocate unboundedly);
+- a CRC mismatch raises :class:`ChecksumError`;
+- a wrong magic raises :class:`ProtocolError` (the stream lost
+  framing — after any ProtocolError the channel is poisoned and every
+  later call re-raises, because resynchronizing a corrupt byte stream
+  is guessing);
+- EOF raises :class:`PeerClosedError`, whether the peer closed cleanly
+  between frames or died mid-frame (the message distinguishes them);
+- every ``send``/``recv`` takes an optional deadline; an expired one
+  raises :class:`TransportTimeout` — a wedged peer cannot wedge the
+  supervisor.
+
+Messages are pickled Python objects (tuples of primitives and numpy
+arrays — both endpoints are this repo's own processes, so pickle's
+trust model is the OS process boundary itself).
+"""
+from __future__ import annotations
+
+import pickle
+import select
+import struct
+import time
+import zlib
+
+MAGIC = 0x48504950                       # "HPIP"
+HEADER = struct.Struct(">III")           # magic, payload length, crc32
+DEFAULT_MAX_FRAME = 64 * 1024 * 1024
+
+
+class TransportError(RuntimeError):
+    """Base of every typed transport failure."""
+
+
+class ProtocolError(TransportError):
+    """The byte stream is garbled (bad magic / unframeable): the
+    channel has lost framing and cannot be trusted again."""
+
+
+class ChecksumError(ProtocolError):
+    """A frame's payload CRC32 does not match its header."""
+
+
+class FrameTooLargeError(ProtocolError):
+    """A frame's declared (or attempted) payload exceeds the channel's
+    ``max_frame`` bound."""
+
+
+class PeerClosedError(TransportError):
+    """The peer's end of the channel is gone (clean close or death —
+    possibly mid-frame)."""
+
+
+class TransportTimeout(TransportError):
+    """A per-call send/recv deadline expired."""
+
+
+def encode_frame(payload: bytes, *, max_frame: int = DEFAULT_MAX_FRAME
+                 ) -> bytes:
+    if len(payload) > max_frame:
+        raise FrameTooLargeError(
+            f"payload of {len(payload)} bytes exceeds the frame bound "
+            f"{max_frame}")
+    return HEADER.pack(MAGIC, len(payload),
+                       zlib.crc32(payload) & 0xFFFFFFFF) + payload
+
+
+class Channel:
+    """One framed, deadline-aware endpoint over a connected stream
+    socket (``socket.socketpair`` in the serving tier).
+
+    The receive side is buffered: partial frames accumulate across
+    reads (interleaved/short reads are reassembled), and
+    :meth:`drain` returns every complete message currently available
+    without blocking — the supervisor ``select``\\ s on :meth:`fileno`
+    and drains whichever workers are readable."""
+
+    def __init__(self, sock, *, max_frame: int = DEFAULT_MAX_FRAME):
+        self._sock = sock
+        self._sock.setblocking(False)
+        self.max_frame = max_frame
+        self._buf = bytearray()
+        self._poisoned: TransportError | None = None
+        self._closed = False
+        self._eof = False
+
+    def fileno(self) -> int:
+        return self._sock.fileno()
+
+    def close(self):
+        if not self._closed:
+            self._closed = True
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+
+    # -- send ----------------------------------------------------------------
+
+    def send_bytes(self, payload: bytes, *, deadline_s=None):
+        """Send one frame; ``deadline_s`` is a relative bound on the
+        whole send (partial progress past it raises
+        :class:`TransportTimeout`)."""
+        self._check_usable()
+        frame = encode_frame(payload, max_frame=self.max_frame)
+        deadline = (time.monotonic() + deadline_s
+                    if deadline_s is not None else None)
+        view = memoryview(frame)
+        while view:
+            try:
+                n = self._sock.send(view)
+                view = view[n:]
+            except (BlockingIOError, InterruptedError):
+                self._wait(write=True, deadline=deadline,
+                           what=f"send of {len(frame)}-byte frame")
+            except (BrokenPipeError, ConnectionResetError, OSError) as e:
+                raise PeerClosedError(
+                    f"peer closed while sending ({e!r})") from e
+
+    def send(self, obj, *, deadline_s=None):
+        self.send_bytes(pickle.dumps(obj, pickle.HIGHEST_PROTOCOL),
+                        deadline_s=deadline_s)
+
+    # -- recv ----------------------------------------------------------------
+
+    def recv_bytes(self, *, deadline_s=None) -> bytes:
+        """Block (up to ``deadline_s``) until one complete frame is
+        assembled; returns its payload."""
+        self._check_usable()
+        deadline = (time.monotonic() + deadline_s
+                    if deadline_s is not None else None)
+        while True:
+            payload = self._pop_frame()
+            if payload is not None:
+                return payload
+            if self._eof:
+                raise self._eof_error()
+            if not self._fill():
+                self._wait(write=False, deadline=deadline,
+                           what="recv")
+
+    def recv(self, *, deadline_s=None):
+        return pickle.loads(self.recv_bytes(deadline_s=deadline_s))
+
+    def try_recv_bytes(self):
+        """Non-blocking: one payload if a complete frame is available
+        (buffered or immediately readable), else ``None``."""
+        self._check_usable()
+        payload = self._pop_frame()
+        if payload is not None:
+            return payload
+        self._fill_nonblock()
+        return self._pop_frame()
+
+    def drain(self) -> list:
+        """Non-blocking: every complete message currently available,
+        in order. Reads the socket dry, then parses the buffer dry.
+        Messages the peer sent before dying are delivered first; once
+        none remain after EOF, :class:`PeerClosedError` is raised —
+        a crashed worker's already-emitted results are never lost."""
+        self._check_usable()
+        self._fill_nonblock()
+        out = []
+        while True:
+            payload = self._pop_frame()
+            if payload is None:
+                if not out and self._eof:
+                    raise self._eof_error()
+                return out
+            out.append(pickle.loads(payload))
+
+    def poll(self, timeout_s: float) -> bool:
+        """True if a complete frame is buffered, the socket becomes
+        readable within ``timeout_s``, or EOF was reached (so the
+        caller's next recv/drain surfaces the typed error)."""
+        if self._eof:
+            return True
+        if len(self._buf) >= HEADER.size:
+            magic, length, _ = HEADER.unpack_from(self._buf)
+            if len(self._buf) >= HEADER.size + length:
+                return True
+        r, _, _ = select.select([self._sock], [], [], max(timeout_s, 0.0))
+        return bool(r)
+
+    # -- internals -----------------------------------------------------------
+
+    def _check_usable(self):
+        if self._poisoned is not None:
+            raise type(self._poisoned)(
+                f"channel poisoned by earlier framing error: "
+                f"{self._poisoned}")
+        if self._closed:
+            raise PeerClosedError("channel is closed")
+
+    def _poison(self, err: TransportError):
+        self._poisoned = err
+        raise err
+
+    def _pop_frame(self):
+        """Parse one complete frame out of the buffer, if present."""
+        if len(self._buf) < HEADER.size:
+            return None
+        magic, length, crc = HEADER.unpack_from(self._buf)
+        if magic != MAGIC:
+            self._poison(ProtocolError(
+                f"bad frame magic 0x{magic:08x} (expected "
+                f"0x{MAGIC:08x}): stream lost framing"))
+        if length > self.max_frame:
+            self._poison(FrameTooLargeError(
+                f"incoming frame declares {length} bytes > bound "
+                f"{self.max_frame}"))
+        if len(self._buf) < HEADER.size + length:
+            return None
+        payload = bytes(self._buf[HEADER.size:HEADER.size + length])
+        del self._buf[:HEADER.size + length]
+        if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+            self._poison(ChecksumError(
+                f"frame CRC mismatch on a {length}-byte payload: "
+                "corrupt in flight"))
+        return payload
+
+    def _eof_error(self) -> PeerClosedError:
+        if self._buf:
+            return PeerClosedError(
+                f"peer closed mid-frame ({len(self._buf)} bytes of an "
+                "incomplete frame buffered)")
+        return PeerClosedError("peer closed")
+
+    def _fill(self) -> bool:
+        """One read attempt; True if bytes landed. EOF sets the flag
+        (callers surface it via :meth:`_eof_error` once the buffer is
+        out of complete frames)."""
+        if self._eof:
+            return False
+        try:
+            chunk = self._sock.recv(1 << 16)
+        except (BlockingIOError, InterruptedError):
+            return False
+        except (ConnectionResetError, OSError) as e:
+            raise PeerClosedError(f"peer reset ({e!r})") from e
+        if chunk == b"":
+            self._eof = True
+            return False
+        self._buf += chunk
+        return True
+
+    def _fill_nonblock(self):
+        """Read the socket dry without blocking."""
+        while self._fill():
+            pass
+
+    def _wait(self, *, write: bool, deadline, what: str):
+        timeout = None
+        if deadline is not None:
+            timeout = deadline - time.monotonic()
+            if timeout <= 0:
+                raise TransportTimeout(f"deadline expired during {what}")
+        rw = [self._sock]
+        r, w, _ = select.select([] if write else rw, rw if write else [],
+                                [], timeout)
+        if deadline is not None and not (r or w) and \
+                time.monotonic() >= deadline:
+            raise TransportTimeout(f"deadline expired during {what}")

@@ -1,0 +1,266 @@
+"""Replica worker process for the cross-process serving tier.
+
+One OS process per pipeline replica — HPIPE's fault model made literal:
+each replica owns its interpreter, its XLA client, and its pipeline
+state, so a SIGKILL'd/OOM'd/wedged worker cannot corrupt the supervisor
+or its siblings. The supervisor (:class:`~repro.runtime.tier
+.ProcessServingTier`) spawns this module as ``python -m
+repro.runtime.worker --fd N ...`` with one end of a ``socketpair``
+inherited on fd N and drives it over the framed transport
+(:mod:`repro.runtime.transport`).
+
+**Startup.** The worker reconstructs the exact serving cell the
+supervisor planned: params come from the supervisor's packed param
+blob (``--param-blob``, memory-mapped read-only — one file shared by
+every replica through the OS page cache, the process analogue of the
+tier's shared ``(S, P)`` buffer), and the stage plan is re-derived
+deterministically from the same ``(cfg, params, n_stages)`` inputs —
+identical weights + identical cuts are what make cross-process replay
+bitwise. The jitted tick is warmed (one discarded microbatch, then a
+state reset to zeros) BEFORE ``ready`` is reported, so compile time
+never masquerades as a missed heartbeat.
+
+**Serve loop.** Each iteration drains control messages (``work`` /
+``purge`` / ``stop``), emits a ``hb`` heartbeat carrying the last
+completed tick (liveness AND progress: the supervisor's detector
+flags a beating-but-stuck worker as wedged), and runs one pipeline
+tick when busy. Results stream back as ``("result", key, logits)``
+the moment their microbatch emerges.
+
+**Fault hooks.** ``--kill-at-tick`` / ``--stop-at-tick`` arm a real
+``SIGKILL``/``SIGSTOP`` against the worker's own pid inside the tick
+path (the same seam the in-process ``FailureInjector`` uses) — the
+tests' deterministic stand-ins for a mid-tick OOM kill and a wedged
+host, delivered by the actual kernel, not simulated by an exception.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import struct
+import time
+import traceback
+
+import numpy as np
+
+from repro.runtime import transport
+
+_BLOB_MAGIC = b"HPIPEPB1"
+_KEYSEP = "|"
+
+
+def _dtype_tag(dt: np.dtype) -> str:
+    # bfloat16 (ml_dtypes) serializes via ``.str`` as an opaque void
+    # ("|V2") that JAX then rejects; its ``.name`` round-trips.
+    return dt.name if dt.name == "bfloat16" else dt.str
+
+
+def _resolve_dtype(tag: str) -> np.dtype:
+    if tag == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(tag)
+
+
+# --- shared packed param blob ------------------------------------------------
+
+def write_param_blob(params, path: str) -> str:
+    """Pack a param pytree into one flat file: magic, manifest length,
+    JSON manifest of ``(key, dtype, shape, offset, nbytes)`` per leaf,
+    then the concatenated C-order leaf bytes. Written temp-then-rename
+    so workers never map a half-written blob."""
+    import jax
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    leaves, manifest, off = [], [], 0
+    for p, leaf in flat:
+        a = np.ascontiguousarray(np.asarray(leaf))
+        key = _KEYSEP.join(str(x) for x in p)
+        manifest.append({"key": key, "dtype": _dtype_tag(a.dtype),
+                         "shape": list(a.shape), "offset": off,
+                         "nbytes": int(a.nbytes)})
+        leaves.append(a)
+        off += a.nbytes
+    mjson = json.dumps({"leaves": manifest, "total": off}).encode()
+    tmp = f"{path}.tmp-{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(_BLOB_MAGIC)
+        f.write(struct.pack("<Q", len(mjson)))
+        f.write(mjson)
+        for a in leaves:
+            f.write(a.tobytes())
+    os.replace(tmp, path)
+    return path
+
+
+def read_param_blob(template, path: str):
+    """Rebuild ``template``'s pytree with leaf VALUES memory-mapped
+    from the blob (read-only; the OS page cache shares the physical
+    pages across every worker on the host). ``template`` supplies the
+    tree structure; keys are matched by flattened tree path."""
+    import jax
+    with open(path, "rb") as f:
+        magic = f.read(len(_BLOB_MAGIC))
+        if magic != _BLOB_MAGIC:
+            raise ValueError(f"{path} is not a param blob "
+                             f"(magic {magic!r})")
+        (mlen,) = struct.unpack("<Q", f.read(8))
+        manifest = json.loads(f.read(mlen))
+        base = f.tell()
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for p, leaf in flat:
+        key = _KEYSEP.join(str(x) for x in p)
+        m = by_key[key]
+        arr = np.memmap(path, dtype=_resolve_dtype(m["dtype"]), mode="r",
+                        offset=base + m["offset"],
+                        shape=tuple(m["shape"]))
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --- signal fault hooks ------------------------------------------------------
+
+class SignalAtTick:
+    """Deliver a real signal to our own pid when the server's tick
+    counter hits ``at`` — plugged into ``CNNPipelineServer.injector``
+    so it fires inside ``_tick_once``, i.e. genuinely mid-tick."""
+
+    def __init__(self, at: int, sig: int):
+        self.at = at
+        self.sig = sig
+        self._fired = False
+
+    def maybe_fail(self, tick: int):
+        if not self._fired and tick >= self.at:
+            self._fired = True
+            os.kill(os.getpid(), self.sig)
+
+
+# --- the worker --------------------------------------------------------------
+
+def build_server(args):
+    """Construct the replica's serving cell exactly as the supervisor
+    planned it (deterministic: same inputs, same plan, same bits)."""
+    import jax
+    from repro.configs import get_config
+    from repro.core import planner
+    from repro.launch.serve import CNNPipelineServer
+    from repro.models import cnn
+    cfg = get_config(args.arch)
+    if args.param_blob:
+        template = cnn.init_cnn(cfg, jax.random.PRNGKey(args.seed))
+        params = read_param_blob(template, args.param_blob)
+    else:
+        params = cnn.init_cnn(cfg, jax.random.PRNGKey(args.seed))
+    plan = planner.plan_cnn_pipeline(cfg, params, args.stages)
+    return CNNPipelineServer(
+        args.arch, mb_size=args.mb_size, image_size=args.image_size,
+        seed=args.seed, placed=False, cfg=cfg, params=params, plan=plan)
+
+
+def warmup(server):
+    """Compile the tick (the expensive part of worker startup) on a
+    throwaway microbatch, then zero the state — after this the server
+    is bitwise-fresh and every real tick is fast enough to heartbeat
+    between."""
+    server.on_result = lambda key, logits: None
+    server.enqueue(("__warmup__", -1),
+                   np.zeros((server.mb_size, server.image_size,
+                             server.image_size, 3), np.float32))
+    server.run()
+    server.respawn()
+
+
+def serve(ch: transport.Channel, server, *, heartbeat_interval_s: float,
+          io_deadline_s: float) -> int:
+    """The worker's main loop; returns the exit code."""
+    from repro.launch.mesh import mesh_context
+    server.on_result = lambda key, logits: ch.send(
+        ("result", key, np.asarray(logits)), deadline_s=io_deadline_s)
+    ch.send(("ready", os.getpid()), deadline_s=io_deadline_s)
+    last_hb = 0.0
+    while True:
+        try:
+            msgs = ch.drain()
+        except transport.PeerClosedError:
+            return 0                      # supervisor is gone: retire
+        for m in msgs:
+            tag = m[0]
+            if tag == "work":
+                _, key, imgs, n_valid = m
+                server.enqueue(tuple(key), imgs, n_valid=n_valid)
+            elif tag == "purge":
+                rid = m[1]
+                server.purge(lambda k, _r=rid: k[0] == _r)
+            elif tag == "stop":
+                return 0
+            else:
+                raise transport.ProtocolError(
+                    f"unknown control message {tag!r}")
+        now = time.monotonic()
+        if now - last_hb >= heartbeat_interval_s:
+            ch.send(("hb", server.ticks, now), deadline_s=io_deadline_s)
+            last_hb = now
+        if server.busy:
+            with mesh_context(server.mesh):
+                server._tick_once()
+        else:
+            ch.poll(heartbeat_interval_s)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="serving-tier replica worker (spawned by "
+                    "ProcessServingTier; not for interactive use)")
+    ap.add_argument("--fd", type=int, required=True,
+                    help="inherited socketpair fd to the supervisor")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--mb-size", type=int, default=2)
+    ap.add_argument("--image-size", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--param-blob", default=None)
+    ap.add_argument("--heartbeat-interval", type=float, default=0.1)
+    ap.add_argument("--io-deadline", type=float, default=30.0)
+    ap.add_argument("--kill-at-tick", type=int, default=None,
+                    help="fault hook: SIGKILL our own pid mid-tick, "
+                         "N serving ticks after warmup")
+    ap.add_argument("--stop-at-tick", type=int, default=None,
+                    help="fault hook: SIGSTOP (wedge) ourselves "
+                         "mid-tick, N serving ticks after warmup")
+    args = ap.parse_args(argv)
+    import socket
+    sock = socket.socket(family=socket.AF_UNIX, type=socket.SOCK_STREAM,
+                         fileno=args.fd)
+    ch = transport.Channel(sock)
+    try:
+        server = build_server(args)
+        warmup(server)
+        # arm fault hooks only now: warmup ticks must never trip them
+        if args.kill_at_tick is not None:
+            server.injector = SignalAtTick(server.ticks + args.kill_at_tick,
+                                           signal.SIGKILL)
+        elif args.stop_at_tick is not None:
+            server.injector = SignalAtTick(server.ticks + args.stop_at_tick,
+                                           signal.SIGSTOP)
+        return serve(ch, server,
+                     heartbeat_interval_s=args.heartbeat_interval,
+                     io_deadline_s=args.io_deadline)
+    except transport.TransportError:
+        return 0                          # supervisor-side teardown
+    except Exception as e:                # noqa: BLE001 — report + die
+        try:
+            ch.send(("fatal", repr(e), traceback.format_exc()),
+                    deadline_s=5.0)
+        except Exception:                 # noqa: BLE001 — best effort
+            pass
+        return 1
+    finally:
+        ch.close()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

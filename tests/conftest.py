@@ -2,3 +2,11 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "procfault: multi-process serving-tier fault tests (spawn real "
+        "worker interpreters, send real SIGKILL/SIGSTOP; run on CI's "
+        "process-fault leg, deselect elsewhere with -m 'not procfault')")

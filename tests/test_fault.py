@@ -3,13 +3,22 @@ injected failures. Covers the three recovery regimes the serving tier's
 fault model leans on: failure BEFORE the first checkpoint (cold restart
 from make_state), failure mid-run (resume from latest_step, replaying
 at most ckpt_every-1 steps, final state bitwise equal to an
-uninterrupted run), and restart-budget exhaustion re-raising."""
+uninterrupted run), and restart-budget exhaustion re-raising.
+
+Also the supervisor-side liveness primitives the cross-process tier
+builds on: the heartbeat FailureDetector's alive/suspect/dead bands
+(fake clock — no sleeping), construction-time threshold validation,
+the full-jitter retry backoff, and checkpoint/ledger corruption
+surfacing as typed CheckpointCorruptError."""
+import json
+import os
 import tempfile
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.checkpoint import ckpt
 from repro.runtime import fault
 
 
@@ -73,3 +82,196 @@ def test_restart_budget_exhaustion_raises():
             fault.run_with_restarts(
                 _mk, _step, n_steps=10, ckpt_dir=d, ckpt_every=100,
                 max_restarts=2, injector=inj)
+
+
+# --- heartbeat failure detector (fake clock: no sleeping) --------------------
+
+def test_detector_bands_alive_suspect_dead():
+    d = fault.FailureDetector(interval_s=0.1, suspect_after_s=0.4,
+                              dead_after_s=1.0)
+    d.reset("w", 0.0)
+    d.beat("w", 0.1, progress=1)
+    assert d.state("w", 0.2) == "alive"
+    assert d.state("w", 0.6) == "suspect"       # silent past 0.4
+    assert d.state("w", 1.2) == "dead"          # silent past 1.0
+    assert d.missed("w", 0.6) == 5
+
+
+def test_detector_beating_but_stalled_is_wedged():
+    """Heartbeats keep arriving but the tick counter never advances: a
+    busy worker that stopped making progress must cross into suspect
+    and then dead on the PROGRESS clock, not stay 'alive' forever."""
+    d = fault.FailureDetector(interval_s=0.1, suspect_after_s=0.4,
+                              dead_after_s=1.0)
+    d.reset("w", 0.0)
+    t = 0.0
+    while t < 1.5:                              # beats every interval...
+        t += 0.1
+        d.beat("w", t, progress=3)              # ...same tick every time
+    assert d.state("w", t, busy=True) == "dead"
+    # an idle worker with no queued work is NOT judged on progress
+    assert d.state("w", t, busy=False) == "alive"
+
+
+def test_detector_progress_resets_stall_clock():
+    d = fault.FailureDetector(interval_s=0.1, suspect_after_s=0.4,
+                              dead_after_s=1.0)
+    d.reset("w", 0.0)
+    d.beat("w", 0.5, progress=1)
+    d.beat("w", 1.0, progress=2)                # advancing: stall resets
+    assert d.state("w", 1.1) == "alive"
+
+
+def test_detector_reset_rearms_after_respawn():
+    d = fault.FailureDetector(interval_s=0.1, suspect_after_s=0.4,
+                              dead_after_s=1.0)
+    d.reset("w", 0.0)
+    assert d.state("w", 5.0) == "dead"
+    d.reset("w", 5.0)                           # respawned worker
+    assert d.state("w", 5.1) == "alive"
+
+
+@pytest.mark.parametrize("iv,sus,dead", [
+    (0.0, 0.4, 1.0),                 # interval must be > 0
+    (-0.1, 0.4, 1.0),
+    (0.5, 0.1, 5.0),                 # suspect < interval
+    (0.5, 0.6, 1.0),                 # dead <= 2x interval
+    (0.1, 0.5, 0.5),                 # dead <= suspect: slow == dead
+    (0.1, 0.6, 0.5),
+])
+def test_heartbeat_config_invariants_raise(iv, sus, dead):
+    with pytest.raises(ValueError):
+        fault.validate_heartbeat_config(iv, sus, dead)
+
+
+def test_heartbeat_config_accepts_sane_defaults():
+    fault.validate_heartbeat_config(0.1, 0.4, 1.0)
+    d = fault.FailureDetector(interval_s=0.1)   # derived thresholds
+    assert d.suspect_after_s > d.interval_s
+    assert d.dead_after_s > 2 * d.interval_s
+
+
+# --- full-jitter retry backoff ----------------------------------------------
+
+def test_backoff_full_jitter_bounded_and_nondegenerate():
+    """Backoff draws uniformly from [0, min(cap, base*2^(n-1))]: the
+    cap must bind, draws must spread (jitter, not a fixed ladder), and
+    the same seed must reproduce the same schedule."""
+    from repro.runtime.tier import ServingTier
+    t1 = object.__new__(ServingTier)
+    t1._init_bookkeeping(max_queue_per_tenant=None, request_timeout_s=None,
+                         max_retries=2, backoff_base_s=0.1,
+                         backoff_max_s=2.0, jitter_seed=7, clock=lambda: 0.0,
+                         sleep=lambda s: None, verbose=False)
+    draws = {n: [t1._backoff_s(n) for _ in range(200)] for n in (1, 4, 12)}
+    for n, ds in draws.items():
+        cap = min(2.0, 0.1 * 2 ** (n - 1))
+        assert all(0.0 <= d <= cap for d in ds)
+        assert len({round(d, 12) for d in ds}) > 100    # spread, not ladder
+    assert max(draws[12]) <= 2.0                        # cap binds
+    t2 = object.__new__(ServingTier)
+    t2._init_bookkeeping(max_queue_per_tenant=None, request_timeout_s=None,
+                         max_retries=2, backoff_base_s=0.1,
+                         backoff_max_s=2.0, jitter_seed=7, clock=lambda: 0.0,
+                         sleep=lambda s: None, verbose=False)
+    # same seed, same call sequence -> identical schedule
+    assert [t2._backoff_s(1) for _ in range(200)] == draws[1]
+
+
+def test_backoff_config_validates_loudly():
+    from repro.runtime.tier import ServingTier
+    t = object.__new__(ServingTier)
+    with pytest.raises(ValueError):
+        t._init_bookkeeping(max_queue_per_tenant=None, request_timeout_s=None,
+                            max_retries=2, backoff_base_s=-0.1,
+                            backoff_max_s=2.0, jitter_seed=0,
+                            clock=lambda: 0.0, sleep=lambda s: None,
+                            verbose=False)
+
+
+# --- checkpoint corruption surfaces as a typed error -------------------------
+
+def _tree():
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.ones(3, np.float32)}
+
+
+def test_truncated_checkpoint_shard_is_typed_error():
+    with tempfile.TemporaryDirectory() as d:
+        path = ckpt.save(_tree(), d, 0)
+        shard = os.path.join(path, "shard_0.npz")
+        with open(shard, "r+b") as f:
+            f.truncate(os.path.getsize(shard) // 2)
+        with pytest.raises(ckpt.CheckpointCorruptError) as ei:
+            ckpt.restore(_tree(), d, 0)
+        assert "truncated" in str(ei.value)
+
+
+def test_corrupt_checkpoint_bytes_is_typed_error():
+    with tempfile.TemporaryDirectory() as d:
+        path = ckpt.save(_tree(), d, 0)
+        shard = os.path.join(path, "shard_0.npz")
+        size = os.path.getsize(shard)
+        with open(shard, "r+b") as f:        # same size, flipped bytes
+            f.seek(size // 2)
+            f.write(b"\xff\x00\xff\x00")
+        with pytest.raises(ckpt.CheckpointCorruptError) as ei:
+            ckpt.restore(_tree(), d, 0)
+        assert "CRC32" in str(ei.value)
+
+
+def test_missing_manifest_is_typed_error():
+    with tempfile.TemporaryDirectory() as d:
+        path = ckpt.save(_tree(), d, 0)
+        os.remove(os.path.join(path, "MANIFEST.json"))
+        with pytest.raises(ckpt.CheckpointCorruptError):
+            ckpt.restore(_tree(), d, 0)
+
+
+def test_intact_checkpoint_roundtrips_after_hardening():
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(_tree(), d, 3)
+        got, step = ckpt.restore(_tree(), d)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(got["w"]), _tree()["w"])
+
+
+# --- supervisor replay ledger ------------------------------------------------
+
+def test_ledger_roundtrip_and_pointer_gc():
+    with tempfile.TemporaryDirectory() as d:
+        assert ckpt.load_ledger(d) is None
+        a1 = {"chunk_0_0": np.zeros((2, 4, 4, 3), np.float32)}
+        ckpt.save_ledger(d, {"next_rid": 1, "requests": {}}, a1)
+        a2 = {"logits_0_0": np.ones((2, 10), np.float32)}
+        ckpt.save_ledger(d, {"next_rid": 2, "requests": {}}, a2)
+        meta, arrays = ckpt.load_ledger(d)
+        assert meta["next_rid"] == 2
+        np.testing.assert_array_equal(arrays["logits_0_0"],
+                                      a2["logits_0_0"])
+        payloads = [n for n in os.listdir(d)
+                    if n.startswith("ledger-") and n.endswith(".npz")]
+        assert len(payloads) == 1            # superseded payload GC'd
+
+
+def test_ledger_truncated_payload_is_typed_error():
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_ledger(d, {"k": 1}, {"x": np.arange(1000)})
+        with open(os.path.join(d, "ledger.json")) as f:
+            payload = json.load(f)["payload"]
+        p = os.path.join(d, payload)
+        with open(p, "r+b") as f:
+            f.truncate(os.path.getsize(p) - 16)
+        with pytest.raises(ckpt.CheckpointCorruptError) as ei:
+            ckpt.load_ledger(d)
+        assert "truncated" in str(ei.value)
+
+
+def test_ledger_missing_payload_is_typed_error():
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_ledger(d, {"k": 1}, {"x": np.arange(10)})
+        with open(os.path.join(d, "ledger.json")) as f:
+            payload = json.load(f)["payload"]
+        os.remove(os.path.join(d, payload))
+        with pytest.raises(ckpt.CheckpointCorruptError):
+            ckpt.load_ledger(d)

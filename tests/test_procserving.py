@@ -1,0 +1,204 @@
+"""Cross-process serving tier (runtime/tier.ProcessServingTier): real
+OS-process replica workers under real signals.
+
+The headline contracts, each against genuine kernel-delivered faults
+rather than injected exceptions:
+- cross-process bitwise parity: a multi-process tier's logits equal the
+  in-process ServingTier's bit for bit (shared packed param blob +
+  deterministically re-derived plan);
+- SIGKILL mid-tick: the supervisor detects the death (waitpid or
+  channel EOF), drains the corpse's channel for pre-death results,
+  respawns, replays — and the recovered stream is bitwise identical;
+- SIGSTOP: a wedged-but-recoverable worker is flagged SUSPECT
+  (straggler — deprioritized, missed heartbeats counted) and NOT
+  declared dead while dead_after_s is generous; after SIGCONT it
+  finishes its work;
+- a wedged worker past dead_after_s IS declared dead via the heartbeat
+  detector (detected_via == "heartbeat"), killed, and replaced;
+- supervisor restart: a fresh tier adopts the crash-safe ledger
+  mid-stream and finishes bitwise equal to an uninterrupted run.
+
+Every test spawns real interpreters that each compile the pipeline, so
+this file runs on CI's process-fault leg only (deselect with
+``-m "not procfault"`` or ``--ignore``)."""
+import os
+import signal
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.runtime import tier as T
+
+pytestmark = [
+    pytest.mark.procfault,
+    pytest.mark.skipif(os.name != "posix",
+                       reason="SIGKILL/SIGSTOP fault hooks need POSIX"),
+]
+
+ARCH = "mobilenet_v1"          # matches test_serving_tier: cheapest compile
+IMG = 32
+
+
+def _imgs(seed, batch):
+    return np.asarray(jax.random.normal(
+        jax.random.PRNGKey(seed), (batch, IMG, IMG, 3)), np.float32)
+
+
+def _proc_tier(**kw):
+    kw.setdefault("n_procs", 2)
+    kw.setdefault("n_stages", 2)
+    kw.setdefault("mb_size", 2)
+    kw.setdefault("image_size", IMG)
+    return T.ProcessServingTier(ARCH, **kw)
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """In-process single-replica ServingTier outputs for the shared
+    request stream — the bitwise ground truth every process-tier test
+    compares against. Module-scoped: one compile for the whole file."""
+    ref = T.ServingTier(ARCH, n_replicas=1, n_stages=2, mb_size=2,
+                        image_size=IMG, placed=False)
+    rids = [ref.submit(_imgs(10 + i, 4)) for i in range(3)]
+    ref.run()
+    return [ref.results(r) for r in rids]
+
+
+def _submit_stream(tier, n_req=3, batch=4, seed0=10):
+    return [tier.submit(_imgs(seed0 + i, batch)) for i in range(n_req)]
+
+
+# --- bitwise parity across the process boundary ------------------------------
+
+def test_process_tier_bitwise_matches_inprocess(reference):
+    with _proc_tier() as tier:
+        rids = _submit_stream(tier)
+        m = tier.run()
+        got = [tier.results(r) for r in rids]
+    assert m["completed"] == 3 and m["failed"] == 0
+    assert m["respawns"] == 0
+    assert len(m["replica_pids"]) == 2
+    assert len(set(m["replica_pids"]) | {os.getpid()}) == 3  # real procs
+    for a, b in zip(reference, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- SIGKILL mid-stream ------------------------------------------------------
+
+def test_sigkill_mid_tick_recovers_bitwise(reference):
+    """Worker 1 SIGKILLs its own pid inside a serving tick. The
+    supervisor must notice, respawn, replay the lost microbatches, and
+    the delivered stream must be bitwise identical to no-failure."""
+    with _proc_tier(worker_hooks={1: {"kill_at_tick": 1}}) as tier:
+        rids = _submit_stream(tier)
+        m = tier.run()
+        got = [tier.results(r) for r in rids]
+    assert m["completed"] == 3 and m["failed"] == 0
+    assert m["respawns"] == 1
+    assert m["recovered_microbatches"] >= 1
+    [death] = m["worker_exits"]
+    assert death["idx"] == 1 and death["exit_code"] == -signal.SIGKILL
+    # SIGKILL is seen as child-exit or channel-EOF depending on which
+    # the supervisor reaches first — never the slow heartbeat path
+    assert death["detected_via"] in ("exit", "transport")
+    # recovery headline: detection-to-first-recovered-emit, bounded
+    assert m["recovery_s"] is not None and 0.0 < m["recovery_s"] < 60.0
+    for a, b in zip(reference, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- SIGSTOP: slow is not dead -----------------------------------------------
+
+def test_sigstop_flags_straggler_not_dead(reference):
+    """A SIGSTOP'd worker misses heartbeats and must be SUSPECTED
+    (deprioritized) — not declared dead — while dead_after_s is
+    generous. After SIGCONT it drains its backlog; nothing respawns
+    and the stream is still bitwise."""
+    with _proc_tier(heartbeat_interval_s=0.1, suspect_after_s=0.4,
+                    dead_after_s=30.0,
+                    worker_hooks={1: {"stop_at_tick": 1}}) as tier:
+        rids = _submit_stream(tier)
+        deadline = time.monotonic() + 120
+        resumed = False
+        while tier._live_rids() and time.monotonic() < deadline:
+            tier.run(max_rounds=20)
+            w = tier.workers[1]
+            if not resumed and w.straggler:
+                os.kill(w.pid, signal.SIGCONT)
+                resumed = True
+        got = [tier.results(r) for r in rids]
+        assert resumed, "worker 1 was never flagged straggler"
+        assert tier.respawns == 0          # slow != dead
+        assert tier.missed_heartbeats >= 1
+        assert tier.straggler_events       # (idx, pid, missed) records
+        assert tier.workers[1].generation == 0   # original process
+    for a, b in zip(reference, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_wedged_worker_declared_dead_via_heartbeats(reference):
+    """With a tight dead_after_s, a permanently wedged (SIGSTOP, never
+    resumed) worker must cross suspect into dead on the HEARTBEAT path
+    — no exit, no channel EOF — then be killed and replaced, and the
+    stream must still finish bitwise."""
+    with _proc_tier(heartbeat_interval_s=0.1, suspect_after_s=0.3,
+                    dead_after_s=1.0,
+                    worker_hooks={1: {"stop_at_tick": 1}}) as tier:
+        rids = _submit_stream(tier)
+        m = tier.run()
+        got = [tier.results(r) for r in rids]
+    assert m["completed"] == 3 and m["failed"] == 0
+    assert m["respawns"] == 1
+    [death] = m["worker_exits"]
+    assert death["detected_via"] == "heartbeat"
+    assert death["exit_code"] == -signal.SIGKILL   # supervisor's coup
+    assert m["missed_heartbeats"] >= 3
+    for a, b in zip(reference, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- supervisor restart from the ledger --------------------------------------
+
+def test_supervisor_restart_resumes_ledger_bitwise(reference):
+    """Kill the whole supervisor mid-stream (close() after a bounded
+    number of rounds); a FRESH tier pointed at the same ledger_dir must
+    adopt the delivered logits, replay only the undelivered chunks,
+    and finish bitwise equal to an uninterrupted run."""
+    with tempfile.TemporaryDirectory() as ldir:
+        tier1 = _proc_tier(n_procs=1, ledger_dir=ldir)
+        try:
+            rids = _submit_stream(tier1)
+            tier1.run(max_rounds=2)        # stop mid-stream
+        finally:
+            tier1.close()
+        with _proc_tier(n_procs=1, ledger_dir=ldir) as tier2:
+            tier2.run()
+            got = [tier2.results(r) for r in rids]
+    for a, b in zip(reference, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- construction-time validation (cheap: fails before any spawn) ------------
+
+@pytest.mark.parametrize("bad", [
+    dict(heartbeat_interval_s=0.0),
+    dict(heartbeat_interval_s=-1.0),
+    dict(heartbeat_interval_s=0.5, suspect_after_s=0.1),
+    dict(heartbeat_interval_s=0.5, dead_after_s=1.0),    # <= 2x interval
+    dict(suspect_after_s=5.0, dead_after_s=5.0),         # slow == dead
+    dict(suspect_after_s=6.0, dead_after_s=5.0),
+])
+def test_heartbeat_config_validated_before_spawn(bad):
+    with pytest.raises(ValueError):
+        _proc_tier(**bad)
+
+
+def test_backoff_config_validated():
+    with pytest.raises(ValueError):
+        _proc_tier(backoff_base_s=-0.1)
+    with pytest.raises(ValueError):
+        _proc_tier(backoff_max_s=-1.0)

@@ -1,0 +1,228 @@
+"""runtime/transport: the framed, CRC-checked, deadline-aware channel
+the cross-process serving tier runs on. Every corruption mode must map
+to a DISTINCT typed error (the supervisor routes on type), partial and
+interleaved reads must reassemble, and a peer that dies mid-frame must
+be distinguishable from one that closed cleanly."""
+import socket
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.runtime import transport
+from repro.runtime.transport import (
+    Channel, ChecksumError, FrameTooLargeError, PeerClosedError,
+    ProtocolError, TransportTimeout, encode_frame,
+)
+
+
+def _pair(**kw):
+    a, b = socket.socketpair()
+    return Channel(a, **kw), Channel(b, **kw)
+
+
+# --- roundtrip ---------------------------------------------------------------
+
+@pytest.mark.parametrize("payload", [
+    b"",                                   # zero-length frames are legal
+    b"\x00",
+    b"x" * 1,
+    b"hello world",
+    bytes(range(256)) * 7,
+    b"\xff" * (1 << 16),                   # bigger than one recv() chunk
+    b"z" * ((1 << 16) + 13),               # straddles chunk boundary
+])
+def test_roundtrip_bytes(payload):
+    tx, rx = _pair()
+    tx.send_bytes(payload)
+    assert rx.recv_bytes(deadline_s=5.0) == payload
+
+
+def test_roundtrip_objects_including_numpy():
+    tx, rx = _pair()
+    logits = np.arange(24, dtype=np.float32).reshape(2, 12)
+    msgs = [("hb", 7, 0.25),
+            ("result", (3, 1), logits),
+            ("work", (0, 0), np.zeros((2, 4, 4, 3), np.float32), 2),
+            ("stop",)]
+    for m in msgs:
+        tx.send(m)
+    for m in msgs:
+        got = rx.recv(deadline_s=5.0)
+        assert got[0] == m[0]
+        for a, b in zip(got, m):
+            if isinstance(b, np.ndarray):
+                np.testing.assert_array_equal(a, b)
+            else:
+                assert a == b
+
+
+def test_many_frames_in_order():
+    """Property-style: a burst of variable-size frames arrives complete
+    and in order through the buffered reassembly path."""
+    tx, rx = _pair()
+    rng = np.random.default_rng(0)
+    payloads = [rng.bytes(int(n)) for n in rng.integers(0, 4096, 64)]
+    got = []
+    for i in range(0, len(payloads), 8):   # bursts bounded well below
+        burst = payloads[i:i + 8]          # the kernel socket buffer
+        for p in burst:
+            tx.send_bytes(p, deadline_s=5.0)
+        got.extend(rx.recv_bytes(deadline_s=5.0) for _ in burst)
+    assert got == payloads
+
+
+# --- interleaved / partial reads ---------------------------------------------
+
+def test_interleaved_partial_reads_reassemble():
+    """Feed a multi-frame byte stream one byte at a time: try_recv_bytes
+    returns None until each frame completes, then yields it whole."""
+    a, b = socket.socketpair()
+    rx = Channel(b)
+    stream = b"".join(encode_frame(p) for p in (b"first", b"", b"third"))
+    out = []
+    for i in range(len(stream)):
+        a.sendall(stream[i:i + 1])
+        got = rx.try_recv_bytes()
+        if got is not None:
+            out.append(got)
+    # drain anything completed by the final byte
+    while True:
+        got = rx.try_recv_bytes()
+        if got is None:
+            break
+        out.append(got)
+    assert out == [b"first", b"", b"third"]
+
+
+def test_drain_returns_all_buffered_messages():
+    tx, rx = _pair()
+    for i in range(5):
+        tx.send(("hb", i, float(i)))
+    rx.poll(5.0)
+    msgs = rx.drain()
+    assert [m[1] for m in msgs] == list(range(5))
+
+
+# --- typed corruption errors -------------------------------------------------
+
+def test_oversized_frame_rejected_on_send():
+    tx, _rx = _pair(max_frame=64)
+    with pytest.raises(FrameTooLargeError):
+        tx.send_bytes(b"x" * 65)
+
+
+def test_oversized_frame_rejected_on_recv_before_buffering():
+    """A garbled length field must be rejected from the header alone —
+    the reader never allocates the declared payload."""
+    a, b = socket.socketpair()
+    rx = Channel(b, max_frame=64)
+    a.sendall(transport.HEADER.pack(transport.MAGIC, 1 << 30, 0))
+    with pytest.raises(FrameTooLargeError):
+        rx.recv_bytes(deadline_s=5.0)
+
+
+def test_crc_corruption_is_checksum_error():
+    a, b = socket.socketpair()
+    rx = Channel(b)
+    frame = bytearray(encode_frame(b"payload-bytes"))
+    frame[-1] ^= 0xFF                      # flip one payload byte
+    a.sendall(bytes(frame))
+    with pytest.raises(ChecksumError):
+        rx.recv_bytes(deadline_s=5.0)
+
+
+def test_bad_magic_is_protocol_error_and_poisons():
+    a, b = socket.socketpair()
+    rx = Channel(b)
+    bad = struct.pack(">III", 0xDEADBEEF, 0, 0)
+    a.sendall(bad + encode_frame(b"never delivered"))
+    with pytest.raises(ProtocolError):
+        rx.recv_bytes(deadline_s=5.0)
+    # the stream lost framing: every later call re-raises (poisoned),
+    # even though a well-formed frame followed the garbage
+    with pytest.raises(ProtocolError):
+        rx.recv_bytes(deadline_s=5.0)
+    with pytest.raises(ProtocolError):
+        rx.drain()
+
+
+def test_error_types_are_distinct_and_typed():
+    """The supervisor routes on exception type; the hierarchy must keep
+    checksum/oversize under ProtocolError but PeerClosed/Timeout out."""
+    assert issubclass(ChecksumError, ProtocolError)
+    assert issubclass(FrameTooLargeError, ProtocolError)
+    assert not issubclass(PeerClosedError, ProtocolError)
+    assert not issubclass(TransportTimeout, ProtocolError)
+    for err in (ProtocolError, ChecksumError, FrameTooLargeError,
+                PeerClosedError, TransportTimeout):
+        assert issubclass(err, transport.TransportError)
+
+
+# --- peer death --------------------------------------------------------------
+
+def test_peer_closed_cleanly_between_frames():
+    tx, rx = _pair()
+    tx.send_bytes(b"last words")
+    tx.close()
+    assert rx.recv_bytes(deadline_s=5.0) == b"last words"
+    with pytest.raises(PeerClosedError) as ei:
+        rx.recv_bytes(deadline_s=5.0)
+    assert "mid-frame" not in str(ei.value)
+
+
+def test_peer_closed_mid_frame_is_distinguished():
+    a, b = socket.socketpair()
+    rx = Channel(b)
+    frame = encode_frame(b"x" * 100)
+    a.sendall(frame[:len(frame) - 40])     # header + part of the payload
+    a.close()
+    with pytest.raises(PeerClosedError) as ei:
+        rx.recv_bytes(deadline_s=5.0)
+    assert "mid-frame" in str(ei.value)
+
+
+def test_drain_delivers_predeath_messages_before_raising():
+    """A worker SIGKILL'd after emitting results: drain() must hand the
+    supervisor every complete buffered message first, and only raise
+    PeerClosedError once the channel is truly empty."""
+    tx, rx = _pair()
+    tx.send(("result", (0, 0), 1))
+    tx.send(("result", (0, 1), 2))
+    tx.close()
+    rx.poll(5.0)
+    msgs = rx.drain()
+    assert [m[1] for m in msgs] == [(0, 0), (0, 1)]
+    with pytest.raises(PeerClosedError):
+        rx.drain()
+
+
+# --- deadlines ---------------------------------------------------------------
+
+def test_recv_deadline_expires_as_transport_timeout():
+    _tx, rx = _pair()
+    with pytest.raises(TransportTimeout):
+        rx.recv_bytes(deadline_s=0.05)
+
+
+def test_send_deadline_expires_when_peer_never_reads():
+    """Fill the kernel buffers against a non-reading peer until the
+    send deadline trips — a wedged worker cannot wedge the supervisor."""
+    tx, _rx = _pair()
+    big = b"x" * (1 << 20)
+    with pytest.raises(TransportTimeout):
+        for _ in range(256):               # far beyond any socket buffer
+            tx.send_bytes(big, deadline_s=0.2)
+
+
+def test_frame_encoding_layout():
+    """The wire format is a contract (worker and supervisor may be
+    different builds): magic, BE length, CRC32, then the raw payload."""
+    payload = b"abc"
+    frame = encode_frame(payload)
+    magic, length, crc = transport.HEADER.unpack(frame[:12])
+    assert magic == transport.MAGIC
+    assert length == 3
+    assert crc == (zlib.crc32(payload) & 0xFFFFFFFF)
+    assert frame[12:] == payload
