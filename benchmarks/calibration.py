@@ -49,14 +49,14 @@ def main(smoke: bool = False, out: str = None,
     params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
     cache = tuning.TuningCache.load(cache_path)
 
-    pa = planner.plan_cnn_pipeline(cfg, params, N_STAGES)
+    pa = planner.plan(cfg, params, planner.PlanRequest(n_stages=N_STAGES))
     import warnings
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")
-        pm = planner.plan_cnn_pipeline(cfg, params, N_STAGES,
-                                       model="measured", tuning_cache=cache)
-        pm2 = planner.plan_cnn_pipeline(cfg, params, N_STAGES,
-                                        model="measured", tuning_cache=cache)
+        pm = planner.plan(cfg, params, planner.PlanRequest(
+            n_stages=N_STAGES, model="measured", tuning_cache=cache))
+        pm2 = planner.plan(cfg, params, planner.PlanRequest(
+            n_stages=N_STAGES, model="measured", tuning_cache=cache))
     assert pm["stage_of"] == pm2["stage_of"], \
         "measured planning must be deterministic given the cache file"
 

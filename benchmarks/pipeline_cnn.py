@@ -35,7 +35,8 @@ def main(smoke: bool = False, out: str = None):
     mbs = (1, 4) if smoke else (1, 2, 4, 8)
     cfg = get_config(ARCH)
     params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
-    plan = planner.plan_cnn_pipeline(cfg, params, N_STAGES)
+    plan = planner.plan(cfg, params,
+                        planner.PlanRequest(n_stages=N_STAGES))
     s = plan["n_stages"]
     results = {"arch": ARCH, "n_stages": s, "image_size": img,
                "imbalance": plan["imbalance"], "points": []}

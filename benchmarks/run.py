@@ -72,6 +72,14 @@ GATE = {
     # fails; scheduler jitter does not)
     "serving_latency_p50_s": ("lower", 1.00),
     "serving_latency_p99_s": ("lower", 1.00),
+    # batch-1 latency mode: wall-clock single-image round trips —
+    # direction-only, very loose (same rationale as the tail above)
+    "serving_latency_batch1_p50_s": ("lower", 1.00),
+    "serving_latency_batch1_p99_s": ("lower", 1.00),
+    # quantized placement: pure byte accounting over the same cut —
+    # deterministic, tight. Must stay <= 0.5 (the ">= 2x cut" bar);
+    # the analytic value is ~0.26 on sparse ResNet-50.
+    "placement_param_ratio_int8": ("lower", 0.05),
     # cross-process recovery: kill-to-first-recovered-emit wall clock
     # (worker respawn + recompile dominate on shared runners) —
     # direction-only, very loose. Missed-heartbeat count stays
@@ -103,9 +111,12 @@ def _headline(modules: dict) -> dict:
     for arch, a in (fus.get("archs") or {}).items():
         out[f"fusion_hbm_block_ratio_{arch}"] = a["block_bytes_ratio"]
         out[f"fusion_hbm_graph_ratio_{arch}"] = a["graph_bytes_ratio"]
-    for arch, a in ((modules.get("placement") or {}).get("archs")
-                    or {}).items():
+    plc = modules.get("placement") or {}
+    for arch, a in (plc.get("archs") or {}).items():
         out[f"placement_param_ratio_{arch}"] = a["placed_ratio"]
+    if "quantized" in plc:
+        out["placement_param_ratio_int8"] = \
+            plc["quantized"]["placement_param_ratio_int8"]
     cal = modules.get("calibration") or {}
     if "pipeline_imbalance_measured" in cal:
         out["pipeline_imbalance_measured"] = \
@@ -123,6 +134,11 @@ def _headline(modules: dict) -> dict:
         out["serving_steady_bubble"] = srv["serving_steady_bubble"]
         out["serving_latency_p50_s"] = srv.get("serving_latency_p50_s")
         out["serving_latency_p99_s"] = srv.get("serving_latency_p99_s")
+    if "serving_latency_batch1_p50_s" in srv:
+        out["serving_latency_batch1_p50_s"] = \
+            srv["serving_latency_batch1_p50_s"]
+        out["serving_latency_batch1_p99_s"] = \
+            srv.get("serving_latency_batch1_p99_s")
     if "serving_recovery_s" in srv:
         out["serving_recovery_s"] = srv["serving_recovery_s"]
         out["serving_recovery_missed_heartbeats"] = \

@@ -18,6 +18,16 @@ Plus the request-latency tail (``serving_latency_p50_s`` /
 metric the serving tier's deadline routing is judged by. Wall-clock on
 shared runners -> loose, regression-direction-only gate.
 
+The batch-1 latency section runs the single-image latency tick
+(``serve(ServeConfig(mode="latency"))`` — HPIPE's operating point: one
+request in flight, no microbatch fill, all stages composed into ONE
+jit) against the throughput path forced to batch 1 / microbatch 1,
+and asserts the latency-mode p50 is STRICTLY below the throughput
+path's per-request p50 — the scheduler overhead (tick loop, wire
+packing per stage, fill/drain bookkeeping) is what the mode removes.
+Emits ``serving_latency_batch1_p50_s`` / ``serving_latency_batch1_p99_s``
+(wall-clock -> loose, lower-is-better gate).
+
 The recovery section runs the CROSS-PROCESS tier with a worker armed
 to SIGKILL its own pid mid-tick and reports:
 
@@ -42,7 +52,7 @@ import json
 
 import numpy as np
 
-from repro.launch.serve import serve_cnn_continuous
+from repro.launch.serve import ServeConfig, serve
 from benchmarks.common import row
 
 ARCH = "resnet50"
@@ -84,14 +94,36 @@ def recovery(smoke: bool = False) -> dict:
     }
 
 
+def latency_batch1(smoke: bool = False) -> dict:
+    """Single-image latency tick vs the throughput path at batch 1."""
+    img = 32 if smoke else 48
+    n_requests = 4 if smoke else 8
+    lat = serve(ServeConfig(ARCH, mode="latency", n_requests=n_requests,
+                            n_stages=N_STAGES, image_size=img,
+                            verbose=False))
+    thr = serve(ServeConfig(ARCH, continuous=True, n_requests=n_requests,
+                            batch=1, mb_size=1, n_stages=N_STAGES,
+                            image_size=img, verbose=False))
+    assert lat["latency_p50_s"] < thr["latency_p50_s"], (
+        "latency mode must beat the throughput path's per-request p50 "
+        f"at batch 1: latency {lat['latency_p50_s']:.4f}s >= "
+        f"throughput {thr['latency_p50_s']:.4f}s")
+    return {
+        "serving_latency_batch1_p50_s": lat["latency_p50_s"],
+        "serving_latency_batch1_p99_s": lat["latency_p99_s"],
+        "throughput_mode_batch1_p50_s": thr["latency_p50_s"],
+        "latency_mode_compile_s": lat["compile_s"],
+    }
+
+
 def main(smoke: bool = False, out: str = None):
     img = 32 if smoke else 48
     n_requests = 4 if smoke else 8
     batch = 4 if smoke else 8
     mb = 2
-    m = serve_cnn_continuous(ARCH, n_requests=n_requests, batch=batch,
-                             mb_size=mb, n_stages=N_STAGES,
-                             image_size=img, verbose=False)
+    m = serve(ServeConfig(ARCH, continuous=True, n_requests=n_requests,
+                          batch=batch, mb_size=mb, n_stages=N_STAGES,
+                          image_size=img, verbose=False))
     results = {
         "arch": ARCH,
         "n_stages": m["n_stages"],
@@ -116,6 +148,12 @@ def main(smoke: bool = False, out: str = None):
         f"imgs_per_s={m['images_per_s']:.1f}_steady_bubble="
         f"{m['steady_bubble']:.3f}_vs_fill="
         f"{m['fill_bubble_single_batch']:.3f}")
+    lat = latency_batch1(smoke=smoke)
+    results.update(lat)
+    row("serving_latency_batch1", 1e6 * lat["serving_latency_batch1_p50_s"],
+        f"p50={lat['serving_latency_batch1_p50_s'] * 1e3:.2f}ms_p99="
+        f"{lat['serving_latency_batch1_p99_s'] * 1e3:.2f}ms_vs_thr_p50="
+        f"{lat['throughput_mode_batch1_p50_s'] * 1e3:.2f}ms")
     rec = recovery(smoke=smoke)
     results.update(rec)
     row("serving_recovery", 1e6 * rec["serving_recovery_s"],

@@ -136,26 +136,33 @@ def op_cost_fused_dw_pw(name: str, k: int, cin: int, cout: int, lines: int,
 
 # --- weight residency (per-stage placement, HPIPE's per-layer M20Ks) -------
 
-def pytree_param_bytes(tree) -> int:
+def pytree_param_bytes(tree, store_dtype: str = "native") -> int:
     """Total bytes of a parameter pytree's leaves (a SparseWeight
     counts vals AND idx — both must live next to the stage's compute,
     exactly the runlength stream + weight memory HPIPE provisions per
-    layer)."""
+    layer). ``store_dtype`` prices the tree as stored at that width
+    (core/quant.py) — analytically, without quantizing."""
     import jax
+    if store_dtype != "native":
+        from repro.core.quant import tree_stored_bytes
+        return tree_stored_bytes(tree, store_dtype)
     return sum(int(np.prod(l.shape, dtype=np.int64))
                * np.dtype(l.dtype).itemsize
                for l in jax.tree_util.tree_leaves(tree))
 
 
-def node_weight_bytes(node, params) -> int:
+def node_weight_bytes(node, params, store_dtype: str = "native") -> int:
     """Weight-residency bytes of one (possibly fused) IR node: the
     param bytes of every part the node executes. This is what a stage
     owning the node must hold on-device under per-stage placement —
-    the planner's memory term (``planner.plan_cnn_pipeline``'s
-    ``max_stage_param_bytes`` budget prices stages with it)."""
+    the planner's memory term (``planner.plan``'s
+    ``max_stage_param_bytes`` budget prices stages with it). With a
+    non-native ``store_dtype`` the node is priced at its quantized
+    residency, which is how int8 storage turns into deeper feasible
+    cuts under a fixed budget."""
     parts = node.parts or (node,)
-    return sum(pytree_param_bytes(params[p.name]) for p in parts
-               if p.name in params)
+    return sum(pytree_param_bytes(params[p.name], store_dtype)
+               for p in parts if p.name in params)
 
 
 def fit_scale_factors(measured_us, analytic_cycles, kinds) -> dict:

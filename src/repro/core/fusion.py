@@ -33,7 +33,7 @@ Legality: a fusion may only swallow a value with exactly ONE consumer
 (anything read elsewhere — residual sources, multi-consumer taps —
 must stay a node output), and the producer of a residual epilogue must
 be linear (relu=False) so the add sees the pre-activation value.
-Fused nodes are atomic for stage planning: ``planner.plan_cnn_pipeline``
+Fused nodes are atomic for stage planning: ``planner.plan``
 partitions the fused graph, so a stage cut can never land inside a
 fusion.
 

@@ -353,14 +353,26 @@ class ParamFormat:
     tree-flatten order, then padded to the common stage width. Unpack
     is the exact inverse, so a stage program running on unpacked params
     is BIT-IDENTICAL to one closing over the originals.
+
+    ``store_dtype`` (core/quant.py) re-stores float leaves narrow
+    BEFORE layout: int8 codes and their per-channel f32 scales become
+    ordinary leaves of the (quantized) tree, so the same bitcast path
+    carries them and the roundtrip stays bit-exact on the stored bits.
+    Quantization is idempotent, so ``pack`` normalizes its input
+    unconditionally — callers may hand it either the original or the
+    already-quantized tree.
     """
 
-    def __init__(self, treedef, leaves_meta):
+    def __init__(self, treedef, leaves_meta, store_dtype: str = "native"):
         self.treedef = treedef
         self.leaves_meta = tuple(leaves_meta)   # per leaf: (shape, dtype)
+        self.store_dtype = store_dtype
 
     @classmethod
-    def for_tree(cls, tree) -> "ParamFormat":
+    def for_tree(cls, tree, store_dtype: str = "native") -> "ParamFormat":
+        if store_dtype != "native":
+            from repro.core.quant import quantize_tree
+            tree = quantize_tree(tree, store_dtype)
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         meta = []
         for l in leaves:
@@ -371,7 +383,7 @@ class ParamFormat:
                 # than silently value-converting
                 raise ValueError(f"unsupported param leaf dtype {dt}")
             meta.append((tuple(l.shape), dt))
-        return cls(treedef, meta)
+        return cls(treedef, meta, store_dtype)
 
     def _leaf_bytes(self):
         return [int(np.prod(s, dtype=np.int64)) * d.itemsize
@@ -385,6 +397,9 @@ class ParamFormat:
 
     def pack(self, tree, width: int) -> jax.Array:
         """Param pytree -> (width,) uint8 buffer (zero-padded)."""
+        if self.store_dtype != "native":
+            from repro.core.quant import quantize_tree
+            tree = quantize_tree(tree, self.store_dtype)
         leaves = jax.tree_util.tree_leaves(tree)
         if len(leaves) != len(self.leaves_meta):
             raise ValueError(f"expected {len(self.leaves_meta)} leaves, "

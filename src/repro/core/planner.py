@@ -13,8 +13,9 @@
 from __future__ import annotations
 
 import heapq
+import warnings
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Any, Optional
 
 import numpy as np
 
@@ -304,10 +305,10 @@ def cnn_node_costs(cfg, params, graph=None, *, model: str = "analytic",
     return (costs, None) if return_report else costs
 
 
-def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None, *,
-                      max_stage_param_bytes: Optional[int] = None,
-                      model: str = "analytic",
-                      tuning_cache=None) -> dict:
+def _plan_1d(cfg, params, n_stages: int, graph=None, *,
+             max_stage_param_bytes: Optional[int] = None,
+             model: str = "analytic",
+             tuning_cache=None, store_dtype: str = "native") -> dict:
     """Cost-balanced stage assignment for a CNN layer graph: contiguous
     partition of the IR minimizing the max per-stage cycle sum (the
     multi-device analogue of HPIPE giving slow layers more DSPs).
@@ -330,15 +331,21 @@ def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None, *,
 
     ``model="measured"`` + ``tuning_cache`` plans over profiled wall
     times instead of analytic cycles (see :func:`cnn_node_costs`); the
-    plan records the coverage report under ``measured_coverage``."""
+    plan records the coverage report under ``measured_coverage``.
+
+    ``store_dtype`` (core/quant.py) prices weight residency at the
+    quantized width: cycle costs are unchanged (they come from sparsity
+    structure and output resolution, not storage bits), but the budget
+    DP sees int8 nodes at ~1/4 their f32 bytes — quantization turns
+    directly into deeper feasible cuts under a fixed budget."""
     from repro.core.costmodel import node_weight_bytes
     from repro.core.fusion import fused_graph_for
     g = graph if graph is not None else fused_graph_for(cfg.name)
     costs, coverage = cnn_node_costs(cfg, params, graph=g, model=model,
                                      tuning_cache=tuning_cache,
                                      return_report=True)
-    wbytes = np.array([node_weight_bytes(node, params) for node in g.nodes],
-                      dtype=np.float64)
+    wbytes = np.array([node_weight_bytes(node, params, store_dtype)
+                       for node in g.nodes], dtype=np.float64)
     stage_of = assign_stages(
         costs, n_stages,
         weights=wbytes if max_stage_param_bytes is not None else None,
@@ -366,6 +373,10 @@ def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None, *,
         # cycles or measured microseconds depending on this
         "cost_model": model,
         "measured_coverage": coverage,
+        # storage dtype the byte accounting was priced at — consumers
+        # (ParamFormat, the param blob) must store weights at this width
+        # for placed_bytes_per_device to be what devices actually hold
+        "store_dtype": store_dtype,
     }
 
 
@@ -387,11 +398,11 @@ def pipeline_throughput_rel(stage_cost, n_replicas: int,
     return float(n_replicas * fill / max(stage_cost.max(), 1e-30))
 
 
-def plan_cnn_pipeline_2d(cfg, params, n_devices: int, *,
-                         n_microbatches: int = 8, graph=None,
-                         max_stage_param_bytes: Optional[int] = None,
-                         model: str = "analytic",
-                         tuning_cache=None) -> dict:
+def _plan_2d(cfg, params, n_devices: int, *,
+             n_microbatches: int = 8, graph=None,
+             max_stage_param_bytes: Optional[int] = None,
+             model: str = "analytic",
+             tuning_cache=None, store_dtype: str = "native") -> dict:
     """Co-plan the (n_stages, n_replicas) split of ``n_devices`` —
     HPIPE's resource-partitioning tradeoff (Shen et al.): deeper cuts
     shrink per-stage work but inherit the graph's imbalance (the max
@@ -420,10 +431,11 @@ def plan_cnn_pipeline_2d(cfg, params, n_devices: int, *,
         if n_devices % s != 0:
             continue
         try:
-            plan = plan_cnn_pipeline(
+            plan = _plan_1d(
                 cfg, params, s, graph=graph,
                 max_stage_param_bytes=max_stage_param_bytes,
-                model=model, tuning_cache=tuning_cache)
+                model=model, tuning_cache=tuning_cache,
+                store_dtype=store_dtype)
         except ValueError as e:        # budget-infeasible at this depth
             errors.append((s, str(e)))
             continue
@@ -466,11 +478,11 @@ def plan_cnn_pipeline_2d(cfg, params, n_devices: int, *,
     }
 
 
-def replan_cnn_pipeline_2d(cfg, params, n_devices: int, *, prev=None,
-                           n_microbatches: int = 8, graph=None,
-                           max_stage_param_bytes: Optional[int] = None,
-                           model: str = "analytic",
-                           tuning_cache=None) -> dict:
+def _replan_2d(cfg, params, n_devices: int, *, prev=None,
+               n_microbatches: int = 8, graph=None,
+               max_stage_param_bytes: Optional[int] = None,
+               model: str = "analytic",
+               tuning_cache=None, store_dtype: str = "native") -> dict:
     """Degradation re-plan: pick a (stages, replicas) split for a
     REDUCED device pool, preferring stability over optimality.
 
@@ -505,9 +517,113 @@ def replan_cnn_pipeline_2d(cfg, params, n_devices: int, *, prev=None,
                 "plan": prev,
                 "reused": True,
             }
-    out = plan_cnn_pipeline_2d(
+    out = _plan_2d(
         cfg, params, n_devices, n_microbatches=n_microbatches,
         graph=graph, max_stage_param_bytes=max_stage_param_bytes,
-        model=model, tuning_cache=tuning_cache)
+        model=model, tuning_cache=tuning_cache, store_dtype=store_dtype)
     out["reused"] = False
     return out
+
+
+# --- the unified planning front door ---------------------------------------
+
+@dataclass(frozen=True)
+class PlanRequest:
+    """The resources one planning call is given — the single argument
+    of :func:`plan`. Exactly one of ``n_stages`` (fixed-depth 1-D cut)
+    or ``n_devices`` ((stages, replicas) co-plan; with ``prev`` set, a
+    stability-preferring degradation re-plan) must be provided.
+
+    ``store_dtype`` prices weight residency at the quantized width
+    (core/quant.py) so the ``max_stage_param_bytes`` budget sees what
+    devices will actually hold."""
+    n_stages: Optional[int] = None
+    n_devices: Optional[int] = None
+    n_microbatches: int = 8
+    max_stage_param_bytes: Optional[int] = None
+    model: str = "analytic"
+    tuning_cache: Any = None
+    store_dtype: str = "native"
+    prev: Optional[dict] = None
+
+    def __post_init__(self):
+        from repro.core.quant import STORE_DTYPES
+        if self.store_dtype not in STORE_DTYPES:
+            raise ValueError(f"store_dtype must be one of {STORE_DTYPES}, "
+                             f"got {self.store_dtype!r}")
+        if (self.n_stages is None) == (self.n_devices is None):
+            raise ValueError("exactly one of n_stages / n_devices must "
+                             "be set on a PlanRequest")
+
+
+class PipelinePlan(dict):
+    """A plan dict with attribute access (``p.stage_of`` ==
+    ``p["stage_of"]``). Subclasses dict so every existing consumer of
+    the planner's plain-dict plans keeps working unchanged."""
+
+    def __getattr__(self, name):
+        try:
+            return self[name]
+        except KeyError:
+            raise AttributeError(name) from None
+
+
+def plan(cfg, params, request: PlanRequest, *, graph=None) -> PipelinePlan:
+    """THE planning entrypoint: one call covering the fixed-depth cut,
+    the (stages, replicas) co-plan, and the degradation re-plan —
+    dispatch on what the :class:`PlanRequest` carries.
+
+    - ``n_stages`` set: contiguous S-stage cut (old
+      ``plan_cnn_pipeline``).
+    - ``n_devices`` set: best divisor split S x R (old
+      ``plan_cnn_pipeline_2d``).
+    - ``n_devices`` + ``prev``: reuse the previous cut when it still
+      fits, else co-plan (old ``replan_cnn_pipeline_2d``)."""
+    kw = dict(graph=graph,
+              max_stage_param_bytes=request.max_stage_param_bytes,
+              model=request.model, tuning_cache=request.tuning_cache,
+              store_dtype=request.store_dtype)
+    if request.n_stages is not None:
+        out = _plan_1d(cfg, params, request.n_stages, **kw)
+    elif request.prev is not None:
+        out = _replan_2d(cfg, params, request.n_devices,
+                         prev=request.prev,
+                         n_microbatches=request.n_microbatches, **kw)
+    else:
+        out = _plan_2d(cfg, params, request.n_devices,
+                       n_microbatches=request.n_microbatches, **kw)
+    nested = out.get("plan")                    # 2-D results nest the cut
+    if isinstance(nested, dict) and not isinstance(nested, PipelinePlan):
+        out = dict(out, plan=PipelinePlan(nested))
+    return PipelinePlan(out)
+
+
+# --- deprecated planner entrypoints (use plan(cfg, params, PlanRequest)) ---
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new}", DeprecationWarning, stacklevel=3)
+
+
+def plan_cnn_pipeline(cfg, params, n_stages: int, graph=None, **kw) -> dict:
+    """Deprecated shim — use ``plan(cfg, params,
+    PlanRequest(n_stages=...))``."""
+    _deprecated("plan_cnn_pipeline", "plan(cfg, params, "
+                "PlanRequest(n_stages=...))")
+    return _plan_1d(cfg, params, n_stages, graph=graph, **kw)
+
+
+def plan_cnn_pipeline_2d(cfg, params, n_devices: int, **kw) -> dict:
+    """Deprecated shim — use ``plan(cfg, params,
+    PlanRequest(n_devices=...))``."""
+    _deprecated("plan_cnn_pipeline_2d", "plan(cfg, params, "
+                "PlanRequest(n_devices=...))")
+    return _plan_2d(cfg, params, n_devices, **kw)
+
+
+def replan_cnn_pipeline_2d(cfg, params, n_devices: int, **kw) -> dict:
+    """Deprecated shim — use ``plan(cfg, params,
+    PlanRequest(n_devices=..., prev=...))``."""
+    _deprecated("replan_cnn_pipeline_2d", "plan(cfg, params, "
+                "PlanRequest(n_devices=..., prev=...))")
+    return _replan_2d(cfg, params, n_devices, **kw)

@@ -1,0 +1,233 @@
+"""Low-precision parameter storage (HPIPE's narrow fixed-point weight
+residency, PAPER.md §VII; the structured-sparse fixed-point accelerator
+in arxiv 2001.01955 makes the same argument).
+
+A *storage dtype* is a property of how a parameter tree is held
+resident on a stage's devices, not of the math run on it:
+
+- ``"native"`` — leaves stay exactly as initialized (bf16 weights,
+  int32 sparse indices). Identity transform.
+- ``"f32"``   — float leaves widened to f32. This is the comparison
+  baseline for the quantization ratios (a GPU serving stack holds f32
+  weights; our native bf16 is already "quantized" relative to it).
+- ``"bf16"``  — float leaves narrowed to bf16 (native weights already
+  are, so this is bitwise-lossless for them).
+- ``"int8"``  — symmetric per-channel int8: ``scale = amax / 127``
+  over the non-channel axes, ``codes = round(w / scale)`` clipped to
+  [-127, 127]. Codes are stored int8, scales f32. Dequantization is
+  ``codes * scale`` cast back to the original dtype.
+
+Scale placement follows the channel axis of each weight kind:
+
+- plain 2-D+ float leaves (dense conv ``(k*k*cin, cout)``, fc
+  ``(cin, cout)``, depthwise ``(k, k, C)``): one scale per LAST-axis
+  channel, shape ``(last_dim,)`` — broadcasts naturally.
+- ``SparseWeight.vals`` ``(ob, K, bm, bn)``: one scale per true output
+  channel, shape ``(ob, bn)`` (reduced over the K gathered input
+  blocks and the bm input lanes), packed alongside ``idx`` as an extra
+  pytree child so it rides the same placement/packing machinery.
+- 1-D floats (biases, norm gammas) and integer leaves (sparse ``idx``)
+  are never quantized — they are a rounding-error fraction of the
+  bytes and the bias add happens in the f32 accumulator anyway.
+
+Quantization is IDEMPOTENT: an already-quantized leaf passes through
+``quantize_tree`` unchanged, so ``ParamFormat.pack`` can normalize its
+input unconditionally and pack/unpack roundtrips are bitwise on the
+stored bits.
+
+``tree_stored_bytes`` prices a tree at a storage dtype analytically —
+without materializing the quantized tree — and is kept exactly equal
+to ``pytree_param_bytes(quantize_tree(tree, sd))``. int8 keeps the
+planner's bytes math exact because every term is integral: 1 byte per
+code element plus 4 bytes per channel scale, no padding, no
+data-dependent sparsity of the codes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import SparseWeight
+
+PyTree = Any
+
+STORE_DTYPES = ("native", "f32", "bf16", "int8")
+
+_SCALE_DTYPE = jnp.float32
+_SCALE_BYTES = 4
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedWeight:
+    """int8 codes + per-last-axis-channel f32 scale for a plain dense
+    weight. ``orig_dtype`` (aux, a dtype NAME so the treedef stays
+    hashable) is the dtype ``dequant()`` restores, keeping quantized
+    stage programs' epilogues at the same dtype boundaries as the
+    unquantized ones."""
+
+    def __init__(self, codes, scale, orig_dtype: str):
+        self.codes = codes
+        self.scale = scale
+        self.orig_dtype = orig_dtype
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def ndim(self):
+        return self.codes.ndim
+
+    def dequant(self):
+        return (self.codes.astype(jnp.float32)
+                * self.scale.astype(jnp.float32)).astype(
+                    jnp.dtype(self.orig_dtype))
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), self.orig_dtype
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    def __repr__(self):
+        return (f"QuantizedWeight(shape={getattr(self.codes, 'shape', None)},"
+                f" orig_dtype={self.orig_dtype})")
+
+
+def _is_float(leaf) -> bool:
+    return jnp.issubdtype(jnp.asarray(leaf).dtype
+                          if not hasattr(leaf, "dtype") else leaf.dtype,
+                          jnp.floating)
+
+
+def _symmetric_scale(w32, axes):
+    amax = jnp.max(jnp.abs(w32), axis=axes)
+    scale = amax / 127.0
+    # all-zero channels: scale 1.0 so dequant is exactly 0, not 0/0
+    return jnp.where(amax > 0, scale, 1.0).astype(_SCALE_DTYPE)
+
+
+def _quantize_dense(w):
+    """Plain float leaf (ndim >= 2) -> QuantizedWeight with one scale
+    per last-axis channel."""
+    w32 = w.astype(jnp.float32)
+    scale = _symmetric_scale(w32, tuple(range(w.ndim - 1)))   # (last_dim,)
+    codes = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return QuantizedWeight(codes, scale, jnp.dtype(w.dtype).name)
+
+
+def _quantize_sparse(sw: SparseWeight) -> SparseWeight:
+    """SparseWeight -> SparseWeight with int8 vals + (ob, bn) scale."""
+    v32 = sw.vals.astype(jnp.float32)
+    scale = _symmetric_scale(v32, (1, 2))                     # (ob, bn)
+    codes = jnp.clip(jnp.round(v32 / scale[:, None, None, :]),
+                     -127, 127).astype(jnp.int8)
+    return SparseWeight(codes, sw.idx, sw.d_in, scale=scale,
+                        orig_dtype=jnp.dtype(sw.vals.dtype).name)
+
+
+def _is_quant_leaf(leaf) -> bool:
+    return isinstance(leaf, (SparseWeight, QuantizedWeight))
+
+
+def quantize_tree(tree: PyTree, store_dtype: str) -> PyTree:
+    """Re-store every parameter leaf of ``tree`` at ``store_dtype``.
+    Idempotent: already-quantized leaves (QuantizedWeight, SparseWeight
+    with a scale) pass through unchanged."""
+    if store_dtype not in STORE_DTYPES:
+        raise ValueError(f"store_dtype must be one of {STORE_DTYPES}, "
+                         f"got {store_dtype!r}")
+    if store_dtype == "native":
+        return tree
+
+    def q(leaf):
+        if isinstance(leaf, QuantizedWeight):
+            return leaf
+        if isinstance(leaf, SparseWeight):
+            if leaf.scale is not None:
+                return leaf
+            if store_dtype == "int8":
+                return _quantize_sparse(leaf)
+            dt = jnp.float32 if store_dtype == "f32" else jnp.bfloat16
+            return SparseWeight(leaf.vals.astype(dt), leaf.idx, leaf.d_in)
+        if not _is_float(leaf):
+            return leaf
+        if store_dtype == "f32":
+            return leaf.astype(jnp.float32)
+        if store_dtype == "bf16":
+            return leaf.astype(jnp.bfloat16)
+        # int8: only 2-D+ float leaves carry enough structure for a
+        # per-channel scale; biases/gammas stay native
+        if leaf.ndim >= 2:
+            return _quantize_dense(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map(q, tree, is_leaf=_is_quant_leaf)
+
+
+def dequantize_tree(tree: PyTree) -> PyTree:
+    """Inverse of the int8 transform: QuantizedWeight -> dense array,
+    int8 SparseWeight -> float-vals SparseWeight. f32/bf16-stored leaves
+    are left at their stored dtype (the information is already gone)."""
+    def dq(leaf):
+        if isinstance(leaf, QuantizedWeight):
+            return leaf.dequant()
+        if isinstance(leaf, SparseWeight) and leaf.scale is not None:
+            return leaf.dequantized()
+        return leaf
+
+    return jax.tree_util.tree_map(dq, tree, is_leaf=_is_quant_leaf)
+
+
+def _leaf_native_bytes(leaf) -> int:
+    return sum(int(np.prod(a.shape, dtype=np.int64))
+               * np.dtype(a.dtype).itemsize
+               for a in jax.tree_util.tree_leaves(leaf))
+
+
+def tree_stored_bytes(tree: PyTree, store_dtype: str = "native") -> int:
+    """Bytes ``tree`` occupies when stored at ``store_dtype`` —
+    analytically, without building the quantized tree. Invariant (test-
+    enforced): equals ``pytree_param_bytes(quantize_tree(tree, sd))``."""
+    if store_dtype not in STORE_DTYPES:
+        raise ValueError(f"store_dtype must be one of {STORE_DTYPES}, "
+                         f"got {store_dtype!r}")
+    total = 0
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=_is_quant_leaf)
+    for leaf in leaves:
+        if isinstance(leaf, QuantizedWeight) or (
+                isinstance(leaf, SparseWeight) and leaf.scale is not None):
+            total += _leaf_native_bytes(leaf)     # already stored narrow
+            continue
+        if isinstance(leaf, SparseWeight):
+            n = int(np.prod(leaf.vals.shape, dtype=np.int64))
+            idx_b = (int(np.prod(leaf.idx.shape, dtype=np.int64))
+                     * np.dtype(leaf.idx.dtype).itemsize)
+            if store_dtype == "int8":
+                ob, _, _, bn = leaf.vals.shape
+                total += n + _SCALE_BYTES * ob * bn + idx_b
+            elif store_dtype == "f32":
+                total += 4 * n + idx_b
+            elif store_dtype == "bf16":
+                total += 2 * n + idx_b
+            else:
+                total += _leaf_native_bytes(leaf)
+            continue
+        n = int(np.prod(leaf.shape, dtype=np.int64))
+        if store_dtype == "native" or not jnp.issubdtype(leaf.dtype,
+                                                         jnp.floating):
+            total += n * np.dtype(leaf.dtype).itemsize
+        elif store_dtype == "f32":
+            total += 4 * n
+        elif store_dtype == "bf16":
+            total += 2 * n
+        else:                                     # int8
+            if leaf.ndim >= 2:
+                total += n + _SCALE_BYTES * leaf.shape[-1]
+            else:
+                total += n * np.dtype(leaf.dtype).itemsize
+    return total

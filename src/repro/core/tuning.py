@@ -556,7 +556,7 @@ def calibrate(cfg, params, image_shape, *, graph=None, path=None,
     """Profile -> calibrate -> (optionally) retune in one call:
     measure every fused node, optionally autotune the kernel knobs, and
     persist to ``path``. The returned cache plugs straight into
-    ``planner.plan_cnn_pipeline(model="measured", tuning_cache=...)``
+    ``planner.plan(..., PlanRequest(model="measured", tuning_cache=...))``
     and :func:`set_tuning_cache` for kernel dispatch."""
     cache = cache if cache is not None else (
         TuningCache.load(path) if path else TuningCache())

@@ -1,3 +1,7 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+# the one scoped override for kernel dispatch knobs (impl, tuning
+# cache, int8 strategy) — `with kernels.config(impl="pallas"): ...`
+from repro.kernels.ops import config  # noqa: F401

@@ -54,7 +54,10 @@ from repro.kernels.sparse_conv import pad_same_hw
 
 def _kernel(x_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, *rest,
             k: int, wo: int, stride: int, dw_relu: bool, relu: bool,
-            has_res: bool, out_dtype):
+            has_res: bool, has_scale: bool, out_dtype):
+    scale_ref = None
+    if has_scale:
+        scale_ref, rest = rest[0], rest[1:]
     if has_res:
         res_ref, o_ref, acc_ref = rest
     else:
@@ -77,6 +80,10 @@ def _kernel(x_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, *rest,
         d = d.astype(out_dtype)
         y = jnp.dot(d.astype(jnp.float32), pww_ref[...].astype(jnp.float32),
                     preferred_element_type=jnp.float32)
+        if has_scale:
+            # int8 pw: y holds the raw code dot — the per-channel scale
+            # re-reals it before the (real-valued) bias joins
+            y = y * scale_ref[...].astype(jnp.float32)
         y = y + pwb_ref[...].astype(jnp.float32)                # (wo, co)
         if has_res:
             y = y + res_ref[0, 0].astype(jnp.float32)
@@ -89,12 +96,16 @@ def _kernel(x_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, *rest,
                                              "interpret"))
 def dw_pw_pallas(x: jax.Array, dw_w: jax.Array, dw_b: jax.Array,
                  pw_w: jax.Array, pw_b: jax.Array,
-                 residual: jax.Array = None, *, stride: int = 1,
+                 residual: jax.Array = None,
+                 pw_scale: jax.Array = None, *, stride: int = 1,
                  dw_relu: bool = True, relu: bool = True,
                  interpret: bool = True) -> jax.Array:
     """x: (N, H, W, C); dw_w: (k, k, C); dw_b: (C,); pw_w: (C, Cout);
     pw_b: (Cout,); residual: optional (N, Ho, Wo, Cout) fused skip.
-    SAME padding on the depthwise. Returns (N, Ho, Wo, Cout)."""
+    ``pw_scale`` (optional, (Cout,) f32) marks ``pw_w`` as int8 codes
+    (core/quant.py): the MXU dot is unchanged and the scale multiplies
+    its output at the flush, before pw bias. SAME padding on the
+    depthwise. Returns (N, Ho, Wo, Cout)."""
     n, h, w, c = x.shape
     k = dw_w.shape[0]
     co = pw_w.shape[-1]
@@ -102,9 +113,10 @@ def dw_pw_pallas(x: jax.Array, dw_w: jax.Array, dw_b: jax.Array,
     wp = xp.shape[2]
 
     has_res = residual is not None
+    has_scale = pw_scale is not None
     kernel = functools.partial(_kernel, k=k, wo=wo, stride=stride,
                                dw_relu=dw_relu, relu=relu, has_res=has_res,
-                               out_dtype=x.dtype)
+                               has_scale=has_scale, out_dtype=x.dtype)
     in_specs = [
         pl.BlockSpec((1, 1, wp, c),
                      lambda i, oy, ky: (i, oy * stride + ky, 0, 0)),
@@ -114,6 +126,10 @@ def dw_pw_pallas(x: jax.Array, dw_w: jax.Array, dw_b: jax.Array,
         pl.BlockSpec((1, co), lambda i, oy, ky: (0, 0)),
     ]
     operands = [xp, dw_w, dw_b.reshape(1, c), pw_w, pw_b.reshape(1, co)]
+    if has_scale:
+        # per-channel scale rides the pw-bias layout: one (1, co) line
+        in_specs.append(pl.BlockSpec((1, co), lambda i, oy, ky: (0, 0)))
+        operands.append(pw_scale.reshape(1, co))
     if has_res:
         in_specs.append(pl.BlockSpec((1, 1, wo, co),
                                      lambda i, oy, ky: (i, oy, 0, 0)))
@@ -144,7 +160,7 @@ def dw_pw_xla(x: jax.Array, dw_w: jax.Array, dw_b: jax.Array,
               pw_w: jax.Array, pw_b: jax.Array,
               residual: jax.Array = None, *, stride: int = 1,
               dw_relu: bool = True, relu: bool = True,
-              row_chunk: int = 0) -> jax.Array:
+              row_chunk: int = 0, pw_scale: jax.Array = None) -> jax.Array:
     """Pure-JAX twin: scan over output-row chunks; each chunk runs the
     depthwise on its (rows + halo) input slab and feeds the result
     straight into the pointwise matmul. Working set = one chunk; the
@@ -185,6 +201,8 @@ def dw_pw_xla(x: jax.Array, dw_w: jax.Array, dw_b: jax.Array,
             d = jax.nn.relu(d)
         d = d.astype(x.dtype)                 # the dw->pw boundary round
         y = fdot("nhwc,co->nhwo", d, pw_w)
+        if pw_scale is not None:              # int8 pw: re-real the code dot
+            y = y * pw_scale.astype(y.dtype)
         y = y + pw_b.astype(y.dtype)
         if residual is not None:
             res = lax.dynamic_slice(residual, (0, r0, 0, 0),

@@ -9,14 +9,23 @@ Two execution paths per op:
 """
 from __future__ import annotations
 
+import contextlib
 import os
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 _IMPL: Literal["xla", "pallas"] = os.environ.get("REPRO_KERNEL_IMPL", "xla")
+
+# int8 execution strategy for quantized weights (core/quant.py). True:
+# the codes feed the matmul unmodified (int8 MXU operands, f32
+# accumulate) and the per-channel scale multiplies the ACCUMULATOR at
+# the epilogue — one multiply per output channel instead of one per
+# weight element. False: dequantize at op entry (the reference path the
+# fast path is tested against).
+_INT8_FAST = True
 
 # Perf-iteration knob: token-shard the sparse-matmul input so block
 # gathers stay shard-local (see the sharding note inside sparse_matmul).
@@ -66,6 +75,39 @@ def set_tuning_cache(cache):
     return tuning.set_tuning_cache(cache)
 
 
+@contextlib.contextmanager
+def config(*, impl: Optional[str] = None, tuning_cache=None,
+           int8_fast_path: Optional[bool] = None):
+    """ONE scoped override for the kernel-dispatch knobs that used to
+    be three separate globals threaded ad hoc (``set_impl``,
+    ``set_tuning_cache``, and the int8 strategy):
+
+        with kernels.config(impl="pallas", tuning_cache=cache,
+                            int8_fast_path=False):
+            ...   # all three scoped together
+
+    ``None`` leaves a knob untouched. Knobs are read at TRACE time —
+    enter the context before compiling. Restores every previous value
+    on exit (exceptions included)."""
+    global _IMPL, _INT8_FAST
+    prev_impl, prev_fast = _IMPL, _INT8_FAST
+    cache_guard = None
+    try:
+        if impl is not None:
+            assert impl in ("xla", "pallas"), impl
+            _IMPL = impl
+        if int8_fast_path is not None:
+            _INT8_FAST = bool(int8_fast_path)
+        if tuning_cache is not None:
+            from repro.core import tuning
+            cache_guard = tuning.set_tuning_cache(tuning_cache)
+        yield
+    finally:
+        _IMPL, _INT8_FAST = prev_impl, prev_fast
+        if cache_guard is not None:
+            cache_guard.__exit__(None, None, None)
+
+
 def _knob(op: str, in_shape, dtype, name: str, default, **fields):
     """Autotuned-knob lookup against the active tuning cache (identity
     default when no cache is installed — today's hard-coded behavior)."""
@@ -78,7 +120,15 @@ def _knob(op: str, in_shape, dtype, name: str, default, **fields):
 
 
 def sparse_matmul(x: jax.Array, sw) -> jax.Array:
-    """x: (..., d_in) @ block-balanced SparseWeight -> (..., d_out)."""
+    """x: (..., d_in) @ block-balanced SparseWeight -> (..., d_out).
+
+    int8-quantized ``sw`` (vals = codes + per-output-channel scale):
+    the codes feed the same matmul (upcast like bf16 would be — int8
+    MXU operands, f32 accumulate) and the scale multiplies the
+    accumulator once per output channel at the end."""
+    if sw.scale is not None and not _INT8_FAST:
+        sw = sw.dequantized()           # reference path: dequant at entry
+    scale = sw.scale                    # (ob, bn) f32 or None
     *lead, d_in = x.shape
     ob, n_k, bm, bn = sw.vals.shape
     if _IMPL == "pallas":
@@ -87,6 +137,11 @@ def sparse_matmul(x: jax.Array, sw) -> jax.Array:
         tm = 128 if m % 128 == 0 else (8 if m % 8 == 0 else 1)
         from repro.kernels.sparse_matmul import sparse_matmul_pallas
         out = sparse_matmul_pallas(xm, sw.vals, sw.idx, block_m_x=tm)
+        if scale is not None:
+            # no fused bias in this kernel, so the epilogue scale is
+            # safe outside it: out still carries the raw code dot
+            out = (out.astype(jnp.float32)
+                   * scale.reshape(-1)).astype(out.dtype)
         return out.reshape(*lead, ob * bn)
 
     # XLA path: lax.scan over the K surviving blocks per output column.
@@ -130,6 +185,8 @@ def sparse_matmul(x: jax.Array, sw) -> jax.Array:
     acc0 = jnp.zeros((t, ob, bn), _ad() or x.dtype)
     acc, _ = lax.scan(step, acc0,
                       (sw.idx.swapaxes(0, 1), sw.vals.swapaxes(0, 1)))
+    if scale is not None:
+        acc = acc * scale.astype(acc.dtype)     # (t, ob, bn) * (ob, bn)
     return acc.reshape(*lead, ob * bn).astype(x.dtype)
 
 
@@ -145,7 +202,15 @@ def sparse_conv(x, sw, bias, *, k: int, stride: int = 1,
     folds ResNet's ``c3 -> add -> relu`` tail in here so the pre-add
     conv output never round-trips HBM. Neither path materializes the
     (N*Ho*Wo, k*k*C) im2col tensor.
+
+    int8-quantized ``sw``: the codes accumulate exactly like float
+    vals would, and the per-output-channel scale multiplies the
+    accumulator in the epilogue BEFORE bias/residual/ReLU (those are
+    real-valued terms; only the code dot is scaled).
     """
+    if sw.scale is not None and not _INT8_FAST:
+        sw = sw.dequantized()           # reference path: dequant at entry
+    scale = sw.scale                    # (ob, bn) f32 or None
     n, h, w, c = x.shape
     ob, n_k, bm, bn = sw.vals.shape
     assert sw.d_in == k * k * c, (sw.d_in, k, c)
@@ -156,8 +221,9 @@ def sparse_conv(x, sw, bias, *, k: int, stride: int = 1,
                    k=k, s=stride, b=f"{bm}x{bn}K{n_k}", co=ob * bn)
         if n_k % max(bk, 1):            # stale cache entry: K changed
             bk = 1
-        return sparse_conv_pallas(x, sw.vals, sw.idx, bias, residual, k=k,
-                                  stride=stride, relu=relu, block_k=bk)
+        return sparse_conv_pallas(x, sw.vals, sw.idx, bias, residual,
+                                  scale, k=k, stride=stride, relu=relu,
+                                  block_k=bk)
 
     # XLA path: lax.scan over the K surviving blocks per output column.
     # Each step gathers one shifted (ky, kx) window slice of the
@@ -186,7 +252,9 @@ def sparse_conv(x, sw, bias, *, k: int, stride: int = 1,
 
     from repro.models.layers import accum_dtype as _ad
     ad = _ad() or x.dtype
-    if residual is None:
+    if residual is None or scale is not None:
+        # int8 can't pre-seed: the scale must multiply ONLY the code
+        # accumulation, so bias/residual join after the scan instead
         acc0 = jnp.zeros((n, ho, wo, ob, bn), ad)
     else:
         # fused residual epilogue: seed the accumulator with skip + bias
@@ -196,9 +264,13 @@ def sparse_conv(x, sw, bias, *, k: int, stride: int = 1,
             + bias.astype(ad).reshape(ob, bn)
     acc, _ = lax.scan(step, acc0,
                       (ky.T, kx.T, cb.T, sw.vals.swapaxes(0, 1)))
+    if scale is not None:
+        acc = acc * scale.astype(acc.dtype)     # (..., ob, bn) * (ob, bn)
     y = acc.reshape(n, ho, wo, ob * bn)
     if residual is None:
         y = y + bias.astype(acc.dtype)
+    elif scale is not None:
+        y = y + bias.astype(acc.dtype) + residual.astype(acc.dtype)
     if relu:
         y = jax.nn.relu(y)
     return y.astype(x.dtype)
@@ -238,15 +310,29 @@ def dw_pw_conv(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1,
     intermediate lives only in VMEM on both paths (DESIGN.md §5).
 
     x: (N, H, W, C); dw_w: (k, k, C); dw_b: (C,); pw_w: (C, Cout) dense
-    2D; pw_b: (Cout,); residual: optional fused (N, Ho, Wo, Cout) skip.
+    2D (or a :class:`~repro.core.quant.QuantizedWeight` — int8 codes
+    feed the MXU dot and the per-channel scale joins the flush
+    epilogue); pw_b: (Cout,); residual: optional fused (N, Ho, Wo,
+    Cout) skip. A quantized dw_w dequantizes at entry: the depthwise
+    runs on the VPU as per-channel MAC chains, where there is no
+    wide-accumulator epilogue to factor a scale out to.
     """
+    from repro.core.quant import QuantizedWeight
+    if isinstance(dw_w, QuantizedWeight):
+        dw_w = dw_w.dequant()
+    pw_scale = None
+    if isinstance(pw_w, QuantizedWeight):
+        if _INT8_FAST:
+            pw_scale, pw_w = pw_w.scale, pw_w.codes      # (Cout,) f32
+        else:
+            pw_w = pw_w.dequant()       # reference path: dequant at entry
     if _IMPL == "pallas":
         from repro.kernels.dw_pw_fused import dw_pw_pallas
-        return dw_pw_pallas(x, dw_w, dw_b, pw_w, pw_b, residual,
+        return dw_pw_pallas(x, dw_w, dw_b, pw_w, pw_b, residual, pw_scale,
                             stride=stride, dw_relu=dw_relu, relu=relu)
     from repro.kernels.dw_pw_fused import dw_pw_xla
     hb = _knob("dwpw", x.shape, x.dtype, "row_chunk", 0,
                k=dw_w.shape[1], s=stride, co=pw_w.shape[-1])
     return dw_pw_xla(x, dw_w, dw_b, pw_w, pw_b, residual,
                      stride=stride, dw_relu=dw_relu, relu=relu,
-                     row_chunk=hb)
+                     row_chunk=hb, pw_scale=pw_scale)

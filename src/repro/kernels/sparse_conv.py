@@ -75,10 +75,13 @@ def pad_same_hw(x, k: int, stride: int, *, overread: bool = False):
 
 def _kernel(ky_ref, kx_ref, cb_ref, *refs,
             n_steps: int, wo: int, stride: int, relu: bool,
-            has_res: bool, block_k: int):
+            has_res: bool, has_scale: bool, block_k: int):
     x_refs = refs[:block_k]
     vals_ref, b_ref = refs[block_k], refs[block_k + 1]
     rest = refs[block_k + 2:]
+    scale_ref = None
+    if has_scale:
+        scale_ref, rest = rest[0], rest[1:]
     if has_res:
         res_ref, o_ref, acc_ref = rest
     else:
@@ -110,7 +113,13 @@ def _kernel(ky_ref, kx_ref, cb_ref, *refs,
 
     @pl.when(l == n_steps - 1)
     def _flush():
-        y = acc_ref[...] + b_ref[...].astype(jnp.float32)       # (wo, bn)
+        y = acc_ref[...]                                        # (wo, bn)
+        if has_scale:
+            # int8 epilogue: the accumulator holds the raw CODE dot —
+            # the per-output-channel scale re-reals it before the
+            # (real-valued) bias/residual join
+            y = y * scale_ref[...].astype(jnp.float32)
+        y = y + b_ref[...].astype(jnp.float32)
         if has_res:
             # fused residual epilogue (core/fusion.py R2): the skip
             # tensor's (wo, bn) line is gathered here, at the flush —
@@ -124,7 +133,8 @@ def _kernel(ky_ref, kx_ref, cb_ref, *refs,
 @functools.partial(jax.jit, static_argnames=("k", "stride", "relu",
                                              "block_k", "interpret"))
 def sparse_conv_pallas(x: jax.Array, vals: jax.Array, idx: jax.Array,
-                       bias: jax.Array, residual: jax.Array = None, *,
+                       bias: jax.Array, residual: jax.Array = None,
+                       scale: jax.Array = None, *,
                        k: int, stride: int = 1, relu: bool = True,
                        block_k: int = 1,
                        interpret: bool = True) -> jax.Array:
@@ -134,12 +144,16 @@ def sparse_conv_pallas(x: jax.Array, vals: jax.Array, idx: jax.Array,
     HWIO block ids; bias: (ob*bn,). SAME padding. ``residual``
     (optional, (N, Ho, Wo, ob*bn)) is a fused skip tensor added in the
     K-1 flush epilogue before the activation (core/fusion.py residual
-    rule). ``block_k`` (autotuned, must divide K) is the K-tile: how
-    many weight blocks each grid step gathers and accumulates —
-    identical numerics at any value, fewer grid steps at larger ones.
-    ``interpret=True`` runs the kernel body on CPU (this
-    container); on a real TPU pass interpret=False for the Mosaic path
-    (pad Wo/bn to the (8, 128) tile there).
+    rule). ``scale`` (optional, (ob, bn) f32) marks ``vals`` as int8
+    codes (core/quant.py): the accumulate is unchanged (the MXU dot
+    upcasts codes the way it upcasts bf16) and the scale multiplies the
+    accumulator at the flush, before bias/residual. ``block_k``
+    (autotuned, must divide K) is the K-tile: how many weight blocks
+    each grid step gathers and accumulates — identical numerics at any
+    value, fewer grid steps at larger ones. ``interpret=True`` runs the
+    kernel body on CPU (this container); on a real TPU pass
+    interpret=False for the Mosaic path (pad Wo/bn to the (8, 128) tile
+    there).
     """
     n, h, w, c = x.shape
     ob, n_k, bm, bn = vals.shape
@@ -153,9 +167,10 @@ def sparse_conv_pallas(x: jax.Array, vals: jax.Array, idx: jax.Array,
     n_steps = n_k // bk
     grid = (n, ho, ob, n_steps)
     has_res = residual is not None
+    has_scale = scale is not None
     kernel = functools.partial(_kernel, n_steps=n_steps, wo=wo,
                                stride=stride, relu=relu, has_res=has_res,
-                               block_k=bk)
+                               has_scale=has_scale, block_k=bk)
     in_specs = [
         # H-block size 1 => the index map's H coordinate is an
         # absolute row: oy*stride + ky is the implicit-GEMM
@@ -174,6 +189,12 @@ def sparse_conv_pallas(x: jax.Array, vals: jax.Array, idx: jax.Array,
                      lambda i, oy, j, l, ky, kx, cb: (0, j)),
     ]
     operands = [ky, kx, cb] + [xp] * bk + [vals, bias.reshape(1, ob * bn)]
+    if has_scale:
+        # per-output-channel scale rides the bias layout: one (1, bn)
+        # line per output block, read at the flush
+        in_specs.append(pl.BlockSpec(
+            (1, bn), lambda i, oy, j, l, ky, kx, cb: (0, j)))
+        operands.append(scale.reshape(1, ob * bn))
     if has_res:
         # skip line DMA'd only for the flush step's output block
         in_specs.append(pl.BlockSpec(

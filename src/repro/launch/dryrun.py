@@ -371,9 +371,9 @@ def run_cnn_pipeline_cell(arch: str, *, n_stages: int = 4,
                 path=cache_path, verbose=verbose)
         model = "measured"
         tuning.set_tuning_cache(cache)
-    plan = planner.plan_cnn_pipeline(cfg, params, n_stages,
-                                     max_stage_param_bytes=budget,
-                                     model=model, tuning_cache=cache)
+    plan = planner.plan(cfg, params, planner.PlanRequest(
+        n_stages=n_stages, max_stage_param_bytes=budget,
+        model=model, tuning_cache=cache))
     s = plan["n_stages"]
     r = n_replicas
     imgs = jax.ShapeDtypeStruct((batch, image_size, image_size, 3),

@@ -24,12 +24,33 @@ amortized over the whole request stream.
 
     PYTHONPATH=src python -m repro.launch.serve --arch resnet50 \
         --continuous --requests 8 --batch 8 --mb-size 2 --replicas 2
+
+THE serving entry point is ``serve(ServeConfig(...))``: one frozen
+config names the mode (``latency`` | ``throughput``), the scale-out
+(replicas / OS-process workers), and the stored weight dtype
+(``quantize``), and ``serve()`` dispatches to the right executor. The
+old per-mode functions (``serve_cnn`` / ``serve_cnn_continuous`` /
+``serve_cnn_tier``) survive as DeprecationWarning shims.
+
+Batch-1 latency mode (``mode="latency"``): HPIPE's headline number is
+single-image latency — no batch to fill, no microbatch fill bubble.
+One (1, H, W, 3) request runs the whole stage chain in ONE jit (the
+stage programs composed back-to-back; the wire protocol is unchanged,
+there is just no pipeline between the stages) and the next request is
+not admitted until its logits are on the host. ``serve()`` reports the
+measured p50/p99 over ``n_requests`` single-image requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch resnet50 \
+        --mode latency --requests 16 --quantize int8
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+import warnings
 from collections import deque
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,10 +61,10 @@ from repro.launch.mesh import mesh_context as _mesh_ctx
 from repro.models import lm
 
 
-def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
-          gen_tokens: int = 16, max_seq: int = 128,
-          use_reduced: bool = True, seed: int = 0, greedy: bool = True,
-          verbose: bool = True):
+def serve_lm(arch: str, *, batch: int = 4, prompt_len: int = 32,
+             gen_tokens: int = 16, max_seq: int = 128,
+             use_reduced: bool = True, seed: int = 0, greedy: bool = True,
+             verbose: bool = True):
     """Prefill a batch of prompts token-by-token-free (single forward),
     then decode ``gen_tokens`` greedily. Returns tokens + timings."""
     cfg = get_config(arch)
@@ -92,16 +113,142 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
             "decode_s": decode_s, "tokens_per_s": toks_per_s}
 
 
+# ---------------------------------------------------------------------------
+# the unified serving API: ONE frozen config, ONE dispatcher
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Everything ``serve()`` needs, in one frozen value.
+
+    ``mode`` picks the executor: ``"throughput"`` (the default — the
+    batched / continuous / tiered pipelines, selected by ``continuous``
+    / ``tier`` / ``procs``) or ``"latency"`` (batch-1: one image in
+    flight, whole stage chain in one jit, measured p50/p99).
+    ``quantize`` is the stored weight dtype (core/quant.py
+    ``STORE_DTYPES``): every executor re-stores the weights through the
+    same ``quantize_tree``, so a placed int8 pipeline and its
+    single-process int8 reference read the identical quantized tree.
+    """
+    arch: str
+    mode: str = "throughput"            # "latency" | "throughput"
+    continuous: bool = False
+    tier: bool = False
+    replicas: int = 1
+    procs: int = 0                      # >0: OS-process replica workers
+    quantize: str = "native"            # core/quant.py store dtype
+    batch: int = 16
+    n_requests: int = 4
+    n_microbatches: int = 4
+    mb_size: int = 2
+    n_stages: int = 4
+    image_size: int = 64
+    iters: int = 3
+    seed: int = 0
+    placed: Optional[bool] = None
+    param_budget_frac: Optional[float] = None
+    auto_split: bool = False
+    # fault-injection knobs (tier / procs modes)
+    fail_replica: Optional[int] = None
+    fail_at_tick: Optional[int] = None
+    kill_worker: Optional[int] = None
+    kill_at_tick: int = 1
+    # procs-mode liveness knobs
+    heartbeat_interval_s: float = 0.1
+    suspect_after_s: float = 0.5
+    dead_after_s: float = 10.0
+    ledger_dir: Optional[str] = None
+    # profile-guided planning
+    tuning_cache: Optional[object] = None
+    calibrate: bool = False
+    verbose: bool = True
+
+    def __post_init__(self):
+        from repro.core.quant import STORE_DTYPES
+        if self.mode not in ("latency", "throughput"):
+            raise ValueError(f"mode={self.mode!r}: expected 'latency' "
+                             "or 'throughput'")
+        if self.quantize not in STORE_DTYPES:
+            raise ValueError(f"quantize={self.quantize!r}: expected one "
+                             f"of {STORE_DTYPES}")
+        if self.mode == "latency" and (self.continuous or self.tier or
+                                       self.procs):
+            raise ValueError("mode='latency' serves one image at a time "
+                             "— continuous/tier/procs are throughput-"
+                             "mode knobs")
+
+
+def serve(cfg, **kw):
+    """THE serving entry point: ``serve(ServeConfig(...)) -> dict``.
+
+    Dispatch: LM archs run the prefill+decode loop; CNN archs run the
+    heterogeneous layer pipeline in the mode the config names —
+    ``latency`` (batch-1, p50/p99), or ``throughput`` via the tiered
+    (``tier``/``procs``), continuous (``continuous``) or one-shot
+    batched executor.
+
+    ``serve("arch-name", ...)`` (the pre-ServeConfig signature) still
+    works as a DeprecationWarning shim over the LM path."""
+    if isinstance(cfg, str):
+        warnings.warn(
+            "serve(arch, ...) is deprecated; LM serving moved to "
+            "serve_lm(arch, ...) and serve() now takes a ServeConfig",
+            DeprecationWarning, stacklevel=2)
+        return serve_lm(cfg, **kw)
+    if kw:
+        raise TypeError(f"serve(ServeConfig) takes no extra kwargs "
+                        f"(got {sorted(kw)})")
+    if get_config(cfg.arch).family != "cnn":
+        return serve_lm(cfg.arch, batch=cfg.batch, seed=cfg.seed,
+                        verbose=cfg.verbose)
+    if cfg.mode == "latency":
+        return _serve_cnn_latency(cfg)
+    if cfg.tier or cfg.procs:
+        return _serve_cnn_tier(
+            cfg.arch, n_requests=cfg.n_requests, batch=cfg.batch,
+            mb_size=cfg.mb_size, n_stages=cfg.n_stages,
+            n_replicas=cfg.replicas, image_size=cfg.image_size,
+            seed=cfg.seed, fail_replica=cfg.fail_replica,
+            fail_at_tick=cfg.fail_at_tick, procs=cfg.procs,
+            kill_worker=cfg.kill_worker, kill_at_tick=cfg.kill_at_tick,
+            heartbeat_interval_s=cfg.heartbeat_interval_s,
+            suspect_after_s=cfg.suspect_after_s,
+            dead_after_s=cfg.dead_after_s, ledger_dir=cfg.ledger_dir,
+            quantize=cfg.quantize, verbose=cfg.verbose)
+    if cfg.continuous:
+        return _serve_cnn_continuous(
+            cfg.arch, n_requests=cfg.n_requests, batch=cfg.batch,
+            mb_size=cfg.mb_size, n_stages=cfg.n_stages,
+            n_replicas=cfg.replicas, image_size=cfg.image_size,
+            seed=cfg.seed, placed=cfg.placed,
+            param_budget_frac=cfg.param_budget_frac,
+            auto_split=cfg.auto_split, tuning_cache=cfg.tuning_cache,
+            calibrate=cfg.calibrate, quantize=cfg.quantize,
+            verbose=cfg.verbose)
+    return _serve_cnn(
+        cfg.arch, batch=cfg.batch, n_microbatches=cfg.n_microbatches,
+        n_stages=cfg.n_stages, image_size=cfg.image_size,
+        iters=cfg.iters, seed=cfg.seed, placed=cfg.placed,
+        param_budget_frac=cfg.param_budget_frac,
+        n_replicas=cfg.replicas, auto_split=cfg.auto_split,
+        tuning_cache=cfg.tuning_cache, calibrate=cfg.calibrate,
+        quantize=cfg.quantize, verbose=cfg.verbose)
+
+
 def _plan_cnn_serving(arch: str, *, n_stages: int, n_replicas: int,
                       n_microbatches: int, param_budget_frac,
                       auto_split: bool, seed: int,
                       tuning_cache=None, calibrate: bool = False,
-                      image_size: int = 64, verbose: bool = False):
-    """Shared serving preamble (serve_cnn + CNNPipelineServer): init
-    params, resolve the weight budget, and pick the (stages, replicas)
-    split — the co-planner's when ``auto_split``, the caller's
-    otherwise. One copy so the two entry points cannot drift.
-    Returns ``(cfg, params, plan, n_replicas, total_bytes)``.
+                      image_size: int = 64, store_dtype: str = "native",
+                      verbose: bool = False):
+    """Shared serving preamble (every CNN executor): init params,
+    resolve the weight budget, and pick the (stages, replicas) split —
+    the co-planner's when ``auto_split``, the caller's otherwise. One
+    copy so the entry points cannot drift. Returns ``(cfg, params,
+    plan, n_replicas, total_bytes)``; ``total_bytes`` is priced at
+    ``store_dtype``, and so is the budget the planner balances against
+    (a quantized deployment's budget constrains its QUANTIZED
+    residency — that is what lets int8 plan deeper cuts).
 
     Profile-guided planning: ``tuning_cache`` (a path or a TuningCache)
     switches the planner to ``model="measured"`` over that cache's
@@ -116,7 +263,7 @@ def _plan_cnn_serving(arch: str, *, n_stages: int, n_replicas: int,
     if cfg.family != "cnn":
         raise ValueError(f"{arch} is not a CNN arch")
     params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
-    total_bytes = pytree_param_bytes(params)
+    total_bytes = pytree_param_bytes(params, store_dtype)
     budget = (int(param_budget_frac * total_bytes)
               if param_budget_frac else None)
     cache, model = None, "analytic"
@@ -135,24 +282,24 @@ def _plan_cnn_serving(arch: str, *, n_stages: int, n_replicas: int,
         model = "measured"
         tuning.set_tuning_cache(cache)  # kernel knobs at trace time
     if auto_split:
-        plan2d = planner.plan_cnn_pipeline_2d(
-            cfg, params, len(jax.devices()),
+        plan2d = planner.plan(cfg, params, planner.PlanRequest(
+            n_devices=len(jax.devices()),
             n_microbatches=n_microbatches, max_stage_param_bytes=budget,
-            model=model, tuning_cache=cache)
+            model=model, tuning_cache=cache, store_dtype=store_dtype))
         plan, n_replicas = plan2d["plan"], plan2d["n_replicas"]
     else:
-        plan = planner.plan_cnn_pipeline(cfg, params, n_stages,
-                                         max_stage_param_bytes=budget,
-                                         model=model, tuning_cache=cache)
+        plan = planner.plan(cfg, params, planner.PlanRequest(
+            n_stages=n_stages, max_stage_param_bytes=budget,
+            model=model, tuning_cache=cache, store_dtype=store_dtype))
     return cfg, params, plan, n_replicas, total_bytes
 
 
-def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
-              n_stages: int = 4, image_size: int = 64, iters: int = 3,
-              seed: int = 0, verbose: bool = True, placed=None,
-              param_budget_frac=None, n_replicas: int = 1,
-              auto_split: bool = False, tuning_cache=None,
-              calibrate: bool = False):
+def _serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
+               n_stages: int = 4, image_size: int = 64, iters: int = 3,
+               seed: int = 0, verbose: bool = True, placed=None,
+               param_budget_frac=None, n_replicas: int = 1,
+               auto_split: bool = False, tuning_cache=None,
+               calibrate: bool = False, quantize: str = "native"):
     """Batched image serving through the heterogeneous layer pipeline
     (``pipeline_cnn`` mode).
 
@@ -187,7 +334,7 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
         n_microbatches=n_microbatches or 8,
         param_budget_frac=param_budget_frac, auto_split=auto_split,
         seed=seed, tuning_cache=tuning_cache, calibrate=calibrate,
-        image_size=image_size, verbose=verbose)
+        image_size=image_size, store_dtype=quantize, verbose=verbose)
     from repro.models import cnn
     s = plan["n_stages"]
     r = n_replicas
@@ -216,7 +363,8 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
                 "or drop placement/replication")
         from repro.launch.shardings import placed_stage_setup
         stage_fns, pack_in, unpack_out, width, pparams, mesh, sps = \
-            placed_stage_setup(cfg, params, plan, mb_shape, n_replicas=r)
+            placed_stage_setup(cfg, params, plan, mb_shape, n_replicas=r,
+                               quantize=quantize)
         placed_bytes = pparams.width
         run_args = (x_mb, jax.device_put(pparams.pack(), sps["buffer"]))
 
@@ -235,7 +383,7 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
                 mesh=mesh, stage_params=pb)
     else:
         stage_fns, pack_in, unpack_out, width = cnn.stage_programs(
-            cfg, params, plan["stage_of"], mb_shape)
+            cfg, params, plan["stage_of"], mb_shape, quantize=quantize)
         placed_bytes = int(plan["placed_bytes_per_device"])  # what
         #                                     placement WOULD hold
         mesh = None
@@ -286,9 +434,76 @@ def serve_cnn(arch: str, *, batch: int = 16, n_microbatches: int = 4,
             "n_replicas": r,
             "imbalance": plan["imbalance"],
             "placed": use_placed,
+            "quantize": quantize,
             "param_bytes_replicated_per_device": int(total_bytes),
             "param_bytes_placed_per_device": int(placed_bytes),
             "param_placement_ratio": placed_bytes / max(total_bytes, 1)}
+
+
+def _serve_cnn_latency(cfg: ServeConfig) -> dict:
+    """Batch-1 latency serving — the paper's headline regime.
+
+    HPIPE's claim is single-image latency WITHOUT batching: every layer
+    has its own hardware, so one image flows through the whole chain
+    with no batch to fill. The TPU mapping: compile the plan's stage
+    programs COMPOSED back-to-back into one jit (the wire protocol —
+    pack, stage chain, unpack — is identical to the pipelined
+    executors; there is simply no pipeline register between stages) and
+    admit exactly one (1, H, W, 3) request at a time: the next request
+    is not submitted until this one's logits are on the host. Each
+    request's wall time therefore IS its latency — no queueing, no
+    microbatch fill, no deferred D2H — and the reported p50/p99 are
+    measured over ``n_requests`` such round trips (H2D + forward + D2H
+    inclusive). Throughput mode at batch 1 pays the fill bubble and
+    the tick scheduler on top; the serving benchmark asserts this
+    mode's p50 beats it."""
+    from repro.models import cnn
+    mcfg, params, plan, _, total_bytes = _plan_cnn_serving(
+        cfg.arch, n_stages=cfg.n_stages, n_replicas=1,
+        n_microbatches=1, param_budget_frac=cfg.param_budget_frac,
+        auto_split=False, seed=cfg.seed, tuning_cache=cfg.tuning_cache,
+        calibrate=cfg.calibrate, image_size=cfg.image_size,
+        store_dtype=cfg.quantize, verbose=cfg.verbose)
+    img_shape = (1, cfg.image_size, cfg.image_size, 3)
+    stage_fns, pack_in, unpack_out, width = cnn.stage_programs(
+        mcfg, params, plan["stage_of"], img_shape, quantize=cfg.quantize)
+
+    @jax.jit
+    def request(img):
+        wire = pack_in(img)
+        for fn in stage_fns:          # composed, not pipelined: one jit
+            wire = fn(wire)
+        return unpack_out(wire)
+
+    # one warmup request eats the compile; the timed loop measures the
+    # steady single-image round trip
+    t0 = time.time()
+    jax.block_until_ready(request(jnp.zeros(img_shape, jnp.float32)))
+    compile_s = time.time() - t0
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    reqs = np.asarray(jax.random.normal(
+        key, (cfg.n_requests,) + img_shape[1:]), np.float32)
+    lats, logits = [], []
+    for i in range(cfg.n_requests):
+        t0 = time.time()
+        y = request(jnp.asarray(reqs[i][None]))   # H2D in the timed path
+        logits.append(np.asarray(y))              # D2H blocks: round trip
+        lats.append(time.time() - t0)
+    logits = np.concatenate(logits, 0)
+    p50 = float(np.percentile(lats, 50))
+    p99 = float(np.percentile(lats, 99))
+    if cfg.verbose:
+        print(f"{cfg.arch}: batch-1 latency through "
+              f"{plan['n_stages']} composed stages "
+              f"(quantize={cfg.quantize}): p50 {p50 * 1e3:.1f}ms / "
+              f"p99 {p99 * 1e3:.1f}ms over {cfg.n_requests} requests "
+              f"(compile {compile_s:.1f}s)")
+    return {"mode": "latency", "quantize": cfg.quantize,
+            "latency_p50_s": p50, "latency_p99_s": p99,
+            "request_latencies_s": lats, "logits": logits,
+            "request_images": reqs,
+            "n_stages": int(plan["n_stages"]), "compile_s": compile_s,
+            "param_bytes_stored": int(total_bytes)}
 
 
 # marks a microbatch slot owned by the serving tier rather than a
@@ -339,7 +554,7 @@ class CNNPipelineServer:
                  auto_split: bool = False, verbose: bool = False,
                  devices=None, injector=None, cfg=None, params=None,
                  plan=None, param_buffer=None, tuning_cache=None,
-                 calibrate: bool = False):
+                 calibrate: bool = False, quantize: str = "native"):
         from repro.core import pipeline as pp
         from repro.models import cnn
         if plan is not None:
@@ -359,8 +574,10 @@ class CNNPipelineServer:
                 param_budget_frac=param_budget_frac,
                 auto_split=auto_split, seed=seed,
                 tuning_cache=tuning_cache, calibrate=calibrate,
-                image_size=image_size, verbose=verbose)
+                image_size=image_size, store_dtype=quantize,
+                verbose=verbose)
         self.cfg = cfg
+        self.quantize = quantize
         self.n_stages = s = plan["n_stages"]
         self.n_replicas = r = n_replicas
         self.mb_size = mb_size
@@ -376,7 +593,8 @@ class CNNPipelineServer:
             from repro.launch.shardings import placed_stage_setup
             stage_fns, pack_in, unpack_out, width, pparams, mesh, sps = \
                 placed_stage_setup(cfg, params, plan, mb_shape,
-                                   n_replicas=r, devices=self.devices)
+                                   n_replicas=r, devices=self.devices,
+                                   quantize=quantize)
             if param_buffer is not None:
                 # a pre-placed (S, P) buffer (the tier's remesh path on
                 # degraded respawn) — skip the host-side repack
@@ -391,7 +609,8 @@ class CNNPipelineServer:
             # execution without the (S, P) buffer's even-width padding
             stage_fns, pack_in, unpack_out, width, pparams = \
                 cnn.stage_programs(cfg, params, plan["stage_of"],
-                                   mb_shape, placed=True)
+                                   mb_shape, placed=True,
+                                   quantize=quantize)
             self._params_arg = (pparams.pack_ragged(),)
             self.mesh = None
         self.placed = use_placed
@@ -716,14 +935,15 @@ class CNNPipelineServer:
         return n
 
 
-def serve_cnn_continuous(arch: str, *, n_requests: int = 4,
-                         batch: int = 8, mb_size: int = 2,
-                         n_stages: int = 4, n_replicas: int = 1,
-                         image_size: int = 64, seed: int = 0,
-                         placed=None, param_budget_frac=None,
-                         auto_split: bool = False,
-                         verbose: bool = True, tuning_cache=None,
-                         calibrate: bool = False) -> dict:
+def _serve_cnn_continuous(arch: str, *, n_requests: int = 4,
+                          batch: int = 8, mb_size: int = 2,
+                          n_stages: int = 4, n_replicas: int = 1,
+                          image_size: int = 64, seed: int = 0,
+                          placed=None, param_budget_frac=None,
+                          auto_split: bool = False,
+                          verbose: bool = True, tuning_cache=None,
+                          calibrate: bool = False,
+                          quantize: str = "native") -> dict:
     """Continuous-batching serving run: K back-to-back requests through
     one CNNPipelineServer (the pipeline never drains between them),
     returning the per-request logits plus throughput and the
@@ -736,7 +956,8 @@ def serve_cnn_continuous(arch: str, *, n_requests: int = 4,
                             seed=seed, placed=placed,
                             param_budget_frac=param_budget_frac,
                             auto_split=auto_split, verbose=False,
-                            tuning_cache=tuning_cache, calibrate=calibrate)
+                            tuning_cache=tuning_cache, calibrate=calibrate,
+                            quantize=quantize)
     # warm the jitted tick before the timed stream (compile would
     # otherwise swamp the measured im/s)
     warm = srv.submit(np.zeros((mb_size, image_size, image_size, 3),
@@ -769,16 +990,17 @@ def serve_cnn_continuous(arch: str, *, n_requests: int = 4,
     return metrics
 
 
-def serve_cnn_tier(arch: str, *, n_requests: int = 8, batch: int = 8,
-                   mb_size: int = 2, n_stages: int = 4,
-                   n_replicas: int = 2, image_size: int = 64,
-                   seed: int = 0, fail_replica=None, fail_at_tick=None,
-                   procs: int = 0, kill_worker=None,
-                   kill_at_tick: int = 1,
-                   heartbeat_interval_s: float = 0.1,
-                   suspect_after_s: float = 0.5,
-                   dead_after_s: float = 10.0,
-                   ledger_dir=None, verbose: bool = True) -> dict:
+def _serve_cnn_tier(arch: str, *, n_requests: int = 8, batch: int = 8,
+                    mb_size: int = 2, n_stages: int = 4,
+                    n_replicas: int = 2, image_size: int = 64,
+                    seed: int = 0, fail_replica=None, fail_at_tick=None,
+                    procs: int = 0, kill_worker=None,
+                    kill_at_tick: int = 1,
+                    heartbeat_interval_s: float = 0.1,
+                    suspect_after_s: float = 0.5,
+                    dead_after_s: float = 10.0,
+                    ledger_dir=None, quantize: str = "native",
+                    verbose: bool = True) -> dict:
     """Fault-tolerant serving demo: K requests through a ServingTier
     of R pipeline replicas, optionally killing one mid-stream with a
     FailureInjector (``--fail-replica R --fail-at-tick T``) to watch
@@ -800,7 +1022,7 @@ def serve_cnn_tier(arch: str, *, n_requests: int = 8, batch: int = 8,
             image_size=image_size, seed=seed, worker_hooks=hooks,
             heartbeat_interval_s=heartbeat_interval_s,
             suspect_after_s=suspect_after_s, dead_after_s=dead_after_s,
-            ledger_dir=ledger_dir, verbose=verbose)
+            ledger_dir=ledger_dir, quantize=quantize, verbose=verbose)
     else:
         injectors = {}
         if fail_replica is not None and fail_at_tick is not None:
@@ -809,7 +1031,8 @@ def serve_cnn_tier(arch: str, *, n_requests: int = 8, batch: int = 8,
         tier = ServingTier(arch, n_replicas=n_replicas,
                            n_stages=n_stages, mb_size=mb_size,
                            image_size=image_size, seed=seed,
-                           injectors=injectors, verbose=verbose)
+                           injectors=injectors, quantize=quantize,
+                           verbose=verbose)
     key = jax.random.PRNGKey(seed + 1)
     rids = []
     for _ in range(n_requests):
@@ -823,6 +1046,33 @@ def serve_cnn_tier(arch: str, *, n_requests: int = 8, batch: int = 8,
         if procs > 0:
             tier.close()
     return metrics
+
+
+# --- deprecated per-mode entry points (use serve(ServeConfig(...))) --------
+
+def _serve_deprecated(old: str) -> None:
+    warnings.warn(f"{old}() is deprecated; use "
+                  "serve(ServeConfig(arch=..., ...)) — one config, one "
+                  "dispatcher", DeprecationWarning, stacklevel=3)
+
+
+def serve_cnn(arch: str, **kw):
+    """Deprecated shim: ``serve(ServeConfig(arch, mode='throughput'))``."""
+    _serve_deprecated("serve_cnn")
+    return _serve_cnn(arch, **kw)
+
+
+def serve_cnn_continuous(arch: str, **kw):
+    """Deprecated shim:
+    ``serve(ServeConfig(arch, continuous=True))``."""
+    _serve_deprecated("serve_cnn_continuous")
+    return _serve_cnn_continuous(arch, **kw)
+
+
+def serve_cnn_tier(arch: str, **kw):
+    """Deprecated shim: ``serve(ServeConfig(arch, tier=True))``."""
+    _serve_deprecated("serve_cnn_tier")
+    return _serve_cnn_tier(arch, **kw)
 
 
 def main(argv=None):
@@ -903,44 +1153,40 @@ def main(argv=None):
                     help="profile every fused node on the live device "
                          "first and write the results to --tuning-cache "
                          "(then plan from them)")
+    ap.add_argument("--mode", choices=("latency", "throughput"),
+                    default="throughput",
+                    help="latency: batch-1 single-image serving, "
+                         "measured p50/p99; throughput: the batched / "
+                         "continuous / tiered pipelines")
+    ap.add_argument("--quantize", choices=("native", "f32", "bf16",
+                                           "int8"), default="native",
+                    help="stored weight dtype (core/quant.py): int8 "
+                         "packs per-channel-scaled codes into the "
+                         "placed param rows")
     args = ap.parse_args(argv)
     if get_config(args.arch).family == "cnn":
-        if args.tier or args.procs:
-            serve_cnn_tier(
-                args.arch, n_requests=args.requests, batch=args.batch,
-                mb_size=args.mb_size, n_stages=args.stages,
-                n_replicas=max(args.replicas, 2),
-                image_size=args.image_size,
-                fail_replica=args.fail_replica,
-                fail_at_tick=args.fail_at_tick,
-                procs=args.procs, kill_worker=args.kill_worker,
-                kill_at_tick=args.kill_at_tick,
-                heartbeat_interval_s=args.heartbeat_interval,
-                suspect_after_s=args.suspect_after,
-                dead_after_s=args.dead_after,
-                ledger_dir=args.ledger_dir)
-        elif args.continuous:
-            serve_cnn_continuous(
-                args.arch, n_requests=args.requests, batch=args.batch,
-                mb_size=args.mb_size, n_stages=args.stages,
-                n_replicas=args.replicas, image_size=args.image_size,
-                placed=args.placed,
-                param_budget_frac=args.param_budget_frac,
-                auto_split=args.auto_split,
-                tuning_cache=args.tuning_cache, calibrate=args.calibrate)
-        else:
-            serve_cnn(args.arch, batch=args.batch,
-                      n_microbatches=args.microbatches,
-                      n_stages=args.stages, image_size=args.image_size,
-                      placed=args.placed,
-                      param_budget_frac=args.param_budget_frac,
-                      n_replicas=args.replicas,
-                      auto_split=args.auto_split,
-                      tuning_cache=args.tuning_cache,
-                      calibrate=args.calibrate)
+        serve(ServeConfig(
+            arch=args.arch, mode=args.mode, continuous=args.continuous,
+            tier=args.tier, procs=args.procs,
+            replicas=(max(args.replicas, 2)
+                      if args.tier or args.procs else args.replicas),
+            quantize=args.quantize, batch=args.batch,
+            n_requests=args.requests, n_microbatches=args.microbatches,
+            mb_size=args.mb_size, n_stages=args.stages,
+            image_size=args.image_size, placed=args.placed,
+            param_budget_frac=args.param_budget_frac,
+            auto_split=args.auto_split,
+            fail_replica=args.fail_replica,
+            fail_at_tick=args.fail_at_tick,
+            kill_worker=args.kill_worker,
+            kill_at_tick=args.kill_at_tick,
+            heartbeat_interval_s=args.heartbeat_interval,
+            suspect_after_s=args.suspect_after,
+            dead_after_s=args.dead_after, ledger_dir=args.ledger_dir,
+            tuning_cache=args.tuning_cache, calibrate=args.calibrate))
     else:
-        serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-              gen_tokens=args.gen, use_reduced=args.reduced)
+        serve_lm(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+                 gen_tokens=args.gen, use_reduced=args.reduced)
 
 
 if __name__ == "__main__":

@@ -201,14 +201,15 @@ def cache_shardings(cache, mesh: Mesh, **kw):
 # --- per-stage weight placement (the heterogeneous CNN pipeline) -----------
 
 def stage_param_shardings(graph, plan, mesh: Mesh, *, params=None,
-                          stage_axis: str = "stage") -> dict:
+                          stage_axis: str = "stage",
+                          store_dtype: str = "native") -> dict:
     """Placement plan for a heterogeneous pipeline's weights: the
     NamedSharding that pins each stage's packed param row onto that
     stage's mesh devices, plus the byte accounting that makes the win
     visible (HPIPE's per-layer weight memories vs a replicated model).
 
     graph: the (fused) LayerGraph the plan partitions. plan: the dict
-    from ``planner.plan_cnn_pipeline`` (or any dict with "stage_of").
+    from ``planner.plan`` (or any dict with "stage_of").
     mesh: must carry ``stage_axis`` with one device slot per stage —
     extra axes (the ``data`` axis of a stage x data 2-D pipeline) are
     fine: the ``P(stage_axis)`` spec replicates the buffer across them,
@@ -242,7 +243,10 @@ def stage_param_shardings(graph, plan, mesh: Mesh, *, params=None,
            "stage_parts": parts}
     if params is not None:
         from repro.core.costmodel import pytree_param_bytes
-        sb = [sum(pytree_param_bytes(params[n]) for n in names)
+        # priced at the STORED width: an int8 placement's rows really
+        # are ~4x narrower than f32, and the accounting should show it
+        sb = [sum(pytree_param_bytes(params[n], store_dtype)
+                  for n in names)
               for names in parts]
         out["stage_param_bytes"] = sb
         out["replicated_bytes_per_device"] = sum(sb)
@@ -254,23 +258,29 @@ def stage_param_shardings(graph, plan, mesh: Mesh, *, params=None,
 
 def placed_stage_setup(cfg, params, plan, mb_shape, *,
                        stage_axis: str = "stage", n_replicas: int = 1,
-                       data_axis: str = "data", devices=None):
+                       data_axis: str = "data", devices=None,
+                       quantize: str = "native"):
     """Placed-pipeline scaffolding shared by serve/dryrun: compile the
     placed stage programs, build the one-device-per-stage mesh (a 2-D
     ``(data, stage)`` grid when ``n_replicas`` > 1 — each data row is a
     full pipeline) and the buffer sharding that pins each stage's
     packed params to its stage column (replicated only across data).
-    Returns ``(stage_fns, pack_in, unpack_out, width, pparams, mesh,
-    sps)`` where sps is :func:`stage_param_shardings`'s dict (with the
-    byte accounting, since params are given)."""
+    ``quantize`` (core/quant.py store dtype) places the re-stored
+    weights: the packed rows shrink to the quantized width and the byte
+    accounting is priced at it. Returns ``(stage_fns, pack_in,
+    unpack_out, width, pparams, mesh, sps)`` where sps is
+    :func:`stage_param_shardings`'s dict (with the byte accounting,
+    since params are given)."""
     from repro.core.fusion import fused_graph_for
     from repro.launch.mesh import make_stage_mesh
     from repro.models import cnn
     s = plan["n_stages"]
     stage_fns, pack_in, unpack_out, width, pparams = cnn.stage_programs(
-        cfg, params, plan["stage_of"], mb_shape, placed=True)
+        cfg, params, plan["stage_of"], mb_shape, placed=True,
+        quantize=quantize)
     mesh = make_stage_mesh(s, n_replicas, stage_axis=stage_axis,
                            data_axis=data_axis, devices=devices)
     sps = stage_param_shardings(fused_graph_for(cfg.name), plan, mesh,
-                                params=params, stage_axis=stage_axis)
+                                params=params, stage_axis=stage_axis,
+                                store_dtype=quantize)
     return stage_fns, pack_in, unpack_out, width, pparams, mesh, sps

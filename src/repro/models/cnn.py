@@ -195,12 +195,19 @@ def conv2d(x, p, s: ConvSpec, *, relu=True, residual=None):
     pruned weights (patches form in VMEM per grid step, never in HBM),
     native conv for dense weights. No im2col tensor either way.
     ``residual``: optional fused skip tensor added in the epilogue
-    before the activation (graph fusion, core/fusion.py)."""
+    before the activation (graph fusion, core/fusion.py). An int8
+    SparseWeight flows into the kernel dispatcher (which owns the
+    fast-path-vs-dequant choice); a dense QuantizedWeight dequantizes
+    at stage entry — the native conv has no epilogue to factor the
+    scale into."""
+    from repro.core.quant import QuantizedWeight
     w = p["w"]
     if isinstance(w, SparseWeight):
         from repro.kernels import ops as kops
         return kops.sparse_conv(x, w, p["b"], k=s.k, stride=s.stride,
                                 relu=relu, residual=residual)
+    if isinstance(w, QuantizedWeight):
+        w = w.dequant()
     w4 = w.reshape(s.k, s.k, s.cin, s.cout)              # HWIO row order
     # f32 accumulation (what the MXU does natively with bf16 inputs);
     # XLA:CPU would otherwise accumulate the conv in bf16
@@ -223,8 +230,12 @@ def conv2d(x, p, s: ConvSpec, *, relu=True, residual=None):
 
 
 def depthwise(x, p, s: ConvSpec, *, relu=True):
+    from repro.core.quant import QuantizedWeight
     from repro.kernels import ops as kops
-    y = kops.depthwise_conv(x, p["w"], stride=s.stride)
+    w = p["w"]
+    if isinstance(w, QuantizedWeight):
+        w = w.dequant()      # VPU MAC chains: no epilogue for the scale
+    y = kops.depthwise_conv(x, w, stride=s.stride)
     y = y + p["b"]
     return jax.nn.relu(y) if relu else y
 
@@ -253,11 +264,19 @@ def fc_apply(p, x):
     interpreter AND ``cnn_forward_reference`` (one dispatch point, so
     the bit-for-bit oracle bar keeps guarding the graph machinery, not
     the weight format)."""
+    from repro.core.quant import QuantizedWeight
+    from repro.kernels import ops as kops
     w = p["w"]
     x32 = x.astype(jnp.float32)
     if isinstance(w, SparseWeight):
-        from repro.kernels import ops as kops
         y = kops.sparse_matmul(x32, w)
+    elif isinstance(w, QuantizedWeight):
+        if kops._INT8_FAST:
+            # int8 matmul, f32 accumulate, per-channel scale on the
+            # accumulator — same factoring as the sparse kernels
+            y = (x32 @ w.codes.astype(jnp.float32)) * w.scale
+        else:
+            y = x32 @ w.dequant().astype(jnp.float32)
     else:
         y = x32 @ w.astype(jnp.float32)
     return y + p["b"].astype(jnp.float32)
@@ -380,11 +399,11 @@ def stage_param_trees(g: LayerGraph, stage_of, params) -> list[dict]:
 
 def stage_programs(cfg, params, stage_of, image_shape, *,
                    graph: Optional[LayerGraph] = None,
-                   placed: bool = False):
+                   placed: bool = False, quantize: str = "native"):
     """Compile the IR into per-stage wire programs.
 
     stage_of: stage id per IR node of the FUSED graph (contiguous, from
-    ``planner.plan_cnn_pipeline`` — fused super-nodes are atomic, so a
+    ``planner.plan`` — fused super-nodes are atomic, so a
     stage cut can never land inside a fusion). image_shape: (mb, H, W, 3)
     of ONE microbatch. Returns ``(stage_fns, pack_in, unpack_out, width)``:
 
@@ -403,9 +422,17 @@ def stage_programs(cfg, params, stage_of, image_shape, *,
     the buffer: ``.pack()`` builds the (S, P) uint8 array to
     ``jax.device_put`` with ``launch/shardings.stage_param_shardings``.
     No stage program closes over a weight, so nothing replicates.
+
+    ``quantize`` (core/quant.py store dtype) re-stores the weights ONCE
+    up front, so the placed trees, their ParamFormats, and the
+    non-placed closures all read the SAME quantized pytree — placed ==
+    non-placed stays bitwise even under int8.
     """
     from repro.core import pipeline as pp
     g = graph if graph is not None else fused_graph_for(cfg.name)
+    if quantize != "native":
+        from repro.core.quant import quantize_tree
+        params = quantize_tree(params, quantize)
     slices = g.partition(list(stage_of))
     shapes = node_shapes(cfg, params, image_shape, graph=g)
 
@@ -420,7 +447,8 @@ def stage_programs(cfg, params, stage_of, image_shape, *,
     placed_params = None
     if placed:
         trees = stage_param_trees(g, stage_of, params)
-        pfmts = [pp.ParamFormat.for_tree(t) for t in trees]
+        pfmts = [pp.ParamFormat.for_tree(t, store_dtype=quantize)
+                 for t in trees]
         pwidth = max(max((f.nbytes for f in pfmts), default=0), 1)
         placed_params = pp.PlacedParams(formats=tuple(pfmts),
                                         trees=tuple(trees), width=pwidth)

@@ -100,30 +100,66 @@ class SparseWeight:
 
     vals: (out_blocks, K, bm, bn) — the K surviving input blocks for each
           output block column (HPIPE: the weights loaded by one channel
-          split, padded to equal length).
+          split, padded to equal length). Float natively; int8 codes
+          when quantized (see core/quant.py).
     idx:  (out_blocks, K) int32 — input block ids (HPIPE: decoded
           runlengths).
     d_in: static input width (pytree aux data, survives vmap/scan/jit).
+    scale: optional (out_blocks, bn) f32 per-output-channel symmetric
+          scale, present iff vals are int8 codes. A pytree CHILD (it
+          must ride placement/packing with vals), appended after idx so
+          unquantized trees keep their historical leaf order.
+    orig_dtype: dtype name dequantization restores (aux; None when
+          unquantized).
     """
 
-    def __init__(self, vals: Array, idx: Array, d_in: int):
+    def __init__(self, vals: Array, idx: Array, d_in: int, *,
+                 scale: Optional[Array] = None,
+                 orig_dtype: Optional[str] = None):
         self.vals = vals
         self.idx = idx
         self.d_in = d_in
+        self.scale = scale
+        self.orig_dtype = orig_dtype
 
     @property
     def d_out(self) -> int:
         return self.vals.shape[-4] * self.vals.shape[-1]
 
+    def dequant_vals(self) -> Array:
+        """vals at their original float dtype (identity if unquantized)."""
+        if self.scale is None:
+            return self.vals
+        return (self.vals.astype(jnp.float32)
+                * self.scale[:, None, None, :].astype(jnp.float32)).astype(
+                    jnp.dtype(self.orig_dtype))
+
+    def dequantized(self) -> "SparseWeight":
+        """Unquantized view: float vals, no scale."""
+        if self.scale is None:
+            return self
+        return SparseWeight(self.dequant_vals(), self.idx, self.d_in)
+
     def tree_flatten(self):
-        return (self.vals, self.idx), self.d_in
+        if self.scale is None:
+            return (self.vals, self.idx), (self.d_in, False, None)
+        return ((self.vals, self.idx, self.scale),
+                (self.d_in, True, self.orig_dtype))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], aux)
+        if not isinstance(aux, tuple):        # pre-quantization aux: d_in
+            return cls(children[0], children[1], aux)
+        d_in, has_scale, orig_dtype = aux
+        if has_scale:
+            return cls(children[0], children[1], d_in, scale=children[2],
+                       orig_dtype=orig_dtype)
+        return cls(children[0], children[1], d_in)
 
     def __repr__(self):
-        return f"SparseWeight(vals={getattr(self.vals, 'shape', None)}, d_in={self.d_in})"
+        q = "" if self.scale is None else f", int8[{self.orig_dtype}]"
+        return (f"SparseWeight(vals={getattr(self.vals, 'shape', None)}, "
+                f"d_in={self.d_in}{q})")
 
 
 def linear(x: Array, w) -> Array:

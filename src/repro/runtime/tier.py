@@ -33,8 +33,8 @@ repo: real sharded pipelines, simulated fleet):
   ``max_respawns`` consecutive failures retire it permanently.
 - **Degradation**: on *permanent device loss*
   (:meth:`ServingTier.lose_devices`) the tier re-plans the reduced pool
-  through :func:`repro.core.planner.replan_cnn_pipeline_2d` and
-  respawns workers on the surviving devices — re-placing the packed
+  through :func:`repro.core.planner.plan` (a ``PlanRequest`` carrying
+  ``prev=``) and respawns workers on the surviving devices — re-placing the packed
   ``(S, P)`` stage-param buffer with :func:`repro.runtime.fault.remesh`
   when the stage cut is unchanged, repacking only when the depth had to
   change.
@@ -482,6 +482,7 @@ class ServingTier(_TierBase):
                  jitter_seed: int = 0,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
+                 quantize: str = "native",
                  verbose: bool = False):
         if heartbeat_timeout_s <= 0:
             raise ValueError(f"heartbeat_timeout_s must be > 0, got "
@@ -496,21 +497,23 @@ class ServingTier(_TierBase):
             raise ValueError(f"{arch} is not a CNN arch")
         self.arch = arch
         self.cfg = cfg
+        self.quantize = quantize
         self.params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
         self._budget = (int(param_budget_frac *
-                            pytree_param_bytes(self.params))
+                            pytree_param_bytes(self.params, quantize))
                         if param_budget_frac else None)
         self._pool = list(devices) if devices is not None \
             else list(jax.devices())
         if auto_split:
-            plan2d = planner.plan_cnn_pipeline_2d(
-                cfg, self.params, len(self._pool), n_microbatches=32,
-                max_stage_param_bytes=self._budget)
+            plan2d = planner.plan(cfg, self.params, planner.PlanRequest(
+                n_devices=len(self._pool), n_microbatches=32,
+                max_stage_param_bytes=self._budget,
+                store_dtype=quantize))
             self.plan, n_replicas = plan2d["plan"], plan2d["n_replicas"]
         else:
-            self.plan = planner.plan_cnn_pipeline(
-                cfg, self.params, n_stages,
-                max_stage_param_bytes=self._budget)
+            self.plan = planner.plan(cfg, self.params, planner.PlanRequest(
+                n_stages=n_stages, max_stage_param_bytes=self._budget,
+                store_dtype=quantize))
         s = self.plan["n_stages"]
         self.mb_size = mb_size
         self.image_size = image_size
@@ -545,7 +548,7 @@ class ServingTier(_TierBase):
             image_size=self.image_size, seed=self.seed,
             placed=self.placed, devices=devs, cfg=self.cfg,
             params=self.params, plan=self.plan, injector=injector,
-            param_buffer=param_buffer)
+            param_buffer=param_buffer, quantize=self.quantize)
         w = ReplicaWorker(idx=idx, server=server,
                           devices=list(devs) if devs else None,
                           last_heartbeat=self._clock())
@@ -717,7 +720,7 @@ class ServingTier(_TierBase):
         """Permanent device loss: retire every replica whose mesh
         touches a lost device (their work drains onto the queue),
         re-plan the reduced pool via
-        :func:`~repro.core.planner.replan_cnn_pipeline_2d`, and respawn
+        :func:`~repro.core.planner.plan` (``prev=`` request), and respawn
         replicas on the surviving devices. When the re-plan keeps the
         previous stage cut (``reused``) the packed ``(S, P)`` param
         buffer of a prior worker is re-placed with
@@ -744,9 +747,10 @@ class ServingTier(_TierBase):
             if w.alive and w.devices:
                 donor = w
                 break
-        replan = planner.replan_cnn_pipeline_2d(
-            self.cfg, self.params, len(self._pool), prev=self.plan,
-            n_microbatches=32, max_stage_param_bytes=self._budget) \
+        replan = planner.plan(self.cfg, self.params, planner.PlanRequest(
+            n_devices=len(self._pool), prev=self.plan,
+            n_microbatches=32, max_stage_param_bytes=self._budget,
+            store_dtype=self.quantize)) \
             if self._pool else None
         if replan is None:
             return {"reused": False, "n_replicas": 0}
@@ -884,6 +888,7 @@ class ProcessServingTier(_TierBase):
                  jitter_seed: int = 0,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
+                 quantize: str = "native",
                  verbose: bool = False):
         # liveness config validates FIRST: a bad threshold set must be
         # a cheap loud ValueError, not a failure after N process spawns
@@ -905,8 +910,19 @@ class ProcessServingTier(_TierBase):
         self.seed = seed
         self.mb_size = mb_size
         self.image_size = image_size
+        self.quantize = quantize
         self.params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
-        self.plan = planner.plan_cnn_pipeline(cfg, self.params, n_stages)
+        if quantize != "native":
+            # quantize ONCE, supervisor-side, and ship the quantized
+            # leaves in the blob: every worker maps the same codes +
+            # scales, so the replayed stream stays bitwise across
+            # processes (requantizing per-worker would also be bitwise
+            # — quantization is deterministic — but sharing the stored
+            # form is the point: N processes page-cache ONE int8 model)
+            from repro.core.quant import quantize_tree
+            self.params = quantize_tree(self.params, quantize)
+        self.plan = planner.plan(cfg, self.params, planner.PlanRequest(
+            n_stages=n_stages, store_dtype=quantize))
         self.max_respawns = max_respawns
         self.max_worker_queue = max_worker_queue
         self.spawn_timeout_s = spawn_timeout_s
@@ -954,6 +970,7 @@ class ProcessServingTier(_TierBase):
                "--image-size", str(self.image_size),
                "--seed", str(self.seed),
                "--param-blob", self._blob,
+               "--quantize", self.quantize,
                "--heartbeat-interval", str(self.detector.interval_s),
                "--io-deadline", str(self.io_deadline_s)]
         hook = self.worker_hooks.get(w.idx) \

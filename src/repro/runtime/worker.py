@@ -147,18 +147,30 @@ def build_server(args):
     import jax
     from repro.configs import get_config
     from repro.core import planner
+    from repro.core.quant import quantize_tree
     from repro.launch.serve import CNNPipelineServer
     from repro.models import cnn
     cfg = get_config(args.arch)
+    quantize = getattr(args, "quantize", "native")
     if args.param_blob:
+        # the template must match the blob's tree EXACTLY: a quantized
+        # supervisor wrote quantized leaves (codes + scales), so the
+        # worker quantizes its init tree the same way before mapping —
+        # quantize_tree is deterministic, so the structures agree
         template = cnn.init_cnn(cfg, jax.random.PRNGKey(args.seed))
+        if quantize != "native":
+            template = quantize_tree(template, quantize)
         params = read_param_blob(template, args.param_blob)
     else:
         params = cnn.init_cnn(cfg, jax.random.PRNGKey(args.seed))
-    plan = planner.plan_cnn_pipeline(cfg, params, args.stages)
+        if quantize != "native":
+            params = quantize_tree(params, quantize)
+    plan = planner.plan(cfg, params, planner.PlanRequest(
+        n_stages=args.stages, store_dtype=quantize))
     return CNNPipelineServer(
         args.arch, mb_size=args.mb_size, image_size=args.image_size,
-        seed=args.seed, placed=False, cfg=cfg, params=params, plan=plan)
+        seed=args.seed, placed=False, cfg=cfg, params=params, plan=plan,
+        quantize=quantize)
 
 
 def warmup(server):
@@ -223,6 +235,10 @@ def main(argv=None) -> int:
     ap.add_argument("--image-size", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--param-blob", default=None)
+    ap.add_argument("--quantize", default="native",
+                    help="stored weight dtype (core/quant.py): must "
+                         "match the supervisor's, so the mapped blob's "
+                         "tree structure agrees with the template")
     ap.add_argument("--heartbeat-interval", type=float, default=0.1)
     ap.add_argument("--io-deadline", type=float, default=30.0)
     ap.add_argument("--kill-at-tick", type=int, default=None,

@@ -63,7 +63,8 @@ def check(arch: str, sparse: bool, *, n_stages=4, img=32, batch=4, m=2):
     cfg = _cfg(arch, sparse)
     key = jax.random.PRNGKey(0)
     params = cnn.init_cnn(cfg, key)
-    plan = planner.plan_cnn_pipeline(cfg, params, n_stages)
+    plan = planner.plan(cfg, params,
+                        planner.PlanRequest(n_stages=n_stages))
     s = plan["n_stages"]
     assert s == n_stages, (s, n_stages)
     imgs = jax.random.normal(jax.random.PRNGKey(1), (batch, img, img, 3))
@@ -93,8 +94,8 @@ def check_placed(arch: str, sparse: bool, *, n_stages=8, img=32, batch=4,
     params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
     total = pytree_param_bytes(params)
     budget = int(budget_frac * total) if budget_frac else None
-    plan = planner.plan_cnn_pipeline(cfg, params, n_stages,
-                                     max_stage_param_bytes=budget)
+    plan = planner.plan(cfg, params, planner.PlanRequest(
+        n_stages=n_stages, max_stage_param_bytes=budget))
     s = plan["n_stages"]
     assert s == n_stages, (s, n_stages)
     g = fused_graph_for(cfg.name)
@@ -169,7 +170,8 @@ def check_stage_data(arch: str, sparse: bool, *, n_stages=4, n_replicas=2,
     from repro.launch.shardings import placed_stage_setup
     cfg = _cfg(arch, sparse)
     params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
-    plan = planner.plan_cnn_pipeline(cfg, params, n_stages)
+    plan = planner.plan(cfg, params,
+                        planner.PlanRequest(n_stages=n_stages))
     s = plan["n_stages"]
     assert s == n_stages, (s, n_stages)
     r = n_replicas

@@ -1,0 +1,227 @@
+"""The unified serving/planner API surface (the api_redesign tentpole):
+
+- ``serve(ServeConfig)`` is THE serving entry point; ``plan(cfg,
+  params, PlanRequest)`` is THE planning entry point; every pre-unification
+  callable (``serve_cnn*``, ``plan_cnn_pipeline*``, ``serve(str)``)
+  survives as a DeprecationWarning shim with unchanged behavior.
+- Config validation fails FAST (bad mode / store dtype / incompatible
+  knob combinations raise at construction, before any compile).
+- ``kernels.config()`` scopes the dispatch knobs and restores them on
+  exit, exceptions included.
+
+CI runs a dedicated ``-W error::DeprecationWarning`` leg over the
+suite: every internal caller must be on the new API, and the shim
+calls below are the ONLY sanctioned uses — each wrapped in
+``pytest.warns`` (which swallows the warning before -W sees it).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import planner
+from repro.launch.serve import (ServeConfig, serve, serve_cnn,
+                                serve_cnn_continuous, serve_cnn_tier)
+from repro.models import cnn
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mobilenet_v1"))
+    return cfg, cnn.init_cnn(cfg, KEY)
+
+
+# --- config validation: fail before any compile ------------------------------
+
+def test_serve_config_validates_mode():
+    with pytest.raises(ValueError, match="mode="):
+        ServeConfig("mobilenet_v1", mode="turbo")
+
+
+def test_serve_config_validates_quantize():
+    with pytest.raises(ValueError, match="quantize="):
+        ServeConfig("mobilenet_v1", quantize="fp4")
+
+
+def test_serve_config_latency_rejects_throughput_knobs():
+    for kw in ({"continuous": True}, {"tier": True}, {"procs": 2}):
+        with pytest.raises(ValueError, match="latency"):
+            ServeConfig("mobilenet_v1", mode="latency", **kw)
+
+
+def test_serve_config_is_frozen():
+    cfg = ServeConfig("mobilenet_v1")
+    with pytest.raises(Exception):
+        cfg.batch = 99
+
+
+def test_serve_rejects_extra_kwargs_with_config():
+    with pytest.raises(TypeError, match="no extra kwargs"):
+        serve(ServeConfig("mobilenet_v1"), batch=4)
+
+
+def test_plan_request_validates():
+    with pytest.raises(ValueError, match="exactly one"):
+        planner.PlanRequest()
+    with pytest.raises(ValueError, match="exactly one"):
+        planner.PlanRequest(n_stages=2, n_devices=4)
+    with pytest.raises(ValueError, match="store_dtype"):
+        planner.PlanRequest(n_stages=2, store_dtype="fp8")
+
+
+# --- planner dispatch --------------------------------------------------------
+
+def test_plan_dispatches_1d_2d_replan(setup):
+    cfg, params = setup
+    p1 = planner.plan(cfg, params, planner.PlanRequest(n_stages=3))
+    assert p1["n_stages"] == 3
+    assert p1.n_stages == 3                   # attribute access too
+    p2 = planner.plan(cfg, params, planner.PlanRequest(n_devices=4))
+    assert p2["n_stages"] * p2["n_replicas"] == 4
+    pr = planner.plan(cfg, params,
+                      planner.PlanRequest(n_devices=4, prev=p2["plan"]))
+    assert pr["reused"] and pr["plan"] is p2["plan"]
+
+
+def test_pipeline_plan_attribute_access_raises_cleanly(setup):
+    cfg, params = setup
+    p = planner.plan(cfg, params, planner.PlanRequest(n_stages=2))
+    with pytest.raises(AttributeError):
+        p.not_a_plan_key
+    assert isinstance(p, dict)                # old consumers unchanged
+
+
+def test_plan_shims_warn_and_match_new_api(setup):
+    """The three deprecated planner entry points warn AND return the
+    same plan the unified call produces."""
+    cfg, params = setup
+    new = planner.plan(cfg, params, planner.PlanRequest(n_stages=3))
+    with pytest.warns(DeprecationWarning, match="plan_cnn_pipeline is"):
+        old = planner.plan_cnn_pipeline(cfg, params, 3)
+    assert list(old["stage_of"]) == list(new["stage_of"])
+    np.testing.assert_array_equal(old["node_cycles"], new["node_cycles"])
+    new2 = planner.plan(cfg, params, planner.PlanRequest(
+        n_devices=4, n_microbatches=8))
+    with pytest.warns(DeprecationWarning, match="plan_cnn_pipeline_2d"):
+        old2 = planner.plan_cnn_pipeline_2d(cfg, params, 4,
+                                            n_microbatches=8)
+    assert (old2["n_stages"], old2["n_replicas"]) == \
+        (new2["n_stages"], new2["n_replicas"])
+    with pytest.warns(DeprecationWarning, match="replan_cnn_pipeline_2d"):
+        oldr = planner.replan_cnn_pipeline_2d(cfg, params, 4,
+                                              prev=new2["plan"])
+    assert oldr["reused"]
+
+
+# --- serve dispatch ----------------------------------------------------------
+
+def test_serve_str_shim_warns_and_forwards():
+    """The pre-ServeConfig positional-string signature warns, then
+    forwards to serve_lm — an unknown arch still raises from the
+    config registry, proving the forward happened."""
+    with pytest.warns(DeprecationWarning, match="serve\\(arch"):
+        with pytest.raises(KeyError):
+            serve("no-such-arch-anywhere")
+
+
+def test_serve_cnn_shims_warn():
+    """Each deprecated CNN entry point warns BEFORE doing any work: an
+    unknown arch makes the forwarded body raise immediately, so the
+    warning is all we pay for."""
+    for shim, name in ((serve_cnn, "serve_cnn"),
+                       (serve_cnn_continuous, "serve_cnn_continuous"),
+                       (serve_cnn_tier, "serve_cnn_tier")):
+        with pytest.warns(DeprecationWarning, match=f"{name}\\(\\)"):
+            with pytest.raises(KeyError):
+                shim("no-such-arch-anywhere")
+
+
+def test_serve_config_roundtrips_continuous_executor():
+    """serve(ServeConfig(continuous=True)) is the old
+    serve_cnn_continuous: same executor, same result keys, and the
+    shim's output matches the new API's bitwise (same seed)."""
+    kw = dict(n_requests=2, batch=4, mb_size=2, n_stages=2,
+              image_size=32, verbose=False)
+    m = serve(ServeConfig("mobilenet_v1", continuous=True, **kw))
+    with pytest.warns(DeprecationWarning):
+        old = serve_cnn_continuous("mobilenet_v1", **kw)
+    for a, b in zip(m["logits"], old["logits"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert m["n_stages"] == old["n_stages"]
+
+
+def test_serve_latency_mode_single_image():
+    """Latency mode: batch-1 request loop, measured p50/p99, logits
+    from the SAME stage programs the throughput path uses."""
+    m = serve(ServeConfig("mobilenet_v1", mode="latency", n_requests=3,
+                          n_stages=2, image_size=32, verbose=False))
+    assert m["mode"] == "latency"
+    assert m["logits"].shape[0] == 3
+    assert bool(jnp.isfinite(jnp.asarray(m["logits"])).all())
+    assert 0 < m["latency_p50_s"] <= m["latency_p99_s"]
+    assert len(m["request_latencies_s"]) == 3
+    # each request really ran alone: per-request latencies are measured
+    # AFTER the warmup compile, so none of them should contain it
+    assert max(m["request_latencies_s"]) < m["compile_s"] + 1.0
+
+
+def test_serve_latency_matches_sequential_interpreter():
+    """Batch-1 latency-mode logits track the sequential interpreter on
+    the same params to float rounding (the whole chain lives in ONE
+    jit, so XLA may fuse/reassociate differently than the per-node
+    graph executor — same math, not necessarily same bits)."""
+    m = serve(ServeConfig("mobilenet_v1", mode="latency", n_requests=2,
+                          n_stages=2, image_size=32, seed=0,
+                          verbose=False))
+    cfg = get_config("mobilenet_v1")
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+    fwd = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))
+    imgs = np.asarray(m["request_images"])
+    for i in range(2):
+        ref = np.asarray(fwd(params, jnp.asarray(imgs[i][None])))
+        got = np.asarray(m["logits"])[i:i + 1]
+        tol = 1e-4 * max(float(np.abs(ref).max()), 1e-6)
+        assert np.abs(got - ref).max() <= tol
+        np.testing.assert_array_equal(got.argmax(-1), ref.argmax(-1))
+
+
+# --- kernels.config ----------------------------------------------------------
+
+def test_kernels_config_scopes_and_restores():
+    from repro.kernels import ops as kops
+    prev_impl, prev_fast = kops._IMPL, kops._INT8_FAST
+    with kops.config(impl="pallas", int8_fast_path=False):
+        assert kops._IMPL == "pallas" and kops._INT8_FAST is False
+        with kops.config(impl="xla"):
+            assert kops._IMPL == "xla"        # nesting
+            assert kops._INT8_FAST is False   # untouched knob survives
+        assert kops._IMPL == "pallas"
+    assert (kops._IMPL, kops._INT8_FAST) == (prev_impl, prev_fast)
+    with pytest.raises(RuntimeError):
+        with kops.config(impl="pallas"):
+            raise RuntimeError("boom")
+    assert kops._IMPL == prev_impl            # restored on exception
+
+
+def test_kernels_config_exported_at_package_level():
+    import repro.kernels as kernels
+    assert kernels.config is not None
+    with kernels.config(impl="xla"):
+        pass
+
+
+def test_no_deprecation_warnings_from_new_api(setup):
+    """The unified entry points themselves must be shim-free: a CI leg
+    runs with -W error::DeprecationWarning over the whole suite."""
+    cfg, params = setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        planner.plan(cfg, params, planner.PlanRequest(n_stages=2))
+        serve(ServeConfig("mobilenet_v1", mode="latency", n_requests=1,
+                          n_stages=2, image_size=32, verbose=False))

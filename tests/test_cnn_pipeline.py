@@ -45,7 +45,7 @@ def test_plan_cnn_pipeline_cost_balanced(arch):
     from repro.core.fusion import fused_graph_for
     cfg = _cfg(arch, sparse=(arch == "resnet50"))
     params = cnn.init_cnn(cfg, KEY)
-    plan = planner.plan_cnn_pipeline(cfg, params, 4)
+    plan = planner.plan(cfg, params, planner.PlanRequest(n_stages=4))
     assert plan["n_stages"] == 4
     costs = plan["node_cycles"]
     # the planner prices the FUSED graph: one cost per super-node, so a
@@ -132,7 +132,7 @@ def test_microbatch_replication_contract():
 def test_gspmd_pipeline_matches_sequential(arch, sparse):
     cfg = _cfg(arch, sparse)
     params = cnn.init_cnn(cfg, KEY)
-    plan = planner.plan_cnn_pipeline(cfg, params, 3)
+    plan = planner.plan(cfg, params, planner.PlanRequest(n_stages=3))
     s = plan["n_stages"]
     imgs = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
     x_mb = pp.microbatch(imgs, 2)
@@ -205,7 +205,7 @@ def test_placed_pipeline_inprocess_multidev():
     from repro.launch.shardings import placed_stage_setup
     cfg = _cfg("mobilenet_v1", sparse=False)
     params = cnn.init_cnn(cfg, KEY)
-    plan = planner.plan_cnn_pipeline(cfg, params, 4)
+    plan = planner.plan(cfg, params, planner.PlanRequest(n_stages=4))
     s = plan["n_stages"]
     imgs = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
     x_mb = pp.microbatch(imgs, 2)
@@ -343,12 +343,13 @@ def test_pipeline_throughput_rel_tradeoff():
 
 @pytest.mark.parametrize("arch", ["resnet50", "mobilenet_v1"])
 def test_plan_cnn_pipeline_2d(arch):
-    """plan_cnn_pipeline_2d enumerates the divisor splits of the device
+    """The n_devices co-plan enumerates the divisor splits of the device
     count and returns the throughput argmax (with the per-stage plan
     for the winning depth)."""
     cfg = _cfg(arch, sparse=(arch == "resnet50"))
     params = cnn.init_cnn(cfg, KEY)
-    pl = planner.plan_cnn_pipeline_2d(cfg, params, 8, n_microbatches=8)
+    pl = planner.plan(cfg, params,
+                      planner.PlanRequest(n_devices=8, n_microbatches=8))
     assert pl["n_stages"] * pl["n_replicas"] == 8
     assert pl["n_devices_used"] == 8
     splits = {(c["n_stages"], c["n_replicas"]) for c in pl["candidates"]}
@@ -374,7 +375,8 @@ def test_plan_cnn_pipeline_2d_clamped_depth_reports_idle_devices():
     cfg = _cfg("mobilenet_v1", sparse=False)
     params = cnn.init_cnn(cfg, KEY)
     n_nodes = len(fused_graph_for("mobilenet_v1").nodes)
-    pl = planner.plan_cnn_pipeline_2d(cfg, params, 2 * n_nodes + 2)
+    pl = planner.plan(cfg, params,
+                      planner.PlanRequest(n_devices=2 * n_nodes + 2))
     for c in pl["candidates"]:
         assert c["n_stages"] <= n_nodes
         assert c["n_devices_used"] == c["n_stages"] * c["n_replicas"]
@@ -389,15 +391,15 @@ def test_plan_cnn_pipeline_2d_budget_skips_infeasible():
     cfg = _cfg("resnet50", sparse=True)
     params = cnn.init_cnn(cfg, KEY)
     total = pytree_param_bytes(params)
-    pl = planner.plan_cnn_pipeline_2d(cfg, params, 8,
-                                      max_stage_param_bytes=total // 4)
+    pl = planner.plan(cfg, params, planner.PlanRequest(
+        n_devices=8, max_stage_param_bytes=total // 4))
     # S=1 (whole model on one stage) cannot fit 1/4 of the model
     assert all(c["n_stages"] > 1 for c in pl["candidates"])
     assert all(c["placed_bytes_per_device"] <= total // 4
                for c in pl["candidates"])
     with pytest.raises(ValueError, match="no .stages, replicas. split"):
-        planner.plan_cnn_pipeline_2d(cfg, params, 2,
-                                     max_stage_param_bytes=1)
+        planner.plan(cfg, params, planner.PlanRequest(
+            n_devices=2, max_stage_param_bytes=1))
 
 
 def test_gspmd_placement_requires_mesh():
@@ -444,19 +446,19 @@ def test_assign_stages_weight_budget_rebalances():
 
 @pytest.mark.parametrize("arch", CNN_ARCHS)
 def test_plan_cnn_pipeline_memory_aware(arch):
-    """plan_cnn_pipeline prices weight residency and respects a
+    """The planner prices weight residency and respects a
     per-stage byte budget; the plan reports the accounting."""
     from repro.core.costmodel import pytree_param_bytes
     cfg = _cfg(arch, sparse=(arch == "resnet50"))
     params = cnn.init_cnn(cfg, KEY)
     total = pytree_param_bytes(params)
-    plan = planner.plan_cnn_pipeline(cfg, params, 8)
+    plan = planner.plan(cfg, params, planner.PlanRequest(n_stages=8))
     assert int(sum(plan["stage_param_bytes"])) == total
     # tightest feasible-ish budget: a single IR node is the atomic
     # placement unit (the dense MobileNet heads are ~1/3 of the model)
     budget = max(total // 3, int(plan["node_param_bytes"].max()))
-    plan_b = planner.plan_cnn_pipeline(cfg, params, 8,
-                                       max_stage_param_bytes=budget)
+    plan_b = planner.plan(cfg, params, planner.PlanRequest(
+        n_stages=8, max_stage_param_bytes=budget))
     assert plan_b["placed_bytes_per_device"] <= budget
     assert plan_b["param_budget_bytes"] == budget
     assert int(sum(plan_b["stage_param_bytes"])) == total

@@ -124,7 +124,7 @@ def test_planner_never_cuts_inside_a_fusion():
     for arch in CNN_ARCHS:
         cfg = _cfg(arch, sparse=(arch == "resnet50"))
         params = cnn.init_cnn(cfg, KEY)
-        plan = planner.plan_cnn_pipeline(cfg, params, 4)
+        plan = planner.plan(cfg, params, planner.PlanRequest(n_stages=4))
         g = fused_graph_for(arch)
         assert len(plan["stage_of"]) == len(g.nodes)
         # wire contracts resolve on the fused graph (no dangling names)

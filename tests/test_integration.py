@@ -49,9 +49,9 @@ def test_train_with_grad_compression():
 @pytest.mark.parametrize("arch", ["smollm-360m", "rwkv6-1.6b",
                                   "granite-moe-3b-a800m"])
 def test_serve_generates(arch):
-    from repro.launch.serve import serve
-    out = serve(arch, batch=2, prompt_len=6, gen_tokens=4, max_seq=32,
-                verbose=False)
+    from repro.launch.serve import serve_lm
+    out = serve_lm(arch, batch=2, prompt_len=6, gen_tokens=4, max_seq=32,
+                   verbose=False)
     assert out["tokens"].shape == (2, 4)
     assert out["tokens"].dtype.kind in "iu"
 

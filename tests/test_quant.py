@@ -1,0 +1,250 @@
+"""Quantized parameter storage (core/quant.py) + its ride through the
+placement machinery (ParamFormat / placed serving) and the int8 kernel
+fast path.
+
+The contracts, in the order the bits flow:
+
+1. bf16 re-storage of the (natively bf16) weights is BITWISE lossless
+   through ParamFormat.pack/unpack — the tentpole's "lossless" bar.
+2. ``tree_stored_bytes`` (the planner's analytic pricing) equals
+   ``pytree_param_bytes`` of the actually-quantized tree, per store
+   dtype — the invariant that keeps budgeted planning honest.
+3. int8 forward stays within a small tolerance of the f32 oracle and
+   agrees on top-1 for every image, on all three CNNs.
+4. The int8 FAST path (scale factored out of the accumulation, codes
+   fed to the MXU as int8) matches the dequantize-at-entry reference
+   to output-dtype rounding.
+5. Quantized PLACED serving (packed param buffer, per-stage formats)
+   is BITWISE equal to the non-placed quantized run — quantization
+   happens once, before placement, so both paths see the same codes.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import pipeline as pp
+from repro.core import planner
+from repro.core.costmodel import pytree_param_bytes
+from repro.core.quant import (QuantizedWeight, STORE_DTYPES,
+                              dequantize_tree, quantize_tree,
+                              tree_stored_bytes)
+from repro.models import cnn
+from repro.models.layers import SparseWeight
+
+CNN_ARCHS = ["resnet50", "mobilenet_v1", "mobilenet_v2"]
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch, sparse=None):
+    cfg = reduced(get_config(arch))
+    if sparse is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, sparsity=dataclasses.replace(cfg.sparsity, enabled=sparse))
+
+
+def _quant_leaves(tree):
+    kinds = (QuantizedWeight, SparseWeight)
+    return [l for l in jax.tree_util.tree_leaves(
+                tree, is_leaf=lambda x: isinstance(x, kinds))
+            if isinstance(l, kinds)]
+
+
+# --- storage transform -------------------------------------------------------
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_int8_transform_hits_the_weights(arch):
+    params = cnn.init_cnn(_cfg(arch), KEY)
+    q = quantize_tree(params, "int8")
+    quant = _quant_leaves(q)
+    assert any(isinstance(l, QuantizedWeight) for l in quant)
+    for l in quant:
+        if isinstance(l, QuantizedWeight):
+            assert l.codes.dtype == jnp.int8
+            assert l.scale.shape == (l.codes.shape[-1],)
+        elif l.scale is not None:
+            assert l.vals.dtype == jnp.int8
+            ob, _, _, bn = l.vals.shape
+            assert l.scale.shape == (ob, bn)
+    # idempotent: re-quantizing returns the same leaves
+    q2 = quantize_tree(q, "int8")
+    for a, b in zip(jax.tree_util.tree_leaves(q),
+                    jax.tree_util.tree_leaves(q2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_int8_dequant_error_bounded_per_channel():
+    w = jax.random.normal(KEY, (64, 32), jnp.float32) * \
+        jnp.logspace(-3, 1, 32)                  # wildly varying channels
+    q = quantize_tree({"w": w}, "int8")["w"]
+    err = np.abs(np.asarray(q.dequant() - w))
+    # symmetric per-channel: error <= scale/2 per channel
+    assert (err <= 0.5 * np.asarray(q.scale) + 1e-7).all()
+    # an all-zero channel dequants to exactly zero (scale forced to 1)
+    wz = w.at[:, 3].set(0.0)
+    qz = quantize_tree({"w": wz}, "int8")["w"]
+    assert float(np.abs(np.asarray(qz.dequant())[:, 3]).max()) == 0.0
+    assert float(np.asarray(qz.scale)[3]) == 1.0
+
+
+def test_quantize_tree_rejects_unknown_dtype():
+    with pytest.raises(ValueError, match="store_dtype"):
+        quantize_tree({"w": jnp.ones((2, 2))}, "int4")
+    with pytest.raises(ValueError, match="store_dtype"):
+        tree_stored_bytes({"w": jnp.ones((2, 2))}, "fp8")
+
+
+@pytest.mark.parametrize("sd", STORE_DTYPES)
+@pytest.mark.parametrize("sparse", [True, False], ids=["sparse", "dense"])
+def test_stored_bytes_matches_materialized_tree(sd, sparse):
+    """The planner prices residency analytically; the number must be
+    EXACTLY what materializing the quantized tree would occupy."""
+    params = cnn.init_cnn(_cfg("mobilenet_v2", sparse), KEY)
+    assert tree_stored_bytes(params, sd) == \
+        pytree_param_bytes(quantize_tree(params, sd))
+    # and pytree_param_bytes' own store_dtype arg agrees
+    assert pytree_param_bytes(params, sd) == tree_stored_bytes(params, sd)
+
+
+def test_int8_cuts_bytes_4x_vs_f32():
+    params = cnn.init_cnn(_cfg("resnet50", True), KEY)
+    f32 = tree_stored_bytes(params, "f32")
+    i8 = tree_stored_bytes(params, "int8")
+    assert i8 * 2 < f32, (i8, f32)     # the >= 2x acceptance bar
+    assert i8 * 3 < f32, (i8, f32)     # actually ~4x minus idx/scales
+
+
+# --- ParamFormat roundtrip ---------------------------------------------------
+
+@pytest.mark.parametrize("sd", ["bf16", "int8"])
+def test_param_format_roundtrip_bitwise(sd):
+    """pack -> unpack restores the STORED bits exactly. For bf16 (the
+    native weight dtype) that means the roundtrip is lossless against
+    the original tree, not just the re-stored one."""
+    params = cnn.init_cnn(_cfg("mobilenet_v1"), KEY)
+    stored = quantize_tree(params, sd)
+    fmt = pp.ParamFormat.for_tree(params, store_dtype=sd)
+    buf = fmt.pack(params, fmt.nbytes)           # pack normalizes itself
+    got = fmt.unpack(buf)
+    ref_l = jax.tree_util.tree_leaves(stored)
+    got_l = jax.tree_util.tree_leaves(got)
+    assert len(ref_l) == len(got_l)
+    for a, b in zip(ref_l, got_l):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bf16_restorage_is_identity_on_native_weights():
+    """Native weights are already bf16, so "bf16" storage must be a
+    bitwise no-op on every float leaf."""
+    params = cnn.init_cnn(_cfg("mobilenet_v1"), KEY)
+    stored = quantize_tree(params, "bf16")
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(stored)):
+        if jnp.issubdtype(a.dtype, jnp.floating) and a.dtype == b.dtype:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- numerics: int8 vs the f32 oracle ---------------------------------------
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_int8_forward_tracks_f32_oracle(arch):
+    """Dequantized int8 forward vs the full-precision forward: small
+    relative error, and top-1 agreement on EVERY image — the paper's
+    "negligible accuracy loss from narrow weights" claim, testable
+    without a dataset."""
+    cfg = _cfg(arch, sparse=(arch == "resnet50"))
+    params = cnn.init_cnn(cfg, KEY)
+    qparams = quantize_tree(params, "int8")
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    ref = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))(params, imgs)
+    got = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))(qparams, imgs)
+    assert got.shape == ref.shape and bool(jnp.isfinite(got).all())
+    scale = float(jnp.abs(ref).max())
+    err = float(jnp.abs(got - ref).max())
+    assert err <= 0.05 * scale + 1e-4, (err, scale)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
+                                  np.asarray(jnp.argmax(ref, -1)))
+
+
+@pytest.mark.parametrize("arch", ["mobilenet_v1", "resnet50"])
+def test_int8_fast_path_matches_dequant_reference(arch):
+    """_INT8_FAST (int8 codes into the MXU, scale at the epilogue) vs
+    the dequantize-at-entry reference: same math reassociated, so the
+    outputs agree to output-dtype rounding."""
+    from repro.kernels import ops as kops
+    cfg = _cfg(arch, sparse=(arch == "resnet50"))
+    params = quantize_tree(cnn.init_cnn(cfg, KEY), "int8")
+    imgs = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 32, 3))
+    fwd = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))
+    with kops.config(int8_fast_path=True):
+        fast = fwd(params, imgs)
+    with kops.config(int8_fast_path=False):
+        ref = fwd(params, imgs)
+    scale = float(jnp.abs(ref).max())
+    assert float(jnp.abs(fast - ref).max()) <= 0.02 * scale + 1e-4
+
+
+def test_dequantize_tree_inverts_int8_structure():
+    params = cnn.init_cnn(_cfg("resnet50", True), KEY)
+    q = quantize_tree(params, "int8")
+    dq = dequantize_tree(q)
+    ref_l = jax.tree_util.tree_leaves(params)
+    dq_l = jax.tree_util.tree_leaves(dq)
+    assert len(ref_l) == len(dq_l)
+    for a, b in zip(ref_l, dq_l):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+# --- quantized placed serving ------------------------------------------------
+
+def test_quantized_placed_serving_matches_sequential():
+    """int8 PLACED serving (packed per-stage param rows carrying codes
+    + scales through the uint8 bitcast layout) == the sequential graph
+    interpreter on the same quantized tree, BITWISE: quantization
+    happens once, before placement, and the pack/unpack roundtrip is
+    lossless on the stored bits."""
+    from repro.launch.serve import CNNPipelineServer
+    arch, img = "mobilenet_v1", 32
+    imgs = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(3), (2, img, img, 3)), np.float32)
+    srv = CNNPipelineServer(arch, mb_size=2, n_stages=3, image_size=img,
+                            seed=0, quantize="int8")
+    req = srv.submit(imgs)
+    srv.run()
+    cfg = get_config(arch)
+    qparams = quantize_tree(cnn.init_cnn(cfg, jax.random.PRNGKey(0)),
+                            "int8")
+    ref = jax.jit(lambda p, x: cnn.cnn_forward(cfg, p, x))(
+        qparams, jnp.asarray(imgs))
+    np.testing.assert_array_equal(srv.results(req), np.asarray(ref))
+
+
+def test_planner_prices_store_dtype():
+    """PlanRequest.store_dtype changes the BYTES accounting (and budget
+    feasibility), never the unbudgeted cut."""
+    cfg = _cfg("resnet50", True)
+    params = cnn.init_cnn(cfg, KEY)
+    pf = planner.plan(cfg, params,
+                      planner.PlanRequest(n_stages=3, store_dtype="f32"))
+    pi = planner.plan(cfg, params,
+                      planner.PlanRequest(n_stages=3, store_dtype="int8"))
+    assert list(pf["stage_of"]) == list(pi["stage_of"])
+    assert sum(pi["stage_param_bytes"]) == tree_stored_bytes(params, "int8")
+    assert sum(pf["stage_param_bytes"]) == tree_stored_bytes(params, "f32")
+    # a budget only int8 can meet: the unbudgeted int8 cut's own max
+    # stage bytes (int8-feasible by construction); f32 is infeasible
+    # whenever its fattest single node alone busts that budget
+    budget = int(max(pi["stage_param_bytes"]))
+    planner.plan(cfg, params, planner.PlanRequest(
+        n_stages=3, max_stage_param_bytes=budget, store_dtype="int8"))
+    if budget < int(max(pf["node_param_bytes"])):
+        with pytest.raises(ValueError):
+            planner.plan(cfg, params, planner.PlanRequest(
+                n_stages=3, max_stage_param_bytes=budget,
+                store_dtype="f32"))

@@ -13,7 +13,7 @@ import pytest
 import jax
 
 from repro.core import pipeline as pp
-from repro.launch.serve import CNNPipelineServer, serve_cnn_continuous
+from repro.launch.serve import CNNPipelineServer, ServeConfig, serve
 
 ARCH = "mobilenet_v1"          # dense (paper Table IV), cheapest compile
 IMG = 32
@@ -67,8 +67,9 @@ def test_steady_bubble_beats_single_batch_fill():
     """K back-to-back requests leave (S-1)/(K*M + S-1) of the slots
     empty — strictly less than one batch's fill bubble (S-1)/(M+S-1) —
     and the server's tick accounting reports exactly that."""
-    m = serve_cnn_continuous(ARCH, n_requests=3, batch=4, mb_size=2,
-                             n_stages=3, image_size=IMG, verbose=False)
+    m = serve(ServeConfig(ARCH, continuous=True, n_requests=3, batch=4,
+                          mb_size=2, n_stages=3, image_size=IMG,
+                          verbose=False))
     k, mm, s = 3, 2, m["n_stages"]
     assert m["ticks"] == k * mm + s - 1
     assert m["injected_microbatches"] == k * mm

@@ -11,7 +11,7 @@ The headline contracts:
   exhaustion surface as typed TierError subclasses on results(), never
   as silently dropped or corrupted requests;
 - permanent device loss re-plans the reduced pool
-  (planner.replan_cnn_pipeline_2d) and re-places the packed param
+  (planner.plan with prev=) and re-places the packed param
   buffer via fault.remesh — the 8->4 degrade test runs under
   XLA_FLAGS=--xla_force_host_platform_device_count=8 (CI's
   fault-injection leg).
@@ -191,12 +191,14 @@ def test_killed_replica_respawns_and_serves_again(ref_tier):
 def test_replan_reuses_feasible_cut():
     cfg = get_config(ARCH)
     params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
-    prev = planner.plan_cnn_pipeline(cfg, params, 4)
-    out = planner.replan_cnn_pipeline_2d(cfg, params, 4, prev=prev)
+    prev = planner.plan(cfg, params, planner.PlanRequest(n_stages=4))
+    out = planner.plan(cfg, params,
+                       planner.PlanRequest(n_devices=4, prev=prev))
     assert out["reused"] and out["plan"] is prev
     assert (out["n_stages"], out["n_replicas"]) == (4, 1)
     # indivisible pool: falls back to the full co-planner
-    out3 = planner.replan_cnn_pipeline_2d(cfg, params, 3, prev=prev)
+    out3 = planner.plan(cfg, params,
+                        planner.PlanRequest(n_devices=3, prev=prev))
     assert not out3["reused"]
     assert out3["n_stages"] * out3["n_replicas"] <= 3
 
@@ -218,7 +220,7 @@ def placed_ref_tier():
 def test_placed_tier_device_loss_degrades_and_finishes(placed_ref_tier):
     """The 8->4 acceptance bar: a placed 2x4 tier loses 4 devices
     mid-stream (killing BOTH workers), re-plans via
-    replan_cnn_pipeline_2d (cut reused), respawns one worker on the
+    planner.plan with prev= (cut reused), respawns one worker on the
     surviving slice with a fault.remesh-re-placed param buffer, and
     finishes the stream — logits bitwise equal to the no-failure run
     (stage cuts never change numerics)."""

@@ -75,11 +75,12 @@ def test_cold_cache_is_bit_for_bit_analytic(setup):
     assert any("cold-cache" in str(x.message) for x in w)
     np.testing.assert_array_equal(measured, analytic)
     assert report["coverage"] == 0.0 and report["units"] == "cycles"
-    pa = planner.plan_cnn_pipeline(cfg, params, 4)
+    pa = planner.plan(cfg, params, planner.PlanRequest(n_stages=4))
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")
-        pm = planner.plan_cnn_pipeline(cfg, params, 4, model="measured",
-                                       tuning_cache=tuning.TuningCache())
+        pm = planner.plan(cfg, params, planner.PlanRequest(
+            n_stages=4, model="measured",
+            tuning_cache=tuning.TuningCache()))
     assert pm["stage_of"] == pa["stage_of"]
     np.testing.assert_array_equal(pm["node_cycles"], pa["node_cycles"])
 
@@ -92,15 +93,15 @@ def test_seeded_analytic_cache_plans_identically(setup):
     cfg, params = setup
     cache = tuning.seed_from_analytic(cfg, params, (1, 64, 64, 3))
     assert len(cache) > 0 and cache.meta["seeded"] == "analytic"
-    pa = planner.plan_cnn_pipeline(cfg, params, 4)
-    pm = planner.plan_cnn_pipeline(cfg, params, 4, model="measured",
-                                   tuning_cache=cache)
+    pa = planner.plan(cfg, params, planner.PlanRequest(n_stages=4))
+    pm = planner.plan(cfg, params, planner.PlanRequest(
+        n_stages=4, model="measured", tuning_cache=cache))
     assert pm["stage_of"] == pa["stage_of"]
     assert pm["measured_coverage"]["coverage"] == 1.0
     assert pm["measured_coverage"]["fallback"] == []
     # and twice through the measured path -> identical plan
-    pm2 = planner.plan_cnn_pipeline(cfg, params, 4, model="measured",
-                                    tuning_cache=cache)
+    pm2 = planner.plan(cfg, params, planner.PlanRequest(
+        n_stages=4, model="measured", tuning_cache=cache))
     assert pm2["stage_of"] == pm["stage_of"]
     np.testing.assert_array_equal(pm2["node_cycles"], pm["node_cycles"])
 
@@ -293,9 +294,9 @@ def test_checked_in_cache_beats_analytic_imbalance(setup):
     cache = tuning.TuningCache.load(tuning.DEFAULT_CACHE)
     if not len(cache):
         pytest.skip("no checked-in cache")
-    pa = planner.plan_cnn_pipeline(cfg, params, 4)
+    pa = planner.plan(cfg, params, planner.PlanRequest(n_stages=4))
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")
-        pm = planner.plan_cnn_pipeline(cfg, params, 4, model="measured",
-                                       tuning_cache=cache)
+        pm = planner.plan(cfg, params, planner.PlanRequest(
+            n_stages=4, model="measured", tuning_cache=cache))
     assert pm["imbalance"] < pa["imbalance"] < 1.41
