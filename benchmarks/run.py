@@ -86,6 +86,14 @@ GATE = {
     # unGated: SIGKILL is usually detected via waitpid/EOF before any
     # heartbeat is missed, so its baseline is legitimately 0.
     "serving_recovery_s": ("lower", 1.00),
+    # cross-host recovery: same wall-clock shape as the cross-process
+    # number plus TCP re-dial + handshake + blob-cache resume —
+    # direction-only, very loose
+    "serving_recovery_net_s": ("lower", 1.00),
+    # blob-by-hash transfer rate over loopback TCP: dominated by the
+    # runner's memcpy/CRC bandwidth — noisy on shared runners, loose
+    # higher-is-better (a 2x collapse still fails)
+    "param_transfer_mb_s": ("higher", 0.50),
 }
 
 
@@ -143,6 +151,10 @@ def _headline(modules: dict) -> dict:
         out["serving_recovery_s"] = srv["serving_recovery_s"]
         out["serving_recovery_missed_heartbeats"] = \
             srv.get("serving_recovery_missed_heartbeats")
+    if "serving_recovery_net_s" in srv:
+        out["serving_recovery_net_s"] = srv["serving_recovery_net_s"]
+    if "param_transfer_mb_s" in srv:
+        out["param_transfer_mb_s"] = srv["param_transfer_mb_s"]
     return out
 
 

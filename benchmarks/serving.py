@@ -42,13 +42,21 @@ to SIGKILL its own pid mid-tick and reports:
   tier run with no kill — the tentpole invariant, enforced in the
   benchmark too, not just the test suite.
 
-Runs sparse ResNet-50 (the paper's headline net) on whatever devices
-the host has; single-device smoke uses the ragged packed-params path.
-The recovery section uses the small dense mobilenet cell (worker
-processes each recompile it; keeping the cell small keeps the
-benchmark honest about RECOVERY time rather than compile time).
+The CROSS-HOST recovery section repeats the kill on the TCP tier
+(``HostServingTier`` behind a ``NetFaultProxy``): every proxied
+connection is hard-closed mid-stream, the respawned workers re-dial
+through the proxy and resume the param blob from their slot caches,
+and the stream is asserted bitwise against a no-failure TCP run.
+``serving_recovery_net_s`` is the detection-to-first-recovered-emit
+gap (loose, lower-is-better gate — respawn + recompile + re-handshake
+dominate). ``param_transfer_mb_s`` measures the blob-by-hash transfer
+rate over a real localhost TCP channel (chunked, CRC-framed,
+SHA-256-verified end to end) — loose, higher-is-better gate.
 """
+import hashlib
 import json
+import threading
+import time
 
 import numpy as np
 
@@ -91,6 +99,110 @@ def recovery(smoke: bool = False) -> dict:
         "recovery_respawns": m["respawns"],
         "recovery_recovered_microbatches": m["recovered_microbatches"],
         "recovery_worker_exits": m["worker_exits"],
+    }
+
+
+def _free_port() -> int:
+    import socket
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def recovery_net(smoke: bool = False) -> dict:
+    """Connection-kill-to-recovered-emit headline on the cross-host
+    tier: every proxied TCP link hard-closed mid-stream, workers
+    re-dial through the same proxy and resume the blob from their slot
+    caches. Bitwise vs the no-failure TCP run, or the number lies."""
+    from repro.runtime.fault import NetFaultProxy
+    from repro.runtime.tier import HostServingTier
+    n_req = 3 if smoke else 6
+    batch = 4 if smoke else 8
+    kw = dict(n_procs=2, n_stages=2, mb_size=2, image_size=RECOVERY_IMG)
+    with HostServingTier(RECOVERY_ARCH, **kw) as ref:
+        ref_out, _ = _recovery_stream(ref, n_req, batch)
+    port = _free_port()
+    proxy = NetFaultProxy(("127.0.0.1", port))
+    try:
+        tier = HostServingTier(RECOVERY_ARCH, **kw,
+                               listen=("127.0.0.1", port),
+                               dial_addrs={0: proxy.address,
+                                           1: proxy.address})
+        try:
+            import jax
+            rids = [tier.submit(np.asarray(jax.random.normal(
+                jax.random.PRNGKey(10 + i),
+                (batch, RECOVERY_IMG, RECOVERY_IMG, 3)), np.float32))
+                for i in range(n_req)]
+            m = tier.run(max_rounds=2)    # let the stream start moving
+            proxy.kill_connections()      # every link dies NOW
+            deadline = time.monotonic() + 600
+            while tier._live_rids() and time.monotonic() < deadline:
+                m = tier.run(max_rounds=20)   # cumulative counters ride
+            got = [np.asarray(tier.results(r)) for r in rids]
+        finally:
+            tier.close()
+    finally:
+        proxy.close()
+    for a, b in zip(ref_out, got):
+        np.testing.assert_array_equal(a, b)   # bitwise or the number lies
+    assert m["respawns"] >= 1 and m["recovery_s"] is not None
+    return {
+        "serving_recovery_net_s": m["recovery_s"],
+        "recovery_net_respawns": m["respawns"],
+        "recovery_net_proxy_connections": proxy.connections,
+    }
+
+
+def param_transfer(smoke: bool = False) -> dict:
+    """Blob-by-hash transfer rate over a real localhost TCP channel:
+    chunked, CRC-framed, SHA-256-verified at the receiving end — the
+    exact path a dialing worker pulls its params through."""
+    from repro.runtime import transport
+    from repro.runtime import worker as W
+    import tempfile
+    size = (8 if smoke else 64) << 20
+    chunk = 4 << 20
+    blob = np.random.default_rng(0).bytes(size)
+    sha = hashlib.sha256(blob).hexdigest()
+    ls = transport.Listener()
+
+    def _serve():
+        ch = ls.accept(deadline_s=30.0)
+        try:
+            while True:
+                m = ch.recv(deadline_s=30.0)
+                if not (isinstance(m, tuple) and m[0] == "blob"):
+                    return
+                _tag, _sha, off = m
+                data = blob[off:off + chunk]
+                ch.send(("blobchunk", off, len(blob), data))
+                if off + len(data) >= len(blob):
+                    return
+        except transport.TransportError:
+            return
+        finally:
+            ch.close()
+
+    t = threading.Thread(target=_serve, daemon=True)
+    t.start()
+    with tempfile.TemporaryDirectory() as d:
+        ch = transport.connect(ls.address, deadline_s=30.0)
+        t0 = time.monotonic()
+        path = W.fetch_param_blob(ch, sha, d)
+        elapsed = time.monotonic() - t0
+        ch.close()
+        with open(path, "rb") as f:
+            fetched = f.read()
+    t.join(10.0)
+    ls.close()
+    assert hashlib.sha256(fetched).hexdigest() == sha
+    return {
+        "param_transfer_mb_s": (size / (1 << 20)) / elapsed,
+        "param_transfer_bytes": size,
+        "param_transfer_s": elapsed,
     }
 
 
@@ -160,6 +272,16 @@ def main(smoke: bool = False, out: str = None):
         f"respawns={rec['recovery_respawns']}_recovered_mb="
         f"{rec['recovery_recovered_microbatches']}_missed_hb="
         f"{rec['serving_recovery_missed_heartbeats']}")
+    net = recovery_net(smoke=smoke)
+    results.update(net)
+    row("serving_recovery_net", 1e6 * net["serving_recovery_net_s"],
+        f"respawns={net['recovery_net_respawns']}_proxy_conns="
+        f"{net['recovery_net_proxy_connections']}")
+    xfer = param_transfer(smoke=smoke)
+    results.update(xfer)
+    row("param_transfer", 1e6 * xfer["param_transfer_s"],
+        f"{xfer['param_transfer_mb_s']:.0f}MB_per_s_over_"
+        f"{xfer['param_transfer_bytes'] >> 20}MB")
     print("serving_json," + json.dumps(results))
     if out:
         with open(out, "w") as f:

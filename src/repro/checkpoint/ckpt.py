@@ -57,6 +57,41 @@ def _file_crc(path: str) -> tuple[int, int]:
             n += len(chunk)
 
 
+def file_sha256(path: str) -> str:
+    """Hex SHA-256 of a file, streamed — the content address under
+    which the serving tier distributes its packed param blob. CRC32
+    frames catch bits corrupted in flight; the SHA-256 names WHICH
+    bytes a worker must end up holding, so a stale or torn blob can
+    never be mistaken for the model the supervisor planned."""
+    import hashlib
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                return h.hexdigest()
+            h.update(chunk)
+
+
+def verify_blob(path: str, sha256: str) -> str:
+    """Verify a param blob against its content hash BEFORE it is
+    memory-mapped: a mismatch (torn transfer, stale cache entry, disk
+    rot) raises :class:`CheckpointCorruptError` — the worker must die
+    loudly rather than warm up on wrong weights and serve wrong
+    logits. Returns ``path`` on success for call-site chaining."""
+    try:
+        got = file_sha256(path)
+    except OSError as e:
+        raise CheckpointCorruptError(
+            f"param blob {path} unreadable ({e!r})") from e
+    if got != sha256:
+        raise CheckpointCorruptError(
+            f"param blob {path} SHA-256 {got[:16]}… != expected "
+            f"{sha256[:16]}… — torn or stale content; refusing to map "
+            "it (wrong logits are worse than a dead worker)")
+    return path
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}

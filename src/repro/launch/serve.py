@@ -136,6 +136,8 @@ class ServeConfig:
     tier: bool = False
     replicas: int = 1
     procs: int = 0                      # >0: OS-process replica workers
+    hosts: int = 0                      # >0: TCP dial-in replica workers
+    listen: Optional[str] = None        # hosts mode: "host:port" to bind
     quantize: str = "native"            # core/quant.py store dtype
     batch: int = 16
     n_requests: int = 4
@@ -172,10 +174,16 @@ class ServeConfig:
             raise ValueError(f"quantize={self.quantize!r}: expected one "
                              f"of {STORE_DTYPES}")
         if self.mode == "latency" and (self.continuous or self.tier or
-                                       self.procs):
+                                       self.procs or self.hosts):
             raise ValueError("mode='latency' serves one image at a time "
-                             "— continuous/tier/procs are throughput-"
-                             "mode knobs")
+                             "— continuous/tier/procs/hosts are "
+                             "throughput-mode knobs")
+        if self.procs and self.hosts:
+            raise ValueError("procs and hosts are exclusive: same-host "
+                             "socketpair workers OR TCP dial-in workers")
+        if self.listen is not None and not self.hosts:
+            raise ValueError("listen= names a bind address for hosts "
+                             "mode; set hosts > 0")
 
 
 def serve(cfg, **kw):
@@ -203,13 +211,14 @@ def serve(cfg, **kw):
                         verbose=cfg.verbose)
     if cfg.mode == "latency":
         return _serve_cnn_latency(cfg)
-    if cfg.tier or cfg.procs:
+    if cfg.tier or cfg.procs or cfg.hosts:
         return _serve_cnn_tier(
             cfg.arch, n_requests=cfg.n_requests, batch=cfg.batch,
             mb_size=cfg.mb_size, n_stages=cfg.n_stages,
             n_replicas=cfg.replicas, image_size=cfg.image_size,
             seed=cfg.seed, fail_replica=cfg.fail_replica,
             fail_at_tick=cfg.fail_at_tick, procs=cfg.procs,
+            hosts=cfg.hosts, listen=cfg.listen,
             kill_worker=cfg.kill_worker, kill_at_tick=cfg.kill_at_tick,
             heartbeat_interval_s=cfg.heartbeat_interval_s,
             suspect_after_s=cfg.suspect_after_s,
@@ -683,7 +692,10 @@ class CNNPipelineServer:
         n_mb = -(-b // self.mb_size)
         self._pending[req] = n_mb
         self._results[req] = [None] * n_mb
-        self._req_submit[req] = time.time()
+        # monotonic, not wall time: request latencies are durations,
+        # and an NTP step must never produce negative (or day-long)
+        # p50s — wall clocks are for logs only
+        self._req_submit[req] = time.monotonic()
         for i in range(n_mb):
             chunk = images[i * self.mb_size:(i + 1) * self.mb_size]
             n_valid = chunk.shape[0]
@@ -765,7 +777,7 @@ class CNNPipelineServer:
             self._results[req][i] = logits
             self._pending[req] -= 1
             if self._pending[req] == 0:
-                self._req_done[req] = time.time()
+                self._req_done[req] = time.monotonic()
 
     def _tick_once(self) -> bool:
         """One pipeline tick, instance-state edition: the serving tier
@@ -811,7 +823,7 @@ class CNNPipelineServer:
         """Drain the queue: one pipeline tick per queued microbatch
         (continuous injection — no drain between requests) plus S-1
         flush ticks. Returns throughput/bubble metrics for the run."""
-        t0 = time.time()
+        t0 = time.monotonic()
         n_imgs = sum(s[2] for s in self._queue)
         ticks_before = self.ticks
         injected_before = self.injected_slots
@@ -825,7 +837,7 @@ class CNNPipelineServer:
             if self._emitted is not None:
                 self._collect(*self._emitted)
                 self._emitted = None
-        elapsed = time.time() - t0
+        elapsed = time.monotonic() - t0
         ticks = self.ticks - ticks_before
         injected = self.injected_slots - injected_before
         # measured SCHEDULE bubble: the fraction of pipeline slots this
@@ -994,7 +1006,8 @@ def _serve_cnn_tier(arch: str, *, n_requests: int = 8, batch: int = 8,
                     mb_size: int = 2, n_stages: int = 4,
                     n_replicas: int = 2, image_size: int = 64,
                     seed: int = 0, fail_replica=None, fail_at_tick=None,
-                    procs: int = 0, kill_worker=None,
+                    procs: int = 0, hosts: int = 0, listen=None,
+                    kill_worker=None,
                     kill_at_tick: int = 1,
                     heartbeat_interval_s: float = 0.1,
                     suspect_after_s: float = 0.5,
@@ -1010,10 +1023,32 @@ def _serve_cnn_tier(arch: str, *, n_requests: int = 8, batch: int = 8,
     (:class:`~repro.runtime.tier.ProcessServingTier`): real heartbeat
     liveness, crash-safe framed transport, and — with ``--kill-worker
     W`` — a genuine mid-tick ``SIGKILL`` of worker W at serving tick
-    ``--kill-at-tick``, recovered bitwise by supervisor-side replay."""
+    ``--kill-at-tick``, recovered bitwise by supervisor-side replay.
+
+    ``hosts > 0`` goes one step further
+    (:class:`~repro.runtime.tier.HostServingTier`): workers dial the
+    supervisor over TCP (``--listen host:port``; default a loopback
+    ephemeral port), handshake on a model fingerprint, and fetch the
+    packed param blob by SHA-256 over the channel before warming up."""
     from repro.runtime.fault import FailureInjector
-    from repro.runtime.tier import ProcessServingTier, ServingTier
-    if procs > 0:
+    from repro.runtime.tier import (HostServingTier, ProcessServingTier,
+                                    ServingTier)
+    if hosts > 0:
+        hooks = {}
+        if kill_worker is not None:
+            hooks[kill_worker] = {"kill_at_tick": kill_at_tick}
+        bind = ("127.0.0.1", 0)
+        if listen:
+            host, _, port = str(listen).rpartition(":")
+            bind = (host or "127.0.0.1", int(port))
+        tier = HostServingTier(
+            arch, n_procs=hosts, listen=bind, n_stages=n_stages,
+            mb_size=mb_size, image_size=image_size, seed=seed,
+            worker_hooks=hooks,
+            heartbeat_interval_s=heartbeat_interval_s,
+            suspect_after_s=suspect_after_s, dead_after_s=dead_after_s,
+            ledger_dir=ledger_dir, quantize=quantize, verbose=verbose)
+    elif procs > 0:
         hooks = {}
         if kill_worker is not None:
             hooks[kill_worker] = {"kill_at_tick": kill_at_tick}
@@ -1043,7 +1078,7 @@ def _serve_cnn_tier(arch: str, *, n_requests: int = 8, batch: int = 8,
         metrics = tier.run()
         metrics["logits"] = [tier.results(r) for r in rids]
     finally:
-        if procs > 0:
+        if procs > 0 or hosts > 0:
             tier.close()
     return metrics
 
@@ -1125,6 +1160,33 @@ def main(argv=None):
                          "process replica workers (heartbeat "
                          "liveness + crash-safe transport) instead "
                          "of in-process replicas")
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="tier mode: serve through THIS many TCP "
+                         "dial-in replica workers (cross-host tier: "
+                         "fingerprint handshake + blob-by-hash param "
+                         "distribution) instead of socketpair workers")
+    ap.add_argument("--listen", type=str, default=None,
+                    metavar="HOST:PORT",
+                    help="hosts mode: bind the worker listener here "
+                         "(default 127.0.0.1 on an ephemeral port)")
+    ap.add_argument("--dial", type=str, default=None,
+                    metavar="HOST:PORT",
+                    help="run as a cross-host WORKER instead of a "
+                         "supervisor: dial this serve.py --hosts "
+                         "listener and join its tier (pair with "
+                         "--token/--blob-sha/--blob-cache)")
+    ap.add_argument("--token", type=int, default=0,
+                    help="--dial: worker slot token to register as")
+    ap.add_argument("--blob-sha", type=str, default=None,
+                    help="--dial: SHA-256 of the supervisor's packed "
+                         "param blob (fetched over the channel and "
+                         "verified before warmup)")
+    ap.add_argument("--blob-cache", type=str, default=None,
+                    help="--dial: content-addressed blob cache dir")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="model-init seed (must match across the "
+                         "supervisor and every --dial worker: it is "
+                         "part of the handshake fingerprint)")
     ap.add_argument("--kill-worker", type=int, default=None,
                     help="procs mode: worker index that SIGKILLs "
                          "itself mid-tick (drain-and-respawn demo)")
@@ -1164,16 +1226,34 @@ def main(argv=None):
                          "packs per-channel-scaled codes into the "
                          "placed param rows")
     args = ap.parse_args(argv)
+    if args.dial:
+        # worker side of the cross-host tier: delegate to the worker
+        # entry point with the model args this CLI already knows.
+        from repro.runtime import worker as worker_mod
+        wargv = ["--dial", args.dial, "--token", str(args.token),
+                 "--arch", args.arch, "--stages", str(args.stages),
+                 "--mb-size", str(args.mb_size),
+                 "--image-size", str(args.image_size),
+                 "--seed", str(args.seed), "--quantize", args.quantize,
+                 "--heartbeat-interval", str(args.heartbeat_interval)]
+        if args.blob_sha:
+            wargv += ["--blob-sha", args.blob_sha]
+        if args.blob_cache:
+            wargv += ["--blob-cache", args.blob_cache]
+        return worker_mod.main(wargv)
     if get_config(args.arch).family == "cnn":
         serve(ServeConfig(
             arch=args.arch, mode=args.mode, continuous=args.continuous,
             tier=args.tier, procs=args.procs,
+            hosts=args.hosts, listen=args.listen,
             replicas=(max(args.replicas, 2)
-                      if args.tier or args.procs else args.replicas),
+                      if args.tier or args.procs or args.hosts
+                      else args.replicas),
             quantize=args.quantize, batch=args.batch,
             n_requests=args.requests, n_microbatches=args.microbatches,
             mb_size=args.mb_size, n_stages=args.stages,
-            image_size=args.image_size, placed=args.placed,
+            image_size=args.image_size, seed=args.seed,
+            placed=args.placed,
             param_budget_frac=args.param_budget_frac,
             auto_split=args.auto_split,
             fail_replica=args.fail_replica,

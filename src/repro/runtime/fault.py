@@ -11,6 +11,8 @@ Scoped for 1000+ nodes but testable on one CPU:
 """
 from __future__ import annotations
 
+import socket
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -222,6 +224,273 @@ class FailureDetector:
         if worst > self.suspect_after_s:
             return "suspect"
         return "alive"
+
+
+# --- network fault injection (cross-host serving tier) ----------------------
+
+class SeveredConnection(Exception):
+    """Raised by a :class:`NetFaultProxy` rule to tear the connection
+    down — optionally after forwarding ``partial`` bytes first, which
+    produces the torn-mid-frame close the transport must surface as a
+    distinguishable :class:`~repro.runtime.transport.PeerClosedError`."""
+
+    def __init__(self, partial: bytes = b""):
+        super().__init__(f"rule severed connection "
+                         f"({len(partial)} partial bytes forwarded)")
+        self.partial = partial
+
+
+class _DropConn(Exception):
+    """Internal: terminate one proxied connection's pump threads."""
+
+
+def drop_frames(indices):
+    """Rule: silently swallow the numbered frames (per direction, per
+    connection) — a lossy link the framing must survive or time out on,
+    never mis-parse."""
+    def rule(conn_idx, frame_idx, frame):
+        return [] if frame_idx in indices else [frame]
+    return rule
+
+
+def duplicate_frames(indices):
+    """Rule: deliver the numbered frames twice — retransmit-style
+    duplication the tier's delivery dedup must absorb (same bits either
+    way)."""
+    def rule(conn_idx, frame_idx, frame):
+        return [frame, frame] if frame_idx in indices else [frame]
+    return rule
+
+
+def delay_frames(indices, delay_s: float):
+    """Rule: hold the numbered frames for ``delay_s`` before
+    forwarding (per-direction ordering is preserved — TCP semantics)."""
+    def rule(conn_idx, frame_idx, frame):
+        if frame_idx in indices:
+            time.sleep(delay_s)
+        return [frame]
+    return rule
+
+
+def bitflip_frames(indices):
+    """Rule: flip one payload bit of the numbered frames, header and
+    CRC left intact — exactly the in-flight corruption the frame
+    checksum exists to catch (the receiver must raise a typed
+    ChecksumError, never deliver the mutated payload)."""
+    from repro.runtime import transport
+    def rule(conn_idx, frame_idx, frame):
+        if frame_idx not in indices:
+            return [frame]
+        b = bytearray(frame)
+        i = transport.HEADER.size if len(b) > transport.HEADER.size \
+            else len(b) - 1
+        b[i] ^= 0x01
+        return [bytes(b)]
+    return rule
+
+
+def truncate_frames(indices, keep: int = 7):
+    """Rule: forward only the first ``keep`` bytes of the numbered
+    frame, then kill the connection — a peer dying mid-``send``. The
+    receiver sees a torn mid-frame close (PeerClosedError naming the
+    buffered partial), NOT a parseable-but-wrong message."""
+    def rule(conn_idx, frame_idx, frame):
+        if frame_idx in indices:
+            raise SeveredConnection(frame[:keep])
+        return [frame]
+    return rule
+
+
+class NetFaultProxy:
+    """A frame-aware TCP proxy between dialing workers and the serving
+    supervisor: the network fault injector of the cross-host tier.
+
+    Tests point a worker's dial address at :attr:`address`; every
+    connection is shuttled to ``upstream`` with per-direction *rules*
+    applied at frame granularity — drop, delay, duplicate, truncate
+    (torn close), bit-flip — plus two dynamic controls:
+
+    - :meth:`sever` drops every frame of one direction while leaving
+      the other flowing (an asymmetric partition: the worker still
+      hears the supervisor but its heartbeats vanish, or vice versa);
+    - :meth:`kill_connections` hard-closes every live socket at an
+      arbitrary byte boundary (a mid-tick connection loss).
+
+    Directions are named from the dialing side: ``"c2s"`` is
+    worker→supervisor, ``"s2c"`` supervisor→worker. Rules receive
+    ``(conn_idx, frame_idx, frame_bytes)`` and return the byte chunks
+    to forward (frame counters are per connection per direction). The
+    proxy accepts any number of sequential connections, so a respawned
+    worker re-dials through the same injected network."""
+
+    def __init__(self, upstream, *, host: str = "127.0.0.1",
+                 rules: Optional[dict] = None):
+        self.upstream = tuple(upstream)
+        self.rules = dict(rules or {})
+        self.frames_forwarded = {"c2s": 0, "s2c": 0}
+        self.frames_dropped = {"c2s": 0, "s2c": 0}
+        self.connections = 0
+        self._severed: set = set()
+        self._lock = threading.Lock()
+        self._socks: list = []
+        self._closed = False
+        self._ls = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._ls.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._ls.bind((host, 0))
+        self._ls.listen(16)
+        threading.Thread(target=self._accept_loop, daemon=True).start()
+
+    @property
+    def address(self) -> tuple:
+        return self._ls.getsockname()[:2]
+
+    # -- dynamic controls ----------------------------------------------------
+
+    def sever(self, direction: str):
+        """Start dropping every frame flowing in ``direction`` (the
+        connection stays open — a one-way partition, not a close)."""
+        if direction not in ("c2s", "s2c"):
+            raise ValueError(f"direction must be 'c2s' or 's2c', "
+                             f"got {direction!r}")
+        with self._lock:
+            self._severed.add(direction)
+
+    def heal(self, direction: Optional[str] = None):
+        """Stop severing (one direction, or all)."""
+        with self._lock:
+            if direction is None:
+                self._severed.clear()
+            else:
+                self._severed.discard(direction)
+
+    def kill_connections(self):
+        """Hard-close every live proxied socket NOW — both endpoints
+        see the connection die at whatever byte boundary the kill
+        lands on."""
+        with self._lock:
+            socks, self._socks = self._socks, []
+        for s in socks:
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+        try:
+            self._ls.close()
+        except OSError:
+            pass
+        self.kill_connections()
+
+    # -- internals -----------------------------------------------------------
+
+    def _accept_loop(self):
+        while True:
+            try:
+                c, _addr = self._ls.accept()
+            except OSError:
+                return
+            try:
+                u = socket.create_connection(self.upstream, timeout=10.0)
+            except OSError:
+                c.close()
+                continue
+            # the connect timeout must NOT linger as a recv timeout: an
+            # idle link (a worker warming its compile says nothing for
+            # tens of seconds) is healthy, not dead
+            u.settimeout(None)
+            for s in (c, u):
+                s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._lock:
+                if self._closed:
+                    c.close()
+                    u.close()
+                    return
+                self._socks += [c, u]
+                ci = self.connections
+                self.connections += 1
+            threading.Thread(target=self._pump, args=(c, u, "c2s", ci),
+                             daemon=True).start()
+            threading.Thread(target=self._pump, args=(u, c, "s2c", ci),
+                             daemon=True).start()
+
+    def _pump(self, src, dst, direction: str, conn_idx: int):
+        from repro.runtime import transport
+        buf = bytearray()
+        frame_idx = 0
+        try:
+            while True:
+                try:
+                    chunk = src.recv(1 << 16)
+                except OSError:
+                    return
+                if not chunk:
+                    return
+                buf += chunk
+                while len(buf) >= transport.HEADER.size:
+                    _m, length, _c = transport.HEADER.unpack_from(buf)
+                    end = transport.HEADER.size + length
+                    if len(buf) < end:
+                        break
+                    frame = bytes(buf[:end])
+                    del buf[:end]
+                    self._forward(dst, direction, conn_idx,
+                                  frame_idx, frame)
+                    frame_idx += 1
+        except _DropConn:
+            for s in (src, dst):
+                # shutdown BEFORE close: the peer's FIN must land even
+                # while the opposite direction's pump thread is still
+                # blocked in recv() on the same socket
+                try:
+                    s.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+                try:
+                    s.close()
+                except OSError:
+                    pass
+        finally:
+            # half-close toward the receiver so EOF propagates even
+            # when the other direction's pump is still alive
+            try:
+                dst.shutdown(socket.SHUT_WR)
+            except OSError:
+                pass
+
+    def _forward(self, dst, direction, conn_idx, frame_idx, frame):
+        with self._lock:
+            severed = direction in self._severed
+            rule = self.rules.get(direction)
+        if severed:
+            self.frames_dropped[direction] += 1
+            return
+        try:
+            chunks = [frame] if rule is None \
+                else rule(conn_idx, frame_idx, frame)
+        except SeveredConnection as e:
+            if e.partial:
+                try:
+                    dst.sendall(e.partial)
+                except OSError:
+                    pass
+            raise _DropConn from e
+        if not chunks:
+            self.frames_dropped[direction] += 1
+            return
+        try:
+            for c in chunks:
+                if c:
+                    dst.sendall(c)
+        except OSError as e:
+            raise _DropConn from e
+        self.frames_forwarded[direction] += 1
 
 
 # --- elastic re-meshing ------------------------------------------------------

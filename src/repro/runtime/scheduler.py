@@ -72,7 +72,9 @@ class ContinuousBatcher:
         self.steps = 0
 
     def submit(self, req: Request):
-        req.submitted_at = time.time()
+        # monotonic: these stamps feed latency math; wall clock would make
+        # latencies jump with NTP steps.
+        req.submitted_at = time.monotonic()
         self.queue.append(req)
 
     def _admit(self):
@@ -101,7 +103,7 @@ class ContinuousBatcher:
                                             jnp.asarray(pos))
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         self.steps += 1
-        now = time.time()
+        now = time.monotonic()
         for i, st in enumerate(self.state):
             if st.rid < 0:
                 continue

@@ -822,6 +822,7 @@ class ProcWorker:
     detected_via: Optional[str] = None
     log_path: Optional[str] = None
     missed_seen: int = 0
+    capabilities: Optional[dict] = None   # cross-host: register report
     outstanding: dict = field(default_factory=dict)   # key -> WorkItem
 
     @property
@@ -883,6 +884,7 @@ class ProcessServingTier(_TierBase):
                  dead_after_s: Optional[float] = 10.0,
                  spawn_timeout_s: float = 300.0,
                  io_deadline_s: float = 60.0,
+                 max_frame: int = transport.DEFAULT_MAX_FRAME,
                  worker_hooks: Optional[dict] = None,
                  ledger_dir: Optional[str] = None,
                  jitter_seed: int = 0,
@@ -927,6 +929,7 @@ class ProcessServingTier(_TierBase):
         self.max_worker_queue = max_worker_queue
         self.spawn_timeout_s = spawn_timeout_s
         self.io_deadline_s = io_deadline_s
+        self.max_frame = max_frame
         self.ledger_dir = ledger_dir
         self.worker_hooks = dict(worker_hooks or {})
         self._init_bookkeeping(
@@ -957,29 +960,36 @@ class ProcessServingTier(_TierBase):
 
     # -- process lifecycle ---------------------------------------------------
 
-    def _spawn_proc(self, w: ProcWorker):
-        """Fork one replica worker over a fresh socketpair. Fault
-        hooks (--kill-at-tick / --stop-at-tick) arm only on generation
-        0 — a respawned worker must come back healthy."""
-        sup, child = socket.socketpair()
-        cmd = [sys.executable, "-m", "repro.runtime.worker",
-               "--fd", str(child.fileno()),
-               "--arch", self.arch,
-               "--stages", str(self.plan["n_stages"]),
-               "--mb-size", str(self.mb_size),
-               "--image-size", str(self.image_size),
-               "--seed", str(self.seed),
-               "--param-blob", self._blob,
-               "--quantize", self.quantize,
-               "--heartbeat-interval", str(self.detector.interval_s),
-               "--io-deadline", str(self.io_deadline_s)]
+    def _worker_args(self) -> list[str]:
+        """The CLI args every replica worker shares, whichever
+        transport carries them — the worker re-derives the plan from
+        these, so they ARE the bitwise contract."""
+        return ["--arch", self.arch,
+                "--stages", str(self.plan["n_stages"]),
+                "--mb-size", str(self.mb_size),
+                "--image-size", str(self.image_size),
+                "--seed", str(self.seed),
+                "--quantize", self.quantize,
+                "--max-frame", str(self.max_frame),
+                "--heartbeat-interval", str(self.detector.interval_s),
+                "--io-deadline", str(self.io_deadline_s)]
+
+    def _hook_args(self, w: ProcWorker) -> list[str]:
+        """Fault hooks (--kill-at-tick / --stop-at-tick) arm only on
+        generation 0 — a respawned worker must come back healthy."""
         hook = self.worker_hooks.get(w.idx) \
             if w.generation == 0 else None
+        args = []
         if hook:
             if "kill_at_tick" in hook:
-                cmd += ["--kill-at-tick", str(hook["kill_at_tick"])]
+                args += ["--kill-at-tick", str(hook["kill_at_tick"])]
             if "stop_at_tick" in hook:
-                cmd += ["--stop-at-tick", str(hook["stop_at_tick"])]
+                args += ["--stop-at-tick", str(hook["stop_at_tick"])]
+        return args
+
+    def _launch(self, w: ProcWorker, cmd: list[str], *, pass_fds=()):
+        """Start one worker interpreter with the repro package on its
+        path and a per-generation log file."""
         env = dict(os.environ)
         import repro
         pkg = (os.path.dirname(os.path.abspath(repro.__file__))
@@ -991,11 +1001,9 @@ class ProcessServingTier(_TierBase):
             self._dir, f"worker-{w.idx}-g{w.generation}.log")
         with open(w.log_path, "ab") as logf:
             w.proc = subprocess.Popen(
-                cmd, pass_fds=(child.fileno(),), env=env,
+                cmd, pass_fds=pass_fds, env=env,
                 stdin=subprocess.DEVNULL, stdout=logf, stderr=logf,
                 close_fds=True)
-        child.close()
-        w.channel = transport.Channel(sup)
         w.pid = w.proc.pid
         w.ready = False
         w.missed_seen = 0
@@ -1003,6 +1011,17 @@ class ProcessServingTier(_TierBase):
         if self.verbose:
             print(f"tier: spawned worker {w.idx} gen {w.generation} "
                   f"pid {w.pid}")
+
+    def _spawn_proc(self, w: ProcWorker):
+        """Fork one replica worker over a fresh socketpair."""
+        sup, child = socket.socketpair()
+        cmd = [sys.executable, "-m", "repro.runtime.worker",
+               "--fd", str(child.fileno()),
+               "--param-blob", self._blob] \
+            + self._worker_args() + self._hook_args(w)
+        self._launch(w, cmd, pass_fds=(child.fileno(),))
+        child.close()
+        w.channel = transport.Channel(sup, max_frame=self.max_frame)
 
     def _log_tail(self, w: ProcWorker, n: int = 12) -> str:
         try:
@@ -1418,3 +1437,299 @@ class ProcessServingTier(_TierBase):
         if self.verbose:
             print(f"tier[proc]: resumed {len(meta['requests'])} "
                   f"request(s) from ledger at {self.ledger_dir}")
+
+
+# --- cross-host serving: workers dial in over TCP ----------------------------
+
+class _PendingConn:
+    """One accepted-but-unregistered inbound connection, advancing
+    through ``hello`` (handshake) → ``register`` (blob fetch + slot
+    claim) before it is bound to a :class:`ProcWorker` slot."""
+
+    def __init__(self, ch, now: float):
+        self.ch = ch
+        self.state = "hello"
+        self.since = now
+
+
+class HostServingTier(ProcessServingTier):
+    """The cross-host promotion of :class:`ProcessServingTier`: the
+    same supervisor semantics (heartbeat failure detector, bitwise
+    drain-and-respawn, crash-safe ledger), but workers **dial in over
+    TCP** instead of inheriting a socketpair fd — nothing about the
+    tier assumes a shared kernel or a shared filesystem anymore.
+
+    What the host boundary changes:
+
+    - **Discovery is dial-in registration, not fork-time wiring.** The
+      supervisor listens (:class:`~repro.runtime.transport.Listener`);
+      each worker connects, handshakes (protocol version + model/plan
+      fingerprint — a worker from a different build or configured for
+      different weights is refused with a typed ``HandshakeError``
+      before any work is routed), then registers its slot token with a
+      **capability report** (device count, mapped blob hash). Only an
+      admitted worker enters the :class:`FailureDetector` machinery;
+      everything after admission — heartbeats, suspect/dead banding,
+      respawn — is the inherited supervisor, unchanged.
+    - **Params travel by content hash.** There is no shared path to
+      memmap: workers request the packed blob by SHA-256 over the
+      channel (chunked, each chunk CRC-framed; resumable — a transfer
+      cut by a connection loss resumes from the cached partial on the
+      next attempt) and verify the hash before warmup, so a torn or
+      stale blob is a typed ``CheckpointCorruptError``, never wrong
+      logits.
+    - **The network is now a fault domain.** A severed direction (one-
+      way partition) starves heartbeats → suspect → dead →
+      drain-and-respawn, without wedging the tick loop: recovery after
+      a mid-tick connection kill replays the supervisor-side ledger
+      bitwise, exactly as the process tier does.
+      :class:`~repro.runtime.fault.NetFaultProxy` injects these faults
+      in tests.
+
+    By default the tier spawns its workers as local child processes
+    that dial ``127.0.0.1`` (the test/CI topology — same protocol,
+    loopback wire); ``dial_addrs`` reroutes individual workers through
+    a proxy, and a worker started BY HAND on another machine with
+    ``python -m repro.runtime.worker --dial host:port --token i
+    --blob-sha …`` joins identically, because the supervisor never
+    looks past the channel."""
+
+    def __init__(self, arch: str, *,
+                 listen: tuple[str, int] = ("127.0.0.1", 0),
+                 dial_addrs: Optional[dict] = None,
+                 blob_chunk_bytes: int = 4 * 1024 * 1024,
+                 handshake_timeout_s: float = 60.0,
+                 max_frame: int = transport.DEFAULT_MAX_FRAME,
+                 **kw):
+        if blob_chunk_bytes <= 0 or \
+                blob_chunk_bytes + 4096 > max_frame:
+            raise ValueError(
+                f"blob_chunk_bytes ({blob_chunk_bytes}) must be > 0 "
+                f"and leave frame headroom under max_frame "
+                f"({max_frame})")
+        # listener first: spawned workers dial it immediately
+        self.listener = transport.Listener(
+            listen[0], listen[1], max_frame=max_frame)
+        self._dial_addrs = dict(dial_addrs or {})
+        self.blob_chunk_bytes = blob_chunk_bytes
+        self.handshake_timeout_s = handshake_timeout_s
+        self._pending_conns: list[_PendingConn] = []
+        self._blob_sha: Optional[str] = None
+        self._fingerprint: Optional[str] = None
+        self.blob_bytes_served = 0
+        self.rejected_connections: list[str] = []
+        try:
+            super().__init__(arch, max_frame=max_frame, **kw)
+        except BaseException:
+            for pc in self._pending_conns:
+                pc.ch.close()
+            self.listener.close()
+            raise
+
+    @property
+    def address(self) -> tuple[str, int]:
+        """The (host, port) workers dial — advertise this."""
+        return self.listener.address
+
+    # -- worker launch (dial-in, no inherited fd) -----------------------------
+
+    def _spawn_proc(self, w: ProcWorker):
+        if self._blob_sha is None:
+            from repro.checkpoint import ckpt
+            from repro.runtime import worker as worker_mod
+            self._blob_sha = ckpt.file_sha256(self._blob)
+            self._fingerprint = worker_mod.serving_fingerprint(
+                arch=self.arch, stages=self.plan["n_stages"],
+                mb_size=self.mb_size, image_size=self.image_size,
+                seed=self.seed, quantize=self.quantize,
+                blob_sha256=self._blob_sha)
+        host, port = self._dial_addrs.get(w.idx, self.listener.address)
+        cmd = [sys.executable, "-m", "repro.runtime.worker",
+               "--dial", f"{host}:{port}",
+               "--token", str(w.idx),
+               "--blob-sha", self._blob_sha,
+               # per-SLOT cache: generation g+1 resumes the partial
+               # transfer generation g died holding, while two slots
+               # never race on one .part file
+               "--blob-cache",
+               os.path.join(self._dir, f"blobcache-{w.idx}")] \
+            + self._worker_args() + self._hook_args(w)
+        self._launch(w, cmd)
+        w.channel = None          # bound at registration, not at fork
+
+    # -- inbound connections: accept → handshake → register -------------------
+
+    def _reject_pending(self, pc: _PendingConn, reason: str):
+        self.rejected_connections.append(reason)
+        try:
+            pc.ch.send(("reject", reason), deadline_s=1.0)
+        except transport.TransportError:
+            pass
+        pc.ch.close()
+        if pc in self._pending_conns:
+            self._pending_conns.remove(pc)
+        if self.verbose:
+            print(f"tier[host]: rejected connection: {reason}")
+
+    def _serve_blob_chunk(self, pc: _PendingConn, m):
+        _tag, sha, offset = m
+        if sha != self._blob_sha:
+            pc.ch.send(("blobreject",
+                        f"blob {str(sha)[:16]}… unknown (serving "
+                        f"{self._blob_sha[:16]}…)"),
+                       deadline_s=self.io_deadline_s)
+            return
+        total = os.path.getsize(self._blob)
+        offset = max(0, int(offset))
+        with open(self._blob, "rb") as f:
+            f.seek(offset)
+            data = f.read(self.blob_chunk_bytes)
+        pc.ch.send(("blobchunk", offset, total, data),
+                   deadline_s=self.io_deadline_s)
+        self.blob_bytes_served += len(data)
+
+    def _admit(self, pc: _PendingConn, m):
+        """Bind a registering connection to its worker slot iff its
+        token names a live, unbound slot and its capability report
+        proves it mapped the exact planned blob."""
+        if not (isinstance(m, tuple) and len(m) == 3):
+            return self._reject_pending(pc, f"malformed register {m!r}")
+        _tag, token, caps = m
+        if not isinstance(token, int) or \
+                not (0 <= token < len(self.workers)):
+            return self._reject_pending(
+                pc, f"unknown worker token {token!r}")
+        w = self.workers[token]
+        if not w.alive:
+            return self._reject_pending(
+                pc, f"worker slot {token} is permanently retired")
+        if w.channel is not None:
+            return self._reject_pending(
+                pc, f"worker slot {token} is already bound")
+        got_sha = (caps or {}).get("blob_sha256")
+        if got_sha != self._blob_sha:
+            return self._reject_pending(
+                pc, f"capability report blob {str(got_sha)[:16]}… != "
+                    f"planned blob {self._blob_sha[:16]}…")
+        try:
+            pc.ch.send(("admit",), deadline_s=self.io_deadline_s)
+        except transport.TransportError as e:
+            self.rejected_connections.append(
+                f"admit send failed: {e!r}")
+            pc.ch.close()
+            self._pending_conns.remove(pc)
+            return
+        w.channel = pc.ch
+        w.capabilities = dict(caps)
+        self._pending_conns.remove(pc)
+        if self.verbose:
+            print(f"tier[host]: worker {token} registered "
+                  f"(gen {w.generation}, caps {caps})")
+
+    def _pump_pending(self, pc: _PendingConn):
+        try:
+            msgs = pc.ch.drain()
+        except transport.TransportError as e:
+            self.rejected_connections.append(
+                f"pending connection dropped: {e!r}")
+            pc.ch.close()
+            if pc in self._pending_conns:
+                self._pending_conns.remove(pc)
+            return
+        for m in msgs:
+            if pc not in self._pending_conns:
+                return                    # bound or rejected mid-batch
+            try:
+                if pc.state == "hello":
+                    try:
+                        reply = transport.check_hello(
+                            m, fingerprint=self._fingerprint)
+                    except transport.HandshakeError as e:
+                        return self._reject_pending(pc, str(e))
+                    pc.ch.send(reply, deadline_s=self.io_deadline_s)
+                    pc.state = "register"
+                elif isinstance(m, tuple) and m and m[0] == "blob":
+                    self._serve_blob_chunk(pc, m)
+                elif isinstance(m, tuple) and m and m[0] == "register":
+                    self._admit(pc, m)
+                else:
+                    return self._reject_pending(
+                        pc, f"unexpected pre-admission message {m!r}")
+            except transport.TransportError as e:
+                self.rejected_connections.append(
+                    f"pending connection failed: {e!r}")
+                pc.ch.close()
+                if pc in self._pending_conns:
+                    self._pending_conns.remove(pc)
+                return
+
+    def _poll_network(self, timeout_s: float):
+        """One network sweep: select over the listener + every pending
+        and bound channel, accept new dial-ins, advance pending
+        handshakes/registrations, deliver bound workers' messages, and
+        expire pendings that never completed the handshake."""
+        socks = [self.listener] \
+            + [pc.ch for pc in self._pending_conns] \
+            + [w.channel for w in self.workers
+               if w.alive and w.channel is not None]
+        r, _, _ = select.select(socks, [], [], max(timeout_s, 0.0))
+        while True:
+            ch = self.listener.try_accept()
+            if ch is None:
+                break
+            self._pending_conns.append(_PendingConn(ch, self._clock()))
+        for pc in list(self._pending_conns):
+            self._pump_pending(pc)
+        now = self._clock()
+        for pc in list(self._pending_conns):
+            if now - pc.since > self.handshake_timeout_s:
+                self._reject_pending(
+                    pc, f"handshake not completed within "
+                        f"{self.handshake_timeout_s}s")
+        for ch in r:
+            for w in self.workers:
+                if w.channel is ch and w.alive:
+                    self._pump(w)
+
+    def _wait_events(self, timeout_s: float):
+        self._poll_network(timeout_s)
+
+    def _wait_ready(self):
+        """Startup barrier: keep accepting/advancing registrations
+        until every slot's worker has dialed in, fetched + verified
+        the blob, warmed up, and reported ready."""
+        deadline = self._clock() + self.spawn_timeout_s
+        while True:
+            pend = [w for w in self.workers if w.alive and not w.ready]
+            if not pend:
+                return
+            for w in pend:
+                rc = w.proc.poll()
+                if rc is not None:
+                    self._pump(w)     # surface a ("fatal", ...) if sent
+                    raise RuntimeError(
+                        f"worker {w.idx} died during startup "
+                        f"(exit {rc}); log tail:\n{self._log_tail(w)}")
+            if self._clock() > deadline:
+                raise RuntimeError(
+                    f"workers {[w.idx for w in pend]} not ready within "
+                    f"spawn_timeout_s={self.spawn_timeout_s}s; log "
+                    f"tail of worker {pend[0].idx}:\n"
+                    f"{self._log_tail(pend[0])}")
+            self._poll_network(0.25)
+
+    def close(self):
+        for pc in self._pending_conns:
+            pc.ch.close()
+        self._pending_conns = []
+        self.listener.close()
+        super().close()
+
+    def run(self, *, max_rounds: Optional[int] = None) -> dict:
+        metrics = super().run(max_rounds=max_rounds)
+        metrics["blob_bytes_served"] = self.blob_bytes_served
+        metrics["rejected_connections"] = list(
+            self.rejected_connections)
+        metrics["worker_capabilities"] = [
+            w.capabilities for w in self.workers]
+        return metrics

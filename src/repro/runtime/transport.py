@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import pickle
 import select
+import socket
 import struct
 import time
 import zlib
@@ -47,6 +48,13 @@ import zlib
 MAGIC = 0x48504950                       # "HPIP"
 HEADER = struct.Struct(">III")           # magic, payload length, crc32
 DEFAULT_MAX_FRAME = 64 * 1024 * 1024
+
+# Cross-host wire protocol version: bumped whenever the framing or the
+# control-message vocabulary changes incompatibly. Checked first thing
+# in the connect/accept handshake so a worker from another build is
+# refused with a typed HandshakeError instead of a garbled-stream
+# ProtocolError three messages later.
+PROTOCOL_VERSION = 1
 
 
 class TransportError(RuntimeError):
@@ -74,6 +82,13 @@ class PeerClosedError(TransportError):
 
 class TransportTimeout(TransportError):
     """A per-call send/recv deadline expired."""
+
+
+class HandshakeError(TransportError):
+    """The connect/accept handshake failed: protocol version or
+    model/plan fingerprint mismatch, or a malformed hello. The
+    connection was refused cleanly — nothing about the byte stream is
+    suspect, so this is NOT a :class:`ProtocolError`."""
 
 
 def encode_frame(payload: bytes, *, max_frame: int = DEFAULT_MAX_FRAME
@@ -282,3 +297,162 @@ class Channel:
         if deadline is not None and not (r or w) and \
                 time.monotonic() >= deadline:
             raise TransportTimeout(f"deadline expired during {what}")
+
+
+# --- cross-host TCP: listen / dial / handshake -------------------------------
+
+class Listener:
+    """A TCP accept socket whose connections come up as the SAME
+    :class:`Channel` the socketpair tier uses — one framing, one error
+    vocabulary, whether the peer shares a kernel or a datacenter.
+
+    ``port=0`` binds an ephemeral port; :attr:`address` reports the
+    bound ``(host, port)`` to advertise to dialing workers. ``accept``
+    returns a raw (pre-handshake) channel — callers run
+    :func:`server_handshake` (blocking) or feed the first message into
+    :func:`check_hello` (non-blocking supervisors)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 backlog: int = 16, max_frame: int = DEFAULT_MAX_FRAME):
+        self.max_frame = max_frame
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(backlog)
+        self._sock.setblocking(False)
+        self._closed = False
+
+    @property
+    def address(self) -> tuple[str, int]:
+        return self._sock.getsockname()[:2]
+
+    def fileno(self) -> int:
+        return self._sock.fileno()
+
+    def _wrap(self, sock) -> "Channel":
+        # per-frame control messages dominate this protocol; Nagle
+        # would batch heartbeats behind result payloads
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return Channel(sock, max_frame=self.max_frame)
+
+    def try_accept(self):
+        """Non-blocking: one inbound connection as a raw Channel, or
+        ``None`` — the supervisor polls this inside its event loop."""
+        try:
+            sock, _addr = self._sock.accept()
+        except (BlockingIOError, InterruptedError):
+            return None
+        except OSError as e:
+            raise PeerClosedError(f"listener failed ({e!r})") from e
+        return self._wrap(sock)
+
+    def accept(self, *, deadline_s=None) -> "Channel":
+        """Block (up to ``deadline_s``) for one inbound connection."""
+        deadline = (time.monotonic() + deadline_s
+                    if deadline_s is not None else None)
+        while True:
+            ch = self.try_accept()
+            if ch is not None:
+                return ch
+            timeout = None
+            if deadline is not None:
+                timeout = deadline - time.monotonic()
+                if timeout <= 0:
+                    raise TransportTimeout(
+                        "deadline expired waiting for an inbound "
+                        "connection")
+            select.select([self._sock], [], [], timeout)
+
+    def close(self):
+        if not self._closed:
+            self._closed = True
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+
+
+def connect(address: tuple[str, int] | str, *, deadline_s=None,
+            max_frame: int = DEFAULT_MAX_FRAME) -> Channel:
+    """Dial ``(host, port)`` (or ``"host:port"``) and return a raw
+    (pre-handshake) :class:`Channel`. Refused/unreachable connections
+    are retried until ``deadline_s`` (a supervisor mid-restart is a
+    transient, not an error), then surface as
+    :class:`TransportTimeout`; with no deadline a refusal raises
+    :class:`PeerClosedError` immediately."""
+    if isinstance(address, str):
+        host, _, port = address.rpartition(":")
+        address = (host, int(port))
+    deadline = (time.monotonic() + deadline_s
+                if deadline_s is not None else None)
+    while True:
+        try:
+            timeout = None
+            if deadline is not None:
+                timeout = max(deadline - time.monotonic(), 0.001)
+            sock = socket.create_connection(address, timeout=timeout)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return Channel(sock, max_frame=max_frame)
+        except (ConnectionRefusedError, ConnectionResetError,
+                socket.timeout, OSError) as e:
+            if deadline is None:
+                raise PeerClosedError(
+                    f"connect to {address} failed ({e!r})") from e
+            if time.monotonic() >= deadline:
+                raise TransportTimeout(
+                    f"connect to {address} not accepted within "
+                    f"{deadline_s}s (last: {e!r})") from e
+            time.sleep(0.02)
+
+
+def check_hello(msg, *, fingerprint: str):
+    """Validate a client hello against this endpoint's protocol
+    version + model/plan fingerprint. Returns the ``welcome`` reply to
+    send on success; raises :class:`HandshakeError` on any mismatch
+    (send ``("reject", str(err))`` to the peer before closing so the
+    dialer fails typed too, not on EOF)."""
+    if not (isinstance(msg, tuple) and len(msg) == 3
+            and msg[0] == "hello"):
+        raise HandshakeError(f"malformed hello {msg!r}")
+    _, version, fp = msg
+    if version != PROTOCOL_VERSION:
+        raise HandshakeError(
+            f"protocol version mismatch: peer speaks {version}, "
+            f"this endpoint speaks {PROTOCOL_VERSION}")
+    if fp != fingerprint:
+        raise HandshakeError(
+            f"model/plan fingerprint mismatch: peer built "
+            f"{fp!r}, this endpoint serves {fingerprint!r} — "
+            "refusing before any work is routed to wrong weights")
+    return ("welcome", PROTOCOL_VERSION, fingerprint)
+
+
+def client_handshake(ch: Channel, *, fingerprint: str,
+                     deadline_s=None):
+    """Dial-side handshake: offer (version, fingerprint), require a
+    matching welcome. A ``reject`` or mismatched welcome raises
+    :class:`HandshakeError`."""
+    ch.send(("hello", PROTOCOL_VERSION, fingerprint),
+            deadline_s=deadline_s)
+    reply = ch.recv(deadline_s=deadline_s)
+    if isinstance(reply, tuple) and reply and reply[0] == "reject":
+        raise HandshakeError(f"peer rejected handshake: {reply[1]}")
+    if reply != ("welcome", PROTOCOL_VERSION, fingerprint):
+        raise HandshakeError(f"unexpected handshake reply {reply!r}")
+
+
+def server_handshake(ch: Channel, *, fingerprint: str,
+                     deadline_s=None):
+    """Accept-side handshake (blocking form): validate the hello and
+    welcome or reject the peer. Non-blocking supervisors instead feed
+    the first drained message into :func:`check_hello`."""
+    hello = ch.recv(deadline_s=deadline_s)
+    try:
+        reply = check_hello(hello, fingerprint=fingerprint)
+    except HandshakeError as e:
+        try:
+            ch.send(("reject", str(e)), deadline_s=deadline_s)
+        except TransportError:
+            pass
+        raise
+    ch.send(reply, deadline_s=deadline_s)

@@ -27,6 +27,17 @@ flags a beating-but-stuck worker as wedged), and runs one pipeline
 tick when busy. Results stream back as ``("result", key, logits)``
 the moment their microbatch emerges.
 
+**Cross-host mode.** With ``--dial host:port`` the worker connects to
+the supervisor over TCP instead of inheriting a socketpair fd
+(:class:`~repro.runtime.tier.HostServingTier`): it handshakes
+(protocol version + model/plan fingerprint), fetches the packed param
+blob **by SHA-256 content hash** over the channel (chunked,
+CRC-framed, resumable across reconnects via ``--blob-cache``),
+verifies the hash before warmup, then registers its slot token with a
+capability report (device count, mapped blob hash) and waits for
+admission. A worker that cannot prove it holds the exact planned bits
+is refused before any work reaches it.
+
 **Fault hooks.** ``--kill-at-tick`` / ``--stop-at-tick`` arm a real
 ``SIGKILL``/``SIGSTOP`` against the worker's own pid inside the tick
 path (the same seam the in-process ``FailureInjector`` uses) — the
@@ -40,6 +51,7 @@ import json
 import os
 import signal
 import struct
+import sys
 import time
 import traceback
 
@@ -119,6 +131,86 @@ def read_param_blob(template, path: str):
                         shape=tuple(m["shape"]))
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --- cross-host startup: fingerprint + blob-by-hash fetch --------------------
+
+def serving_fingerprint(*, arch: str, stages: int, mb_size: int,
+                        image_size: int, seed: int, quantize: str,
+                        blob_sha256: str) -> str:
+    """The model/plan fingerprint both ends of a cross-host connection
+    must agree on at handshake time. Every input that determines the
+    serving cell's bits is in it — arch, stage cut, microbatch
+    geometry, seed, stored dtype, and the content hash of the packed
+    params — so a worker built against ANY different configuration is
+    refused before a single request is routed to it."""
+    return (f"hpipe-serve/{arch}/s{stages}/mb{mb_size}/i{image_size}/"
+            f"r{seed}/{quantize}/{blob_sha256[:16]}")
+
+
+BLOB_CHUNK_BYTES = 4 * 1024 * 1024
+
+
+def fetch_param_blob(ch: "transport.Channel", sha256: str,
+                     cache_dir: str, *,
+                     io_deadline_s: float = 60.0) -> str:
+    """Ensure ``cache_dir`` holds the param blob whose content hash is
+    ``sha256``, fetching it over ``ch`` if needed, and return its path.
+
+    The transfer is chunked (each chunk rides one CRC-framed message),
+    content-addressed (the worker asks for a HASH, not a path — there
+    is no shared filesystem to go stale under it), and **resumable**:
+    progress accretes in ``<sha>.part``, and a fetch interrupted by a
+    connection loss resumes from the partial file's size on the next
+    attempt (including by the respawned next generation of this
+    worker). The assembled file is SHA-256-verified before the final
+    rename, so ``<sha>.blob`` existing implies its bytes ARE that
+    hash — a failed verification deletes the partial and raises a
+    typed ``CheckpointCorruptError`` instead of leaving a poisoned
+    cache entry."""
+    from repro.checkpoint import ckpt
+    os.makedirs(cache_dir, exist_ok=True)
+    final = os.path.join(cache_dir, f"{sha256}.blob")
+    if os.path.exists(final):
+        # a cached blob is still verified: "the cache has a file named
+        # <sha>" and "the file's bytes hash to <sha>" only coincide
+        # when nothing tore or tampered with it. A failed check evicts
+        # the entry and falls through to a fresh fetch — otherwise
+        # every respawned generation would re-trip on the same
+        # poisoned cache file forever.
+        try:
+            return ckpt.verify_blob(final, sha256)
+        except ckpt.CheckpointCorruptError:
+            os.remove(final)
+    part = os.path.join(cache_dir, f"{sha256}.part")
+    offset = os.path.getsize(part) if os.path.exists(part) else 0
+    with open(part, "ab") as f:
+        while True:
+            ch.send(("blob", sha256, offset), deadline_s=io_deadline_s)
+            m = ch.recv(deadline_s=io_deadline_s)
+            tag = m[0]
+            if tag == "blobreject":
+                raise ckpt.CheckpointCorruptError(
+                    f"supervisor refused blob {sha256[:16]}…: {m[1]}")
+            if tag != "blobchunk":
+                raise transport.ProtocolError(
+                    f"unexpected message {tag!r} during blob fetch")
+            _, off, total, data = m
+            if off != offset:
+                raise transport.ProtocolError(
+                    f"blob chunk at offset {off}, expected {offset}")
+            f.write(data)
+            f.flush()
+            offset += len(data)
+            if offset >= total:
+                break
+    try:
+        ckpt.verify_blob(part, sha256)
+    except ckpt.CheckpointCorruptError:
+        os.remove(part)
+        raise
+    os.replace(part, final)
+    return final
 
 
 # --- signal fault hooks ------------------------------------------------------
@@ -223,12 +315,73 @@ def serve(ch: transport.Channel, server, *, heartbeat_interval_s: float,
             ch.poll(heartbeat_interval_s)
 
 
+def _join_supervisor(args) -> transport.Channel:
+    """Cross-host startup: dial the supervisor, handshake (protocol
+    version + model/plan fingerprint), ensure the param blob by
+    content hash, then register with a capability report and wait for
+    admission. Returns the admitted channel; ``args.param_blob`` is
+    pointed at the verified local blob. Any failure closes the
+    channel and re-raises — a worker that cannot prove it holds the
+    right bits never serves."""
+    ch = transport.connect(args.dial, deadline_s=args.io_deadline,
+                           max_frame=args.max_frame)
+    try:
+        fp = serving_fingerprint(
+            arch=args.arch, stages=args.stages, mb_size=args.mb_size,
+            image_size=args.image_size, seed=args.seed,
+            quantize=args.quantize, blob_sha256=args.blob_sha or "")
+        transport.client_handshake(ch, fingerprint=fp,
+                                   deadline_s=args.io_deadline)
+        if args.blob_sha:
+            import tempfile
+            cache = args.blob_cache or os.path.join(
+                tempfile.gettempdir(), "hpipe-blobcache")
+            args.param_blob = fetch_param_blob(
+                ch, args.blob_sha, cache,
+                io_deadline_s=args.io_deadline)
+        import jax
+        caps = {"pid": os.getpid(),
+                "device_count": len(jax.devices()),
+                "blob_sha256": args.blob_sha}
+        ch.send(("register", args.token, caps),
+                deadline_s=args.io_deadline)
+        reply = ch.recv(deadline_s=args.io_deadline)
+        if not (isinstance(reply, tuple) and reply
+                and reply[0] == "admit"):
+            reason = reply[1] if isinstance(reply, tuple) \
+                and len(reply) > 1 else reply
+            raise transport.HandshakeError(
+                f"registration refused: {reason}")
+        return ch
+    except BaseException:
+        ch.close()
+        raise
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="serving-tier replica worker (spawned by "
                     "ProcessServingTier; not for interactive use)")
-    ap.add_argument("--fd", type=int, required=True,
-                    help="inherited socketpair fd to the supervisor")
+    ap.add_argument("--fd", type=int, default=None,
+                    help="inherited socketpair fd to the supervisor "
+                         "(same-host mode)")
+    ap.add_argument("--dial", default=None,
+                    help="supervisor host:port to dial over TCP "
+                         "(cross-host mode; exactly one of --fd/--dial)")
+    ap.add_argument("--token", type=int, default=None,
+                    help="worker slot token to register as (cross-host "
+                         "mode)")
+    ap.add_argument("--blob-sha", default=None,
+                    help="SHA-256 content hash of the packed param "
+                         "blob to fetch over the channel and verify "
+                         "before warmup (cross-host mode)")
+    ap.add_argument("--blob-cache", default=None,
+                    help="directory for the content-addressed blob "
+                         "cache (resumable .part files live here)")
+    ap.add_argument("--max-frame", type=int,
+                    default=transport.DEFAULT_MAX_FRAME,
+                    help="channel frame-size bound (must match the "
+                         "supervisor's)")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--stages", type=int, default=2)
     ap.add_argument("--mb-size", type=int, default=2)
@@ -248,11 +401,17 @@ def main(argv=None) -> int:
                     help="fault hook: SIGSTOP (wedge) ourselves "
                          "mid-tick, N serving ticks after warmup")
     args = ap.parse_args(argv)
-    import socket
-    sock = socket.socket(family=socket.AF_UNIX, type=socket.SOCK_STREAM,
-                         fileno=args.fd)
-    ch = transport.Channel(sock)
+    if (args.fd is None) == (args.dial is None):
+        ap.error("exactly one of --fd / --dial is required")
+    ch = None
     try:
+        if args.fd is not None:
+            import socket
+            sock = socket.socket(family=socket.AF_UNIX,
+                                 type=socket.SOCK_STREAM, fileno=args.fd)
+            ch = transport.Channel(sock, max_frame=args.max_frame)
+        else:
+            ch = _join_supervisor(args)
         server = build_server(args)
         warmup(server)
         # arm fault hooks only now: warmup ticks must never trip them
@@ -265,17 +424,28 @@ def main(argv=None) -> int:
         return serve(ch, server,
                      heartbeat_interval_s=args.heartbeat_interval,
                      io_deadline_s=args.io_deadline)
-    except transport.TransportError:
-        return 0                          # supervisor-side teardown
+    except transport.HandshakeError as e:
+        print(f"worker: refused by supervisor: {e}", file=sys.stderr)
+        return 1
+    except transport.TransportError as e:
+        # supervisor-side teardown — or a poisoned channel (e.g. a
+        # frame corrupted in flight); either way the supervisor owns
+        # the respawn decision, so log and retire
+        print(f"worker: transport failed: {e!r}", file=sys.stderr)
+        return 0
     except Exception as e:                # noqa: BLE001 — report + die
         try:
-            ch.send(("fatal", repr(e), traceback.format_exc()),
-                    deadline_s=5.0)
+            if ch is not None:
+                ch.send(("fatal", repr(e), traceback.format_exc()),
+                        deadline_s=5.0)
         except Exception:                 # noqa: BLE001 — best effort
             pass
+        print(f"worker: fatal: {e!r}\n{traceback.format_exc()}",
+              file=sys.stderr)
         return 1
     finally:
-        ch.close()
+        if ch is not None:
+            ch.close()
 
 
 if __name__ == "__main__":

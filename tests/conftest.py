@@ -10,3 +10,10 @@ def pytest_configure(config):
         "procfault: multi-process serving-tier fault tests (spawn real "
         "worker interpreters, send real SIGKILL/SIGSTOP; run on CI's "
         "process-fault leg, deselect elsewhere with -m 'not procfault')")
+    config.addinivalue_line(
+        "markers",
+        "netfault: cross-host serving-tier network-fault tests (spawn "
+        "real worker interpreters dialing in over localhost TCP, inject "
+        "drops/partitions/bit-flips through a frame-aware proxy; run on "
+        "CI's network-fault leg, deselect elsewhere with "
+        "-m 'not netfault')")

@@ -90,3 +90,23 @@ def test_scheduler_matches_unbatched_decode():
                                        jnp.asarray([[nxt]], jnp.int32),
                                        jnp.int32(len(prompt) + j))
     assert done[0].tokens == out
+
+
+def test_latency_stamps_survive_wall_clock_jump(monkeypatch):
+    """Liveness/latency math runs on time.monotonic(): an NTP step of
+    the WALL clock (time.time jumping a million seconds) must not
+    contaminate request timestamps — latencies computed from a jumped
+    wall clock would read as ~11 days or as negative."""
+    import time as _time
+    from collections import deque
+    from repro.runtime import scheduler as S
+    cb = object.__new__(ContinuousBatcher)
+    cb.queue = deque()
+    jumped = _time.time() + 1_000_000.0          # a violent NTP step
+    monkeypatch.setattr(S.time, "time", lambda: jumped)
+    req = Request(rid=0, prompt=np.array([1], np.int32),
+                  max_new_tokens=1)
+    cb.submit(req)
+    # the stamp is on the monotonic scale, not the jumped wall scale
+    assert abs(req.submitted_at - _time.monotonic()) < 5.0
+    assert abs(req.submitted_at - jumped) > 100_000.0

@@ -216,6 +216,182 @@ def test_send_deadline_expires_when_peer_never_reads():
             tx.send_bytes(big, deadline_s=0.2)
 
 
+def test_frame_bound_is_ctor_contract_and_names_limit():
+    """The frame bound is a per-channel constructor argument, and the
+    send-side rejection must NAME the configured limit — the operator
+    reading the error learns which knob to turn."""
+    tx, rx = _pair(max_frame=4096)
+    with pytest.raises(FrameTooLargeError) as ei:
+        tx.send_bytes(b"x" * 4097)
+    msg = str(ei.value)
+    assert "4096" in msg and "4097" in msg
+    # rejection happens BEFORE any byte hits the wire: the channel is
+    # not poisoned and the next well-sized frame flows normally
+    tx.send_bytes(b"still fine")
+    assert rx.recv_bytes(deadline_s=5.0) == b"still fine"
+
+
+def test_drain_on_already_poisoned_channel_reraises():
+    """The supervisor-ledger resume path drains an adopted channel
+    whose stream may already have lost framing; drain() on a poisoned
+    channel must re-raise the original typed error, never return []
+    (which would read as 'no pre-death results')."""
+    a, b = socket.socketpair()
+    rx = Channel(b)
+    a.sendall(struct.pack(">III", 0xBADF00D, 0, 0))
+    with pytest.raises(ProtocolError):
+        rx.drain()                       # first drain poisons + raises
+    with pytest.raises(ProtocolError):
+        rx.drain()                       # already-poisoned: re-raises
+    with pytest.raises(ProtocolError):
+        rx.recv_bytes(deadline_s=0.1)    # every later call, same type
+
+
+def test_torn_mid_frame_close_during_resume_drain():
+    """A peer that died mid-send during a ledger resume: drain() hands
+    over every COMPLETE pre-death message, then the next drain raises
+    a PeerClosedError that names the torn partial — distinguishable
+    from a clean close, so the resume logic knows bytes were lost."""
+    a, b = socket.socketpair()
+    tx, rx = Channel(a), Channel(b)
+    tx.send(("result", (0, 0), 1))
+    tx.send(("result", (0, 1), 2))
+    frame = encode_frame(b"torn-mid-send")
+    a.sendall(frame[:len(frame) - 5])    # header + partial payload...
+    a.close()                            # ...then the peer dies
+    rx.poll(5.0)
+    msgs = rx.drain()
+    assert [m[1] for m in msgs] == [(0, 0), (0, 1)]
+    with pytest.raises(PeerClosedError) as ei:
+        rx.drain()
+    assert "mid-frame" in str(ei.value)
+
+
+# --- cross-host TCP: listen / dial / handshake -------------------------------
+
+def test_tcp_listener_connect_roundtrip():
+    ls = transport.Listener()
+    try:
+        cl = transport.connect(ls.address, deadline_s=5.0)
+        sv = ls.accept(deadline_s=5.0)
+        cl.send(("hello-bytes", 1))
+        assert sv.recv(deadline_s=5.0) == ("hello-bytes", 1)
+        sv.send(("reply", 2))
+        assert cl.recv(deadline_s=5.0) == ("reply", 2)
+        cl.close(), sv.close()
+    finally:
+        ls.close()
+
+
+def test_tcp_connect_string_address_and_timeout():
+    ls = transport.Listener()
+    addr = ls.address
+    ls.close()                           # nobody listening anymore
+    with pytest.raises(TransportTimeout):
+        transport.connect(f"{addr[0]}:{addr[1]}", deadline_s=0.3)
+
+
+def test_tcp_listener_plumbs_max_frame():
+    """The listener's frame bound must reach every accepted channel:
+    an oversized send through an accepted channel is refused with the
+    LISTENER's configured limit."""
+    ls = transport.Listener(max_frame=1024)
+    try:
+        cl = transport.connect(ls.address, deadline_s=5.0,
+                               max_frame=1024)
+        sv = ls.accept(deadline_s=5.0)
+        with pytest.raises(FrameTooLargeError) as ei:
+            sv.send_bytes(b"x" * 2048)
+        assert "1024" in str(ei.value)
+        cl.close(), sv.close()
+    finally:
+        ls.close()
+
+
+def _handshake_pair():
+    a, b = socket.socketpair()
+    return Channel(a), Channel(b)
+
+
+def test_handshake_agreeing_fingerprints_admit():
+    cl, sv = _handshake_pair()
+    fp = "hpipe-serve/m/s2/mb2/i32/r0/native/abcd"
+    import threading
+    errs = []
+
+    def client():
+        try:
+            transport.client_handshake(cl, fingerprint=fp,
+                                       deadline_s=5.0)
+        except Exception as e:            # surfaced below
+            errs.append(e)
+
+    t = threading.Thread(target=client)
+    t.start()
+    transport.server_handshake(sv, fingerprint=fp, deadline_s=5.0)
+    t.join(10.0)
+    assert not errs
+
+
+@pytest.mark.parametrize("server_fp, client_fp", [
+    ("hpipe-serve/m/s2/mb2/i32/r0/native/aaaa",
+     "hpipe-serve/m/s2/mb2/i32/r0/native/bbbb"),   # different blob
+    ("hpipe-serve/m/s2/mb2/i32/r0/native/aaaa",
+     "hpipe-serve/m/s4/mb2/i32/r0/native/aaaa"),   # different stage cut
+])
+def test_handshake_fingerprint_mismatch_is_typed_refusal(server_fp,
+                                                         client_fp):
+    """A worker built against ANY different serving configuration must
+    be refused with a HandshakeError on BOTH ends — a clean typed
+    refusal, not a garbled-stream ProtocolError."""
+    cl, sv = _handshake_pair()
+    import threading
+    errs = []
+
+    def client():
+        try:
+            transport.client_handshake(cl, fingerprint=client_fp,
+                                       deadline_s=5.0)
+        except Exception as e:
+            errs.append(e)
+
+    t = threading.Thread(target=client)
+    t.start()
+    with pytest.raises(transport.HandshakeError):
+        transport.server_handshake(sv, fingerprint=server_fp,
+                                   deadline_s=5.0)
+    t.join(10.0)
+    assert len(errs) == 1
+    assert isinstance(errs[0], transport.HandshakeError)
+
+
+def test_handshake_version_mismatch_refused():
+    cl, sv = _handshake_pair()
+    fp = "fp"
+    cl.send(("hello", transport.PROTOCOL_VERSION + 1, fp))
+    with pytest.raises(transport.HandshakeError) as ei:
+        transport.server_handshake(sv, fingerprint=fp, deadline_s=5.0)
+    assert "version" in str(ei.value)
+
+
+def test_handshake_error_is_not_a_protocol_error():
+    """HandshakeError means 'cleanly refused', ProtocolError means
+    'stream garbled' — the supervisor treats them differently (no
+    respawn for a config mismatch), so the types must not overlap."""
+    assert issubclass(transport.HandshakeError, transport.TransportError)
+    assert not issubclass(transport.HandshakeError, ProtocolError)
+
+
+def test_check_hello_rejects_malformed():
+    with pytest.raises(transport.HandshakeError):
+        transport.check_hello(("not-hello", 1, "fp"), fingerprint="fp")
+    with pytest.raises(transport.HandshakeError):
+        transport.check_hello("just a string", fingerprint="fp")
+    reply = transport.check_hello(
+        ("hello", transport.PROTOCOL_VERSION, "fp"), fingerprint="fp")
+    assert reply == ("welcome", transport.PROTOCOL_VERSION, "fp")
+
+
 def test_frame_encoding_layout():
     """The wire format is a contract (worker and supervisor may be
     different builds): magic, BE length, CRC32, then the raw payload."""
